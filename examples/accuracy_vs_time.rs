@@ -1,0 +1,100 @@
+//! Figs. 4 & 6 driver — AND the repository's end-to-end validation run:
+//! real hierarchical FL training (LeNet through the PJRT runtime) for a
+//! grid of (a, b) iteration counts, reporting test accuracy against the
+//! *simulated* protocol completion time from the delay model.
+//!
+//!   cargo run --release --example accuracy_vs_time -- --ues-per-edge 10   # Fig. 4
+//!   cargo run --release --example accuracy_vs_time -- --ues-per-edge 20   # Fig. 6
+//!
+//! Options: --edges N (default 2), --cloud-rounds N (default 6),
+//!          --samples-per-ue N (default 128), --pairs "35x5,30x7,20x10"
+//!
+//! Writes results/fig<4|6>_acc_vs_time_a<A>_b<B>.csv per pair; the run is
+//! recorded in EXPERIMENTS.md.
+
+use hfl::assoc;
+use hfl::config::Args;
+use hfl::coordinator::run_hfl;
+use hfl::data::{partition_iid, synthetic};
+use hfl::delay::DelayInstance;
+use hfl::fl::{LocalSolver, TrainRun};
+use hfl::metrics::Recorder;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::runtime::{find_artifacts, Engine};
+use hfl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let upe = args.get_or("ues-per-edge", 10usize).map_err(anyhow::Error::msg)?;
+    let edges = args.get_or("edges", 2usize).map_err(anyhow::Error::msg)?;
+    let rounds = args.get_or("cloud-rounds", 6u64).map_err(anyhow::Error::msg)?;
+    let spu = args.get_or("samples-per-ue", 128usize).map_err(anyhow::Error::msg)?;
+    let lr = args.get_or("lr", 0.08f32).map_err(anyhow::Error::msg)?;
+    let seed = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let pairs_s = args
+        .str("pairs")
+        .unwrap_or_else(|| "35x5,30x7,20x10,10x5".into());
+    let pairs: Vec<(u64, u64)> = pairs_s
+        .split(',')
+        .map(|p| {
+            let (a, b) = p.split_once('x').expect("pairs like 35x5");
+            (a.parse().unwrap(), b.parse().unwrap())
+        })
+        .collect();
+
+    let num_ues = edges * upe;
+    let fig = if upe >= 20 { 6 } else { 4 };
+
+    // Deployment + delay model (drives the x-axis).
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, edges, num_ues, seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let association =
+        assoc::time_minimized(&channel, params.edge_capacity()).map_err(anyhow::Error::msg)?;
+    let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
+
+    // Runtime + data.
+    let engine = Engine::load(&find_artifacts(None)?)?;
+    let gen = synthetic::SyntheticConfig::default();
+    let corpus = synthetic::generate_split(&gen, num_ues * spu, seed, seed ^ 0xDA7A);
+    let test = synthetic::generate_split(&gen, 1024, seed, seed ^ 0x7E57);
+    let shards =
+        partition_iid(&corpus, num_ues, spu, &mut Rng::new(seed ^ 0x5EED)).map_err(anyhow::Error::msg)?;
+
+    println!(
+        "Fig. {fig} run: {edges} edges x {upe} UEs, {rounds} cloud rounds, pairs {pairs:?}"
+    );
+    let mut rec = Recorder::new();
+    for &(a, b) in &pairs {
+        let run = TrainRun {
+            a,
+            b,
+            cloud_rounds: rounds,
+            round_time_s: inst.round_time(a as f64, b as f64),
+            eval_every: 1,
+        };
+        let outcome = run_hfl(
+            &engine,
+            LocalSolver::Gd { lr },
+            shards.clone(),
+            association.members(),
+            &test,
+            &run,
+            0,
+            seed,
+        )?;
+        let name = format!("fig{fig}_acc_vs_time_a{a}_b{b}");
+        let series = outcome.curve.to_series();
+        series.print(&format!("(a={a}, b={b})  T={:.2}s/round", run.round_time_s));
+        rec.series.insert(name, series);
+        println!(
+            "  -> final acc {:.4}, time-to-60% {:?}s, wall {:.1}s",
+            outcome.curve.final_acc(),
+            outcome.curve.time_to_accuracy(0.6),
+            outcome.wall_s
+        );
+    }
+    rec.write_dir(std::path::Path::new("results"))?;
+    println!("\nwrote results/fig{fig}_acc_vs_time_*.csv");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Extension study (beyond the paper): what the time-optimal schedule
+//! COSTS. The paper pins f_n = f_max / p_n = p_max because its objective
+//! is pure time (§IV-C.1); this driver sweeps CPU-frequency scaling and
+//! prints the per-cloud-round (time, energy) Pareto frontier at the
+//! optimizer's (a*, b*), using the standard κ·f²·cycles CMOS model.
+//!
+//!   cargo run --release --example energy_frontier
+
+use hfl::assoc;
+use hfl::delay::energy::{energy_time_frontier, KAPPA_DEFAULT};
+use hfl::delay::DelayInstance;
+use hfl::metrics::Recorder;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions};
+
+fn main() -> anyhow::Result<()> {
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, 5, 100, 42);
+    let channel = Channel::compute(&params, &topo.ues, &topo.edges);
+    let association =
+        assoc::time_minimized(&channel, params.edge_capacity()).map_err(anyhow::Error::msg)?;
+    let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
+    let sol = solve_integer(&inst, &SolveOptions::default());
+    println!(
+        "time-optimal schedule: a*={} b*={} (R={}, J={:.2}s at f_max)",
+        sol.a, sol.b, sol.rounds, sol.objective
+    );
+
+    let scales: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let pts = energy_time_frontier(
+        &topo,
+        &channel,
+        &association.members(),
+        sol.a as f64,
+        sol.b as f64,
+        KAPPA_DEFAULT,
+        &scales,
+    );
+
+    let mut rec = Recorder::new();
+    let series = rec.series(
+        "energy_frontier",
+        &["f_scale", "round_time_s", "round_energy_j", "total_time_s", "total_energy_j"],
+    );
+    for p in &pts {
+        series.push(vec![
+            p.f_scale,
+            p.round_time_s,
+            p.round_energy_j,
+            sol.rounds as f64 * p.round_time_s,
+            sol.rounds as f64 * p.round_energy_j,
+        ]);
+    }
+    series.print("per-round (time, energy) frontier vs CPU frequency scale");
+    println!(
+        "\nf_max is {:.1}x faster but {:.1}x more energy-hungry than f_max/2 —\nthe cost the paper's time-only objective implicitly accepts.",
+        pts[4].round_time_s / pts[9].round_time_s,
+        pts[9].round_energy_j / pts[4].round_energy_j
+    );
+    rec.write_dir(std::path::Path::new("results"))?;
+    println!("wrote results/energy_frontier.csv");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the whole stack in ~80 lines.
+//!
+//! 1. Sample a wireless deployment (paper §V-A defaults).
+//! 2. Solve sub-problem II (Algorithm 3 association).
+//! 3. Solve sub-problem I (optimal a*, b*).
+//! 4. Simulate the protocol's latency.
+//! 5. Run two cloud rounds of real hierarchical FL through PJRT.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use hfl::assoc;
+use hfl::coordinator::run_hfl;
+use hfl::data::{partition_iid, synthetic};
+use hfl::delay::DelayInstance;
+use hfl::fl::{LocalSolver, TrainRun};
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions};
+use hfl::runtime::{find_artifacts, Engine};
+use hfl::sim::{simulate, SimConfig};
+use hfl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Deployment: 3 edge servers, 30 UEs in a 500m x 500m square.
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, 3, 30, 42);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    println!("deployment: {} UEs, {} edges, capacity {}/edge",
+        topo.num_ues(), topo.num_edges(), params.edge_capacity());
+
+    // --- 2. Sub-problem II: time-minimized UE-to-edge association.
+    let association = assoc::time_minimized(&channel, params.edge_capacity())
+        .map_err(anyhow::Error::msg)?;
+    println!("association loads: {:?}", association.load());
+
+    // --- 3. Sub-problem I: optimal iteration counts for ε = 0.25.
+    let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
+    let sol = solve_integer(&inst, &SolveOptions::default());
+    println!("optimal a*={} b*={} -> {} cloud rounds, {:.3}s/round, {:.3}s total",
+        sol.a, sol.b, sol.rounds, sol.round_time, sol.objective);
+
+    // --- 4. Event-driven protocol simulation (sanity vs closed form).
+    let sim = simulate(&inst, &SimConfig::deterministic(sol.a, sol.b));
+    println!("simulated makespan {:.3}s over {} events", sim.total_time_s, sim.events);
+
+    // --- 5. Two cloud rounds of REAL training through the PJRT runtime.
+    let artifacts = find_artifacts(None)?;
+    let engine = Engine::load(&artifacts)?;
+    let gen = synthetic::SyntheticConfig::default();
+    let corpus = synthetic::generate_split(&gen, 30 * 64, 42, 7);
+    let test = synthetic::generate_split(&gen, 256, 42, 8);
+    let shards = partition_iid(&corpus, 30, 64, &mut Rng::new(9)).map_err(anyhow::Error::msg)?;
+    let run = TrainRun {
+        a: 4, // short demo values; `hfl train` uses (a*, b*)
+        b: 2,
+        cloud_rounds: 2,
+        round_time_s: inst.round_time(4.0, 2.0),
+        eval_every: 1,
+    };
+    let outcome = run_hfl(
+        &engine,
+        LocalSolver::Gd { lr: 0.08 },
+        shards,
+        association.members(),
+        &test,
+        &run,
+        0,
+        42,
+    )?;
+    for p in &outcome.curve.points {
+        println!("cloud round {}: sim time {:>7.2}s  test acc {:.3}  loss {:.3}",
+            p.cloud_round, p.sim_time_s, p.test_acc, p.test_loss);
+    }
+    println!("quickstart OK (wall {:.1}s)", outcome.wall_s);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Figs. 2 & 3 driver: optimal iteration counts (a*, b*) as the target
+//! global accuracy ε and the per-edge UE count vary.
+//!
+//!   cargo run --release --example sweep_accuracy            # Fig. 2 sweep
+//!   cargo run --release --example sweep_accuracy -- --sweep ues   # Fig. 3
+//!
+//! Writes results/fig2_*.csv / results/fig3_*.csv.
+
+use hfl::assoc;
+use hfl::config::Args;
+use hfl::delay::DelayInstance;
+use hfl::metrics::Recorder;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions, SubgradientSolver};
+
+fn instance(edges: usize, ues_per_edge: usize, eps: f64, seed: u64) -> DelayInstance {
+    let mut params = SystemParams::default();
+    // Keep the bandwidth cap feasible for the large sweeps (Fig. 3 goes
+    // to 100 UEs/edge; the default capacity is 20).
+    params.ue_bandwidth_hz = params.edge_bandwidth_hz / ues_per_edge.max(20) as f64;
+    let topo = Topology::sample(&params, edges, edges * ues_per_edge, seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let assoc = assoc::time_minimized(&channel, params.edge_capacity()).expect("feasible");
+    DelayInstance::build(&topo, &channel, &assoc, eps)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let sweep = args.str("sweep").unwrap_or_else(|| "eps".into());
+    let seed = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let mut rec = Recorder::new();
+    let opts = SolveOptions::default();
+
+    match sweep.as_str() {
+        // ---- Fig. 2: 5 edges x 20 UEs, ε from 0.5 down to 0.05.
+        "eps" => {
+            let series = rec.series(
+                "fig2_iters_vs_eps",
+                &["eps", "a_star", "b_star", "a_times_b", "rounds", "total_s", "alg2_a", "alg2_b"],
+            );
+            for eps in [0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05] {
+                let inst = instance(5, 20, eps, seed);
+                let sol = solve_integer(&inst, &opts);
+                let alg2 = SubgradientSolver::default().solve(&inst);
+                series.push(vec![
+                    eps,
+                    sol.a as f64,
+                    sol.b as f64,
+                    (sol.a * sol.b) as f64,
+                    sol.rounds as f64,
+                    sol.objective,
+                    alg2.a.round(),
+                    alg2.b.round(),
+                ]);
+            }
+            series.print("Fig. 2 — optimal iterations vs global accuracy ε");
+        }
+        // ---- Fig. 3: ε = 0.25, UEs per edge from 10 to 100.
+        "ues" => {
+            let series = rec.series(
+                "fig3_iters_vs_ues",
+                &["ues_per_edge", "a_star", "b_star", "rounds", "total_s"],
+            );
+            for upe in [10usize, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+                // A fresh topology per point: the paper redraws C_n/D_n, so
+                // the series shows "no visible trend" — reproduce that.
+                let inst = instance(5, upe, 0.25, seed + upe as u64);
+                let sol = solve_integer(&inst, &opts);
+                series.push(vec![
+                    upe as f64,
+                    sol.a as f64,
+                    sol.b as f64,
+                    sol.rounds as f64,
+                    sol.objective,
+                ]);
+            }
+            series.print("Fig. 3 — optimal iterations vs UEs per edge (ε = 0.25)");
+        }
+        other => anyhow::bail!("unknown --sweep '{other}' (eps|ues)"),
+    }
+
+    rec.write_dir(std::path::Path::new("results"))?;
+    println!("\nwrote results/ CSVs");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs (all consumed by ``rust/src/runtime``):
+
+    artifacts/train_step.hlo.txt   (params, x, y, lr) -> (params', loss)
+    artifacts/grad_step.hlo.txt    (params, x, y)     -> (grad, loss)
+    artifacts/eval_step.hlo.txt    (params, x, y)     -> (loss_sum, correct)
+    artifacts/init_params.bin      f32 LE flat init vector
+    artifacts/meta.json            shapes, offsets, batch sizes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all(out_dir: str, seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    p = _spec((model.PARAM_COUNT,))
+    xt = _spec((model.TRAIN_BATCH, model.IMAGE_HW, model.IMAGE_HW, 1))
+    yt = _spec((model.TRAIN_BATCH,), jnp.int32)
+    xe = _spec((model.EVAL_BATCH, model.IMAGE_HW, model.IMAGE_HW, 1))
+    ye = _spec((model.EVAL_BATCH,), jnp.int32)
+    lr = _spec((), jnp.float32)
+
+    exports = {
+        "train_step": jax.jit(lambda f, x, y, l: model.train_step(f, x, y, l)).lower(p, xt, yt, lr),
+        "grad_step": jax.jit(lambda f, x, y: model.grad_step(f, x, y)).lower(p, xt, yt),
+        "eval_step": jax.jit(lambda f, x, y: model.eval_step(f, x, y)).lower(p, xe, ye),
+    }
+    for name, lowered in exports.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    init = model.init_params(seed)
+    init_path = os.path.join(out_dir, "init_params.bin")
+    init.tofile(init_path)
+    print(f"wrote {init_path} ({init.nbytes} bytes)")
+
+    meta = {
+        "param_count": model.PARAM_COUNT,
+        "image_hw": model.IMAGE_HW,
+        "num_classes": model.NUM_CLASSES,
+        "train_batch": model.TRAIN_BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "init_seed": seed,
+        "param_layout": [
+            {"name": n, "shape": list(s), "offset": model.param_offsets()[n][0]}
+            for n, s in model.PARAM_SPEC
+        ],
+        "executables": {
+            "train_step": {
+                "inputs": ["params f32[P]", "x f32[B,28,28,1]", "y s32[B]", "lr f32[]"],
+                "outputs": ["params f32[P]", "loss f32[]"],
+            },
+            "grad_step": {
+                "inputs": ["params f32[P]", "x f32[B,28,28,1]", "y s32[B]"],
+                "outputs": ["grad f32[P]", "loss f32[]"],
+            },
+            "eval_step": {
+                "inputs": ["params f32[P]", "x f32[E,28,28,1]", "y s32[E]"],
+                "outputs": ["loss_sum f32[]", "correct f32[]"],
+            },
+        },
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    lower_all(args.out_dir, args.seed)
+
+
+if __name__ == "__main__":
+    main()

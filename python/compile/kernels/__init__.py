@@ -1,0 +1,12 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .matmul import matmul, matmul_pallas_raw, mxu_utilization, vmem_bytes
+from .ref import matmul_ref
+
+__all__ = [
+    "matmul",
+    "matmul_pallas_raw",
+    "matmul_ref",
+    "mxu_utilization",
+    "vmem_bytes",
+]

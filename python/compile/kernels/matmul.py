@@ -1,0 +1,160 @@
+"""L1 — Pallas tiled-matmul kernel.
+
+This is the single compute hot-spot of the LeNet model (all dense layers
+*and* both convolutions, which are lowered to im2col + matmul in
+``model.py``). The kernel is written in the canonical MXU-oriented style:
+
+* the grid is ``(M/bm, N/bn, K/bk)`` with the K dimension innermost so each
+  ``(i, j)`` output tile is revisited ``K/bk`` times and accumulated in
+  float32 — the classic systolic-array pipeline shape;
+* on a real TPU the block sizes would be pinned at 128x128x128 (one MXU
+  pass per step, 3 * 128*128*4 B = 192 KiB of VMEM, leaving ample room for
+  double buffering);
+* on this image Pallas MUST run ``interpret=True`` (the CPU PJRT plugin
+  cannot execute Mosaic custom-calls), so block sizes adapt downward for
+  small operands to avoid pathological zero-padding waste. DESIGN.md
+  §Hardware-Adaptation records the TPU mapping.
+
+Because ``pallas_call`` has no automatic differentiation rule, the public
+``matmul`` is wrapped in ``jax.custom_vjp`` whose backward pass is two more
+calls of the same kernel (``dx = g @ w^T``, ``dw = x^T @ g``) — so the
+*entire* training step, forward and backward, flows through this kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes a real TPU deployment would use (MXU native tile).
+MXU_BLOCK = 128
+# Minimum granularity we round small dimensions to in interpret mode.
+_MIN_TILE = 8
+
+
+def _round_up(value: int, multiple: int) -> int:
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def _pick_block(dim: int, preferred: int = MXU_BLOCK) -> int:
+    """Pick a block size: the MXU tile when the dim is big enough,
+    otherwise the dim rounded up to the minimum tile granularity."""
+    if dim >= preferred:
+        return preferred
+    return _round_up(max(dim, 1), _MIN_TILE)
+
+
+def _pick_block_interpret(dim: int) -> int:
+    """Interpret-mode (CPU) block policy: one block per operand.
+
+    The grid loop that pipelines 128x128x128 tiles through the MXU on a
+    real TPU lowers, under ``interpret=True``, to an XLA while-loop of
+    dynamic-slice/dot/dynamic-update-slice steps that the CPU backend
+    cannot fuse — a 144-step grid made the exported train_step ~9x slower
+    than the pure-jnp reference (EXPERIMENTS.md §Perf, L1 iteration 1).
+    Collapsing the grid to a single whole-operand block keeps the kernel
+    code identical while letting interpret mode execute one fused dot;
+    the TPU deployment config (``bm=bn=bk=MXU_BLOCK``) is exercised by
+    the block-shape-invariance tests instead.
+    """
+    return _round_up(max(dim, 1), _MIN_TILE)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One grid step: accumulate an (bm, bn) output tile in f32."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas_raw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Tiled matmul ``x @ w`` via a Pallas kernel (interpret mode).
+
+    Operands of arbitrary shape are zero-padded up to block multiples; the
+    result is sliced back. Accumulation is always float32; the result is
+    cast back to the promoted input dtype.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    bm = bm or _pick_block_interpret(m)
+    bn = bn or _pick_block_interpret(n)
+    bk = bk or _pick_block_interpret(k)
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp)
+    return out[:m, :n].astype(out_dtype)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul. Both fwd and bwd use the kernel."""
+    return matmul_pallas_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas_raw(x, w), (x, w)
+
+
+def _matmul_bwd(residual, g):
+    x, w = residual
+    dx = matmul_pallas_raw(g, w.T)
+    dw = matmul_pallas_raw(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int = MXU_BLOCK, bn: int = MXU_BLOCK, bk: int = MXU_BLOCK) -> int:
+    """VMEM footprint of one grid step (x tile + w tile + out tile, f32).
+
+    Used by the perf notes in EXPERIMENTS.md: with the default 128^3
+    blocking this is 192 KiB against a 16 MiB VMEM budget, i.e. ~1.2%
+    occupancy — double/triple buffering is free.
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, k: int, n: int, bm: int = MXU_BLOCK,
+                    bn: int = MXU_BLOCK, bk: int = MXU_BLOCK) -> float:
+    """Fraction of MXU MACs doing useful work (padding overhead model)."""
+    useful = m * k * n
+    padded = _round_up(m, bm) * _round_up(k, bk) * _round_up(n, bn)
+    return useful / padded

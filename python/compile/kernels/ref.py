@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Pallas kernel — the CORE correctness signal.
+
+Everything in here is deliberately boring: plain ``jnp`` ops that XLA
+lowers natively, no Pallas. pytest asserts the Pallas kernel (and the
+full model built on it) matches these references to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference matmul with f32 accumulation, matching the kernel."""
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(out_dtype)

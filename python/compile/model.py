@@ -1,0 +1,222 @@
+"""L2 — the paper's FL model: LeNet-5 forward/backward in JAX.
+
+The paper (§V-A) trains **LeNet on MNIST** at each UE with plain gradient
+descent ("we use GD in UE local training"). This module implements that
+model over a single **flat f32[P] parameter vector** so the Rust
+coordinator can treat model state as one opaque buffer per UE (pack /
+unpack offsets are exported in ``meta.json``).
+
+Both convolutions are lowered to **im2col + matmul** so every FLOP of the
+network — forward and backward — flows through the L1 Pallas kernel
+(``kernels.matmul``). Convolution weights are stored natively in im2col
+layout ``(C*kh*kw, OC)``, which keeps the flat-vector layout trivial and
+removes any transpose ambiguity between model and reference.
+
+Exported computations (lowered to HLO text by ``aot.py``):
+
+* ``train_step(params, x, y, lr) -> (params', loss)`` — one fused GD step
+  (value_and_grad + SGD update in a single executable; no host round trip
+  between gradient and update).
+* ``grad_step(params, x, y) -> (grad, loss)`` — gradient only, so the Rust
+  side can implement alternative local solvers (e.g. DANE-style corrected
+  steps) on top of the same compiled artifact.
+* ``eval_step(params, x, y) -> (loss_sum, correct)`` — test-set shard
+  evaluation; Rust loops shards and reduces.
+
+Architecture (28x28x1 input, VALID convs, 2x2 avg-pool, ReLU):
+
+    conv1 5x5x1->6   -> 24x24x6  -> pool 12x12x6
+    conv2 5x5x6->16  ->  8x8x16  -> pool  4x4x16 = 256
+    fc1 256->120, fc2 120->84, fc3 84->10
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul
+
+# --------------------------------------------------------------------------
+# Shapes / parameter layout
+# --------------------------------------------------------------------------
+
+IMAGE_HW = 28
+NUM_CLASSES = 10
+TRAIN_BATCH = 32
+EVAL_BATCH = 128
+
+# (name, shape) in flat-vector order. Conv weights in im2col layout.
+PARAM_SPEC: List[Tuple[str, Tuple[int, ...]]] = [
+    ("conv1_w", (25, 6)),      # (C*kh*kw, OC) = (1*5*5, 6)
+    ("conv1_b", (6,)),
+    ("conv2_w", (150, 16)),    # (6*5*5, 16)
+    ("conv2_b", (16,)),
+    ("fc1_w", (256, 120)),
+    ("fc1_b", (120,)),
+    ("fc2_w", (120, 84)),
+    ("fc2_b", (84,)),
+    ("fc3_w", (84, 10)),
+    ("fc3_b", (10,)),
+]
+
+
+def param_offsets() -> Dict[str, Tuple[int, int]]:
+    """name -> (offset, size) into the flat parameter vector."""
+    out, off = {}, 0
+    for name, shape in PARAM_SPEC:
+        size = int(np.prod(shape))
+        out[name] = (off, size)
+        off += size
+    return out
+
+
+PARAM_COUNT = sum(int(np.prod(s)) for _, s in PARAM_SPEC)  # 44426
+
+
+def unpack(flat: jax.Array) -> Dict[str, jax.Array]:
+    """Split the flat f32[P] vector into named, shaped parameters."""
+    offsets = param_offsets()
+    return {
+        name: jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        for (name, shape), (off, size) in (
+            ((n, s), offsets[n]) for n, s in PARAM_SPEC
+        )
+    }
+
+
+def pack(params: Dict[str, jax.Array]) -> jax.Array:
+    """Inverse of :func:`unpack`."""
+    return jnp.concatenate([params[n].reshape(-1) for n, _ in PARAM_SPEC])
+
+
+def init_params(seed: int = 0) -> np.ndarray:
+    """He-style init, computed in numpy at build time (written to
+    artifacts/init_params.bin so the Rust side never needs an init HLO)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in PARAM_SPEC:
+        if name.endswith("_b"):
+            chunks.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = shape[0]
+            std = np.sqrt(2.0 / fan_in)
+            chunks.append(rng.normal(0.0, std, size=shape).astype(np.float32))
+    flat = np.concatenate([c.reshape(-1) for c in chunks])
+    assert flat.shape == (PARAM_COUNT,)
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """(B, H, W, C) -> (B*H'*W', C*kh*kw) VALID patches.
+
+    Feature ordering is whatever ``conv_general_dilated_patches`` produces
+    (channel-major); conv weights are stored in the *same* ordering, so
+    model and reference agree by construction.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H', W', C*kh*kw)
+    hp, wp = h - kh + 1, w - kw + 1
+    return patches.reshape(b * hp * wp, c * kh * kw), (hp, wp)
+
+
+def _avg_pool2(x: jax.Array) -> jax.Array:
+    """2x2 average pooling, stride 2, NHWC."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def _conv_block(x: jax.Array, w: jax.Array, b: jax.Array, mm) -> jax.Array:
+    """im2col conv + bias + ReLU, matmul injected (pallas or ref)."""
+    bsz = x.shape[0]
+    cols, (hp, wp) = _im2col(x, 5, 5)
+    out = mm(cols, w) + b
+    out = jax.nn.relu(out)
+    return out.reshape(bsz, hp, wp, w.shape[1])
+
+
+def forward(flat: jax.Array, x: jax.Array, *, mm=matmul) -> jax.Array:
+    """LeNet forward: images (B, 28, 28, 1) -> logits (B, 10)."""
+    p = unpack(flat)
+    h = _conv_block(x, p["conv1_w"], p["conv1_b"], mm)   # (B,24,24,6)
+    h = _avg_pool2(h)                                    # (B,12,12,6)
+    h = _conv_block(h, p["conv2_w"], p["conv2_b"], mm)   # (B,8,8,16)
+    h = _avg_pool2(h)                                    # (B,4,4,16)
+    h = h.reshape(h.shape[0], -1)                        # (B,256)
+    h = jax.nn.relu(mm(h, p["fc1_w"]) + p["fc1_b"])
+    h = jax.nn.relu(mm(h, p["fc2_w"]) + p["fc2_b"])
+    return mm(h, p["fc3_w"]) + p["fc3_b"]
+
+
+def loss_fn(flat: jax.Array, x: jax.Array, y: jax.Array, *, mm=matmul) -> jax.Array:
+    """Mean softmax cross-entropy over the batch."""
+    logits = forward(flat, x, mm=mm)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Exported computations
+# --------------------------------------------------------------------------
+
+
+def train_step(flat, x, y, lr):
+    """One fused GD step: (params, x, y, lr) -> (params', loss).
+
+    The gradient and the SGD update live in one executable so XLA fuses
+    them; the Rust hot loop does a single PJRT execute per local iteration.
+    """
+    loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+    return flat - lr * grad, loss
+
+
+def grad_step(flat, x, y):
+    """(params, x, y) -> (grad, loss) — for Rust-side solvers (DANE)."""
+    loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+    return grad, loss
+
+
+def eval_step(flat, x, y):
+    """(params, x, y) -> (loss_sum, correct_count) over one shard."""
+    logits = forward(flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))
+    return jnp.sum(nll), correct
+
+
+# Reference (pure-jnp matmul) variants used only by pytest.
+
+
+def forward_ref(flat, x):
+    from .kernels.ref import matmul_ref
+
+    return forward(flat, x, mm=matmul_ref)
+
+
+def loss_ref(flat, x, y):
+    from .kernels.ref import matmul_ref
+
+    return loss_fn(flat, x, y, mm=matmul_ref)
+
+
+def train_step_ref(flat, x, y, lr):
+    loss, grad = jax.value_and_grad(loss_ref)(flat, x, y)
+    return flat - lr * grad, loss

@@ -1,0 +1,135 @@
+"""L2 correctness: the flat-parameter LeNet model and its exported steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 1, size=(n, 28, 28, 1)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(n,)).astype(np.int32))
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(model.init_params(0))
+
+
+class TestParamLayout:
+    def test_param_count(self):
+        assert model.PARAM_COUNT == 44426
+
+    def test_offsets_contiguous(self):
+        off = 0
+        for name, shape in model.PARAM_SPEC:
+            o, s = model.param_offsets()[name]
+            assert o == off
+            assert s == int(np.prod(shape))
+            off += s
+        assert off == model.PARAM_COUNT
+
+    def test_pack_unpack_roundtrip(self, flat):
+        params = model.unpack(flat)
+        assert params["conv1_w"].shape == (25, 6)
+        assert params["fc3_b"].shape == (10,)
+        repacked = model.pack(params)
+        np.testing.assert_array_equal(repacked, flat)
+
+    def test_init_deterministic(self):
+        a, b = model.init_params(7), model.init_params(7)
+        np.testing.assert_array_equal(a, b)
+        c = model.init_params(8)
+        assert not np.array_equal(a, c)
+
+    def test_init_biases_zero(self):
+        flat = model.init_params(0)
+        off, size = model.param_offsets()["conv1_b"]
+        np.testing.assert_array_equal(flat[off : off + size], 0.0)
+
+
+class TestForward:
+    def test_logit_shape(self, flat):
+        x, _ = batch(4)
+        assert model.forward(flat, x).shape == (4, 10)
+
+    def test_pallas_matches_ref(self, flat):
+        x, _ = batch(8, 1)
+        lp = model.forward(flat, x)
+        lr = model.forward_ref(flat, x)
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-4)
+
+    def test_loss_is_near_uniform_at_init(self, flat):
+        x, y = batch(32, 2)
+        loss = model.loss_fn(flat, x, y)
+        # Random init ≈ uniform predictions: CE ≈ ln 10 ≈ 2.30.
+        assert 1.8 < float(loss) < 3.2
+
+    def test_batch_independence(self, flat):
+        # Each example's logits must not depend on the rest of the batch.
+        x, _ = batch(8, 3)
+        full = model.forward(flat, x)
+        single = model.forward(flat, x[:1])
+        np.testing.assert_allclose(full[:1], single, rtol=1e-4, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_matches_reference_step(self, flat):
+        x, y = batch(model.TRAIN_BATCH, 4)
+        p1, l1 = model.train_step(flat, x, y, jnp.float32(0.05))
+        p2, l2 = model.train_step_ref(flat, x, y, jnp.float32(0.05))
+        np.testing.assert_allclose(l1, l2, rtol=1e-4)
+        np.testing.assert_allclose(p1, p2, rtol=1e-3, atol=1e-6)
+
+    def test_loss_decreases_over_steps(self, flat):
+        x, y = batch(model.TRAIN_BATCH, 5)
+        w = flat
+        losses = []
+        step = jax.jit(model.train_step)
+        for _ in range(12):
+            w, loss = step(w, x, y, jnp.float32(0.1))
+            losses.append(float(loss))
+        # Random-label memorization is slow; demand a clear downward trend.
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_zero_lr_is_identity(self, flat):
+        x, y = batch(model.TRAIN_BATCH, 6)
+        w, _ = model.train_step(flat, x, y, jnp.float32(0.0))
+        np.testing.assert_array_equal(w, flat)
+
+    def test_grad_step_consistent_with_train_step(self, flat):
+        x, y = batch(model.TRAIN_BATCH, 7)
+        grad, loss_g = model.grad_step(flat, x, y)
+        w, loss_t = model.train_step(flat, x, y, jnp.float32(0.05))
+        np.testing.assert_allclose(loss_g, loss_t, rtol=1e-6)
+        np.testing.assert_allclose(w, flat - 0.05 * grad, rtol=1e-5, atol=1e-7)
+
+
+class TestEvalStep:
+    def test_counts_match_numpy(self, flat):
+        x, y = batch(model.EVAL_BATCH, 8)
+        loss_sum, correct = model.eval_step(flat, x, y)
+        logits = np.asarray(model.forward(flat, x))
+        pred = logits.argmax(-1)
+        np.testing.assert_allclose(float(correct), (pred == np.asarray(y)).sum())
+        logp = jax.nn.log_softmax(jnp.asarray(logits), -1)
+        nll = -np.take_along_axis(np.asarray(logp), np.asarray(y)[:, None], axis=-1)
+        np.testing.assert_allclose(float(loss_sum), nll.sum(), rtol=1e-4)
+
+    def test_memorized_batch_scores_above_chance(self):
+        # Train on one random-label batch until it (mostly) memorizes,
+        # then eval on a set containing it: correctness must rise far
+        # above the 10% chance level (random labels are a worst case —
+        # structured-data accuracy is exercised end-to-end in rust).
+        x, y = batch(model.EVAL_BATCH, 9)
+        w = jnp.asarray(model.init_params(1))
+        xt, yt = x[: model.TRAIN_BATCH], y[: model.TRAIN_BATCH]
+        step = jax.jit(model.train_step)
+        for _ in range(150):
+            w, _ = step(w, xt, yt, jnp.float32(0.2))
+        _, correct = model.eval_step(w, x, y)
+        assert float(correct) >= model.TRAIN_BATCH * 0.8

@@ -1,0 +1,75 @@
+//! Algorithm 2 bench — convergence behaviour of the paper's subgradient
+//! solver: iterations to ε₂-accuracy, optimality gap vs the exact convex
+//! reference (raw dual recovery AND after the primal polish), and
+//! per-solve latency. Complements the paper's O(K ln(1/ε₂)) claim with
+//! measured numbers.
+
+use hfl::assoc;
+use hfl::delay::DelayInstance;
+use hfl::metrics::Series;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_continuous, SolveOptions, SubgradientSolver};
+use hfl::util::bench::{section, Bencher};
+
+fn instance(eps: f64, seed: u64) -> DelayInstance {
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, 5, 100, seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let a = assoc::time_minimized(&channel, params.edge_capacity()).unwrap();
+    DelayInstance::build(&topo, &channel, &a, eps)
+}
+
+fn main() {
+    section("Algorithm 2 — optimality gap vs exact solver (10 random instances)");
+    let mut series = Series::new(&[
+        "seed",
+        "exact_J",
+        "alg2_raw_J",
+        "alg2_polished_J",
+        "raw_gap_pct",
+        "polished_gap_pct",
+        "iters",
+    ]);
+    let opts = SolveOptions::default();
+    let solver = SubgradientSolver::default();
+    for seed in 0..10u64 {
+        let inst = instance(0.25, 100 + seed);
+        let exact = solve_continuous(&inst, &opts);
+        let res = solver.solve(&inst);
+        series.push(vec![
+            seed as f64,
+            exact.objective,
+            res.raw_objective,
+            res.objective,
+            (res.raw_objective / exact.objective - 1.0) * 100.0,
+            (res.objective / exact.objective - 1.0) * 100.0,
+            res.iterations as f64,
+        ]);
+    }
+    series.print("per-instance gaps (percent above exact optimum)");
+
+    section("convergence trace (seed 100, first/last best-objective values)");
+    let inst = instance(0.25, 100);
+    let res = solver.solve(&inst);
+    let trace = &res.trace.best_objective;
+    let show: Vec<usize> = [0usize, 1, 2, 5, 10, 20, 50, 100, 200]
+        .into_iter()
+        .filter(|&i| i < trace.len())
+        .collect();
+    for i in show {
+        println!("  iter {i:>4}: best J = {:.6}", trace[i]);
+    }
+    println!("  iter {:>4}: best J = {:.6} (final)", trace.len() - 1, trace.last().unwrap());
+
+    section("solver latency");
+    let b = Bencher::default();
+    b.run("Algorithm 2 (polish on)", || solver.solve(&inst));
+    let raw = SubgradientSolver {
+        polish: false,
+        ..SubgradientSolver::default()
+    };
+    b.run("Algorithm 2 (polish off)", || raw.solve(&inst));
+    b.run("exact continuous reference", || {
+        solve_continuous(&inst, &opts)
+    });
+}

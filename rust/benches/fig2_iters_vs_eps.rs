@@ -1,0 +1,80 @@
+//! Fig. 2 bench — regenerates the paper's "iterations under different
+//! global accuracy" series AND times the solvers that produce it.
+//!
+//! Paper claim (Fig. 2): as ε decreases (higher accuracy required), the
+//! optimal local-iteration count a decreases, the edge-iteration count b
+//! increases, and a·b grows. Verified under the integer (⌈R⌉) objective;
+//! see EXPERIMENTS.md for the continuous-relaxation caveat.
+
+use hfl::assoc;
+use hfl::delay::DelayInstance;
+use hfl::metrics::Series;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_continuous, solve_integer, SolveOptions};
+use hfl::util::bench::{section, Bencher};
+
+fn instance(eps: f64, seed: u64) -> DelayInstance {
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, 5, 100, seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let a = assoc::time_minimized(&channel, params.edge_capacity()).unwrap();
+    DelayInstance::build(&topo, &channel, &a, eps)
+}
+
+fn main() {
+    section("Fig. 2 — optimal iteration counts vs global accuracy ε (5 edges x 20 UEs)");
+    let mut series = Series::new(&["eps", "a_star", "b_star", "a_x_b", "rounds", "total_s"]);
+    let opts = SolveOptions::default();
+    for eps in [0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05] {
+        let inst = instance(eps, 42);
+        let sol = solve_integer(&inst, &opts);
+        series.push(vec![
+            eps,
+            sol.a as f64,
+            sol.b as f64,
+            (sol.a * sol.b) as f64,
+            sol.rounds as f64,
+            sol.objective,
+        ]);
+    }
+    series.print("series (paper Fig. 2)");
+
+    // Shape checks the paper claims (reported, not asserted — the bench
+    // prints PASS/DEVIATES so EXPERIMENTS.md can quote it).
+    let a_first = series.rows.first().unwrap()[1];
+    let a_last = series.rows.last().unwrap()[1];
+    let b_first = series.rows.first().unwrap()[2];
+    let b_last = series.rows.last().unwrap()[2];
+    let ab_first = series.rows.first().unwrap()[3];
+    let ab_last = series.rows.last().unwrap()[3];
+    println!(
+        "shape: a {} as eps shrinks ({} -> {}): {}",
+        if a_last <= a_first { "non-increasing" } else { "INCREASING" },
+        a_first,
+        a_last,
+        if a_last <= a_first { "PASS" } else { "DEVIATES" }
+    );
+    println!(
+        "shape: b {} as eps shrinks ({} -> {}): {}",
+        if b_last >= b_first { "non-decreasing" } else { "DECREASING" },
+        b_first,
+        b_last,
+        if b_last >= b_first { "PASS" } else { "DEVIATES" }
+    );
+    println!(
+        "shape: a*b grows as eps shrinks ({} -> {}): {}",
+        ab_first,
+        ab_last,
+        if ab_last >= ab_first { "PASS" } else { "DEVIATES" }
+    );
+
+    section("solver timing");
+    let b = Bencher::default();
+    let inst = instance(0.25, 42);
+    b.run("solve_integer (5 edges x 20 UEs)", || {
+        solve_integer(&inst, &opts)
+    });
+    b.run("solve_continuous (5 edges x 20 UEs)", || {
+        solve_continuous(&inst, &opts)
+    });
+}

@@ -1,0 +1,74 @@
+//! Fig. 5 bench — maximum system latency of 100 UEs vs the number of
+//! edge servers for the proposed / greedy / random association
+//! strategies (+ the exact optimum), and the algorithms' own runtime.
+//!
+//! Paper claims (Fig. 5): proposed < greedy < random at every M, and
+//! latency falls as M grows (more choice).
+
+use hfl::assoc::{self, LatencyTable};
+use hfl::delay::DelayInstance;
+use hfl::metrics::Series;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions};
+use hfl::util::bench::{section, Bencher};
+use hfl::util::Rng;
+
+fn main() {
+    section("Fig. 5 — max latency of 100 UEs vs #edge servers (ε = 0.25, mean of 5 seeds)");
+    let num_ues = 100;
+    let trials = 5u64;
+    let mut series = Series::new(&["edges", "proposed_s", "greedy_s", "random_s", "exact_s"]);
+    let mut orderings_ok = 0;
+    let mut points = 0;
+    for edges in [6usize, 7, 8, 9, 10, 12, 14, 16] {
+        let (mut p, mut g, mut r, mut e) = (0.0, 0.0, 0.0, 0.0);
+        for t in 0..trials {
+            let params = SystemParams::default();
+            let topo = Topology::sample(&params, edges, num_ues, 42 + t * 1000);
+            let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+            let cap = params.edge_capacity();
+            let prov = assoc::greedy(&channel, cap).unwrap();
+            let inst = DelayInstance::build(&topo, &channel, &prov, 0.25);
+            let a = solve_integer(&inst, &SolveOptions::default()).a;
+            let table = LatencyTable::build(&topo, &channel, a as f64);
+
+            p += table.max_latency(&assoc::time_minimized(&channel, cap).unwrap());
+            g += table.max_latency(&assoc::greedy(&channel, cap).unwrap());
+            r += table.max_latency(
+                &assoc::random(num_ues, edges, cap, &mut Rng::new(42 + t)).unwrap(),
+            );
+            e += table.max_latency(&assoc::solve_exact_matching(&table, cap).unwrap());
+        }
+        let k = trials as f64;
+        let (p, g, r, e) = (p / k, g / k, r / k, e / k);
+        if p <= g && g <= r {
+            orderings_ok += 1;
+        }
+        points += 1;
+        series.push(vec![edges as f64, p, g, r, e]);
+    }
+    series.print("series (paper Fig. 5)");
+    println!(
+        "shape: proposed <= greedy <= random at {orderings_ok}/{points} points: {}",
+        if orderings_ok == points { "PASS" } else { "PARTIAL" }
+    );
+
+    section("association algorithm runtime (100 UEs)");
+    let params = SystemParams::default();
+    let topo = Topology::sample(&params, 10, num_ues, 42);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let cap = params.edge_capacity();
+    let table = LatencyTable::build(&topo, &channel, 20.0);
+    let bench = Bencher::default();
+    bench.run("Algorithm 3 (proposed)", || {
+        assoc::time_minimized(&channel, cap).unwrap()
+    });
+    bench.run("greedy", || assoc::greedy(&channel, cap).unwrap());
+    let mut rng = Rng::new(1);
+    bench.run("random", || {
+        assoc::random(num_ues, 10, cap, &mut rng).unwrap()
+    });
+    bench.run("exact matching (binary search + Dinic)", || {
+        assoc::solve_exact_matching(&table, cap).unwrap()
+    });
+}

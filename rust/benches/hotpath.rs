@@ -1,0 +1,138 @@
+//! Hot-path bench — the performance-critical operations of every layer:
+//!
+//!   L3: model aggregation (Eq. (6)/(10)), event-simulator throughput,
+//!       solver latency, channel-table construction;
+//!   runtime: PJRT train/eval step latency (needs `make artifacts`;
+//!       skipped otherwise) and the non-PJRT overhead fraction of a full
+//!       coordinated round.
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+use hfl::assoc;
+use hfl::data::synthetic::{generate_split, SyntheticConfig};
+use hfl::delay::DelayInstance;
+use hfl::fl::aggregate::{weighted_average, weighted_average_into};
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions};
+use hfl::runtime::{find_artifacts, Engine};
+use hfl::sim::{simulate, SimConfig};
+use hfl::util::bench::{section, Bencher};
+use hfl::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+
+    section("L3: aggregation (Eq. (6)/(10)) — 20 UE models x 44426 params");
+    let dim = 44426;
+    let mut rng = Rng::new(1);
+    let models: Vec<Vec<f32>> = (0..20)
+        .map(|_| (0..dim).map(|_| rng.f64() as f32).collect())
+        .collect();
+    let weighted: Vec<(f64, &[f32])> = models.iter().map(|m| (500.0, m.as_slice())).collect();
+    b.run("weighted_average (alloc)", || weighted_average(&weighted));
+    let mut out = vec![0.0f32; dim];
+    b.run("weighted_average_into (no alloc)", || {
+        weighted_average_into(&weighted, &mut out)
+    });
+
+    section("L3: wireless substrate");
+    let params = SystemParams::default();
+    b.run("Topology::sample (5 edges, 100 UEs)", || {
+        Topology::sample(&params, 5, 100, 42)
+    });
+    let topo = Topology::sample(&params, 5, 100, 42);
+    b.run("Channel::compute (100x5 table)", || {
+        Channel::compute(&topo.params, &topo.ues, &topo.edges)
+    });
+
+    section("L3: optimizer + simulator");
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let association = assoc::time_minimized(&channel, params.edge_capacity()).unwrap();
+    let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
+    let opts = SolveOptions::default();
+    b.run("solve_integer (100 UEs)", || solve_integer(&inst, &opts));
+    let sol = solve_integer(&inst, &opts);
+    let cfg = SimConfig::deterministic(sol.a, sol.b);
+    let m = b.run("event sim (one full protocol)", || simulate(&inst, &cfg));
+    let events = simulate(&inst, &cfg).events;
+    println!(
+        "  -> {:.1}M events/s",
+        events as f64 / (m.mean_ns() / 1e9) / 1e6
+    );
+
+    section("runtime: PJRT step latency (skipped without artifacts)");
+    match find_artifacts(None).and_then(|d| Engine::load(&d)) {
+        Err(e) => println!("  SKIP: {e}"),
+        Ok(engine) => {
+            let hw = engine.meta.image_hw;
+            let tb = engine.meta.train_batch;
+            let eb = engine.meta.eval_batch;
+            let mut rng = Rng::new(7);
+            let params_v = engine.init_params();
+            let xt: Vec<f32> = (0..tb * hw * hw).map(|_| rng.f64() as f32).collect();
+            let yt: Vec<i32> = (0..tb).map(|_| rng.below(10) as i32).collect();
+            let xe: Vec<f32> = (0..eb * hw * hw).map(|_| rng.f64() as f32).collect();
+            let ye: Vec<i32> = (0..eb).map(|_| rng.below(10) as i32).collect();
+            let slow = Bencher {
+                sample_target_s: 0.3,
+                samples: 5,
+                warmup_s: 1.0,
+            };
+            let mt = slow.run("train_step (B=32, fused fwd+bwd+update)", || {
+                engine.train_step(&params_v, &xt, &yt, 0.05).unwrap()
+            });
+            slow.run("grad_step (B=32)", || {
+                engine.grad_step(&params_v, &xt, &yt).unwrap()
+            });
+            let me = slow.run("eval_step (B=128)", || {
+                engine.eval_step(&params_v, &xe, &ye).unwrap()
+            });
+            // Per-image costs for the §Perf table.
+            println!(
+                "  -> train {:.2} ms/image, eval {:.3} ms/image",
+                mt.mean_ns() / 1e6 / tb as f64,
+                me.mean_ns() / 1e6 / eb as f64
+            );
+
+            section("runtime: coordinator overhead (non-PJRT share of a round)");
+            let gen = SyntheticConfig::default();
+            let shards: Vec<_> = (0..4)
+                .map(|i| generate_split(&gen, 64, 42, 9000 + i as u64))
+                .collect();
+            let test = generate_split(&gen, 128, 42, 12);
+            let run = hfl::fl::TrainRun {
+                a: 4,
+                b: 2,
+                cloud_rounds: 1,
+                round_time_s: 1.0,
+                eval_every: 1,
+            };
+            let t0 = std::time::Instant::now();
+            let before_ns = engine.stats.exec_ns.load(std::sync::atomic::Ordering::Relaxed);
+            let _ = hfl::coordinator::run_hfl(
+                &engine,
+                hfl::fl::LocalSolver::Gd { lr: 0.05 },
+                shards,
+                vec![vec![0, 1], vec![2, 3]],
+                &test,
+                &run,
+                2,
+                42,
+            )
+            .unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            let pjrt =
+                (engine.stats.exec_ns.load(std::sync::atomic::Ordering::Relaxed) - before_ns) as f64
+                    / 1e9;
+            // PJRT time is summed across worker threads; normalize by the
+            // parallelism to estimate the wall-clock PJRT share.
+            println!(
+                "  round wall {:.2}s, summed PJRT exec {:.2}s ({} steps) — overhead {:.1}% of wall (assuming 2-way overlap)",
+                wall,
+                pjrt,
+                engine.stats.train_steps.load(std::sync::atomic::Ordering::Relaxed),
+                ((wall - pjrt / 2.0) / wall * 100.0).max(0.0)
+            );
+        }
+    }
+}

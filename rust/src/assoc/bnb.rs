@@ -1,0 +1,343 @@
+//! Exact solvers for the association MILP (paper problem (39)).
+//!
+//! Two independent exact methods, used to measure the optimality gap of
+//! Algorithm 3 (`benches/assoc_optimality.rs`):
+//!
+//! * [`solve_exact_bnb`] — depth-first branch-and-bound over χ, the
+//!   approach the paper names (and dismisses as exponential). Practical
+//!   for N ≲ 16.
+//! * [`solve_exact_matching`] — a polynomial exact method the paper does
+//!   not exploit: binary-search the min-max threshold z over the distinct
+//!   link latencies and test feasibility with a max-flow (Dinic) on the
+//!   bipartite UE→edge graph with per-edge capacity. Scales to thousands
+//!   of UEs; also cross-checks the B&B.
+
+use super::{Association, LatencyTable};
+
+/// Branch-and-bound on problem (39). UEs are branched in order of
+/// decreasing best-case latency (hardest first); edges are tried in order
+/// of increasing latency for the UE. Prunes on the incumbent bound and on
+/// capacity. `incumbent` seeds the bound (e.g. Algorithm 3's solution).
+pub fn solve_exact_bnb(
+    table: &LatencyTable,
+    cap: usize,
+    incumbent: Option<&Association>,
+) -> Result<Association, String> {
+    let (n, m) = (table.num_ues, table.num_edges);
+    if n > m * cap {
+        return Err(format!("infeasible: {n} UEs > {m} edges x capacity {cap}"));
+    }
+
+    // Branch order: UEs whose best link is worst go first.
+    let mut order: Vec<usize> = (0..n).collect();
+    let best_lat = |ue: usize| {
+        (0..m)
+            .map(|e| table.of(ue, e))
+            .fold(f64::INFINITY, f64::min)
+    };
+    order.sort_by(|&a, &b| best_lat(b).partial_cmp(&best_lat(a)).unwrap());
+
+    // Per-UE edge preference (ascending latency).
+    let prefs: Vec<Vec<usize>> = (0..n)
+        .map(|ue| {
+            let mut es: Vec<usize> = (0..m).collect();
+            es.sort_by(|&a, &b| table.of(ue, a).partial_cmp(&table.of(ue, b)).unwrap());
+            es
+        })
+        .collect();
+
+    let mut best_obj = incumbent
+        .map(|a| table.max_latency(a))
+        .unwrap_or(f64::INFINITY);
+    let mut best_assign: Option<Vec<usize>> = incumbent.map(|a| a.edge_of.clone());
+
+    let mut assign = vec![usize::MAX; n];
+    let mut load = vec![0usize; m];
+
+    fn dfs(
+        depth: usize,
+        cur_max: f64,
+        order: &[usize],
+        prefs: &[Vec<usize>],
+        table: &LatencyTable,
+        cap: usize,
+        assign: &mut Vec<usize>,
+        load: &mut Vec<usize>,
+        best_obj: &mut f64,
+        best_assign: &mut Option<Vec<usize>>,
+    ) {
+        if cur_max >= *best_obj {
+            return; // bound
+        }
+        if depth == order.len() {
+            *best_obj = cur_max;
+            *best_assign = Some(assign.clone());
+            return;
+        }
+        let ue = order[depth];
+        for &e in &prefs[ue] {
+            if load[e] >= cap {
+                continue;
+            }
+            let lat = table.of(ue, e);
+            if lat >= *best_obj {
+                break; // prefs ascending: all further edges are worse
+            }
+            assign[ue] = e;
+            load[e] += 1;
+            dfs(
+                depth + 1,
+                cur_max.max(lat),
+                order,
+                prefs,
+                table,
+                cap,
+                assign,
+                load,
+                best_obj,
+                best_assign,
+            );
+            load[e] -= 1;
+            assign[ue] = usize::MAX;
+        }
+    }
+
+    dfs(
+        0,
+        0.0,
+        &order,
+        &prefs,
+        table,
+        cap,
+        &mut assign,
+        &mut load,
+        &mut best_obj,
+        &mut best_assign,
+    );
+
+    let edge_of = best_assign.ok_or_else(|| "no feasible assignment".to_string())?;
+    let assoc = Association::new(edge_of, m);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+/// Polynomial exact min-max association: binary search the threshold over
+/// sorted distinct latencies; feasibility via Dinic max-flow on
+/// source → UEs → edges(cap) → sink.
+pub fn solve_exact_matching(table: &LatencyTable, cap: usize) -> Result<Association, String> {
+    let (n, m) = (table.num_ues, table.num_edges);
+    if n > m * cap {
+        return Err(format!("infeasible: {n} UEs > {m} edges x capacity {cap}"));
+    }
+    let mut thresholds: Vec<f64> = table.latency_s.clone();
+    thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    thresholds.dedup();
+
+    // Binary search the smallest feasible threshold.
+    let feasible = |z: f64| -> Option<Vec<usize>> {
+        let mut flow = Dinic::new(n + m + 2);
+        let (src, snk) = (n + m, n + m + 1);
+        let mut ue_arcs = vec![Vec::new(); n];
+        for ue in 0..n {
+            flow.add_edge(src, ue, 1);
+            for e in 0..m {
+                if table.of(ue, e) <= z {
+                    let arc = flow.add_edge(ue, n + e, 1);
+                    ue_arcs[ue].push((arc, e));
+                }
+            }
+        }
+        for e in 0..m {
+            flow.add_edge(n + e, snk, cap as i64);
+        }
+        if flow.max_flow(src, snk) != n as i64 {
+            return None;
+        }
+        let mut edge_of = vec![usize::MAX; n];
+        for ue in 0..n {
+            for &(arc, e) in &ue_arcs[ue] {
+                if flow.arc_flow(arc) > 0 {
+                    edge_of[ue] = e;
+                }
+            }
+        }
+        Some(edge_of)
+    };
+
+    let (mut lo, mut hi) = (0usize, thresholds.len() - 1);
+    if feasible(thresholds[hi]).is_none() {
+        return Err("no feasible assignment at max threshold".to_string());
+    }
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(thresholds[mid]).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let edge_of = feasible(thresholds[lo]).expect("checked feasible");
+    let assoc = Association::new(edge_of, m);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+// ---------------------------------------------------------------------
+// Dinic max-flow (unit/bulk capacities, tiny graphs).
+// ---------------------------------------------------------------------
+
+struct Dinic {
+    // edges: (to, cap); paired with reverse edge at idx ^ 1.
+    to: Vec<usize>,
+    cap: Vec<i64>,
+    head: Vec<Vec<usize>>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+    initial_cap: Vec<i64>,
+}
+
+impl Dinic {
+    fn new(nodes: usize) -> Dinic {
+        Dinic {
+            to: Vec::new(),
+            cap: Vec::new(),
+            head: vec![Vec::new(); nodes],
+            level: vec![0; nodes],
+            iter: vec![0; nodes],
+            initial_cap: Vec::new(),
+        }
+    }
+
+    /// Returns the arc index of the forward edge.
+    fn add_edge(&mut self, from: usize, to: usize, cap: i64) -> usize {
+        let idx = self.to.len();
+        self.to.push(to);
+        self.cap.push(cap);
+        self.initial_cap.push(cap);
+        self.head[from].push(idx);
+        self.to.push(from);
+        self.cap.push(0);
+        self.initial_cap.push(0);
+        self.head[to].push(idx + 1);
+        idx
+    }
+
+    fn arc_flow(&self, arc: usize) -> i64 {
+        self.initial_cap[arc] - self.cap[arc]
+    }
+
+    fn bfs(&mut self, src: usize, snk: usize) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut queue = std::collections::VecDeque::new();
+        self.level[src] = 0;
+        queue.push_back(src);
+        while let Some(v) = queue.pop_front() {
+            for &e in &self.head[v] {
+                if self.cap[e] > 0 && self.level[self.to[e]] < 0 {
+                    self.level[self.to[e]] = self.level[v] + 1;
+                    queue.push_back(self.to[e]);
+                }
+            }
+        }
+        self.level[snk] >= 0
+    }
+
+    fn dfs(&mut self, v: usize, snk: usize, f: i64) -> i64 {
+        if v == snk {
+            return f;
+        }
+        while self.iter[v] < self.head[v].len() {
+            let e = self.head[v][self.iter[v]];
+            let u = self.to[e];
+            if self.cap[e] > 0 && self.level[u] == self.level[v] + 1 {
+                let d = self.dfs(u, snk, f.min(self.cap[e]));
+                if d > 0 {
+                    self.cap[e] -= d;
+                    self.cap[e ^ 1] += d;
+                    return d;
+                }
+            }
+            self.iter[v] += 1;
+        }
+        0
+    }
+
+    fn max_flow(&mut self, src: usize, snk: usize) -> i64 {
+        let mut flow = 0;
+        while self.bfs(src, snk) {
+            self.iter.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let f = self.dfs(src, snk, i64::MAX);
+                if f == 0 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::{greedy, time_minimized};
+    use crate::net::{Channel, SystemParams, Topology};
+
+    fn table(edges: usize, ues: usize, seed: u64) -> (Topology, Channel, LatencyTable) {
+        let t = Topology::sample(&SystemParams::default(), edges, ues, seed);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let lt = LatencyTable::build(&t, &ch, 20.0);
+        (t, ch, lt)
+    }
+
+    #[test]
+    fn bnb_and_matching_agree() {
+        for seed in 0..5 {
+            let (_t, _ch, lt) = table(3, 9, seed);
+            let bnb = solve_exact_bnb(&lt, 4, None).unwrap();
+            let mat = solve_exact_matching(&lt, 4).unwrap();
+            let (o1, o2) = (lt.max_latency(&bnb), lt.max_latency(&mat));
+            assert!(
+                (o1 - o2).abs() < 1e-12,
+                "seed {seed}: bnb {o1} vs matching {o2}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_never_worse_than_heuristics() {
+        for seed in 0..5 {
+            let (_t, ch, lt) = table(3, 12, seed + 100);
+            let exact = solve_exact_matching(&lt, 5).unwrap();
+            let opt = lt.max_latency(&exact);
+            let g = greedy(&ch, 5).unwrap();
+            let p = time_minimized(&ch, 5).unwrap();
+            assert!(opt <= lt.max_latency(&g) + 1e-12);
+            assert!(opt <= lt.max_latency(&p) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn incumbent_seed_preserved_when_optimal() {
+        let (_t, _ch, lt) = table(2, 6, 11);
+        let exact = solve_exact_matching(&lt, 3).unwrap();
+        // Seeding B&B with the optimum returns something no worse.
+        let seeded = solve_exact_bnb(&lt, 3, Some(&exact)).unwrap();
+        assert!(lt.max_latency(&seeded) <= lt.max_latency(&exact) + 1e-12);
+    }
+
+    #[test]
+    fn matching_scales_to_hundreds() {
+        let (_t, _ch, lt) = table(5, 300, 13);
+        let a = solve_exact_matching(&lt, 100).unwrap();
+        a.validate(100).unwrap();
+    }
+
+    #[test]
+    fn infeasible_reported() {
+        let (_t, _ch, lt) = table(2, 10, 17);
+        assert!(solve_exact_bnb(&lt, 4, None).is_err());
+        assert!(solve_exact_matching(&lt, 4).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Greedy baseline (paper §V-C): each edge server in turn takes the
+//! still-available UEs with maximum SNR, up to the bandwidth cap.
+
+use super::Association;
+use crate::net::Channel;
+
+pub fn greedy(channel: &Channel, cap: usize) -> Result<Association, String> {
+    let (n_ues, n_edges) = (channel.num_ues, channel.num_edges);
+    if n_ues > n_edges * cap {
+        return Err(format!(
+            "infeasible: {n_ues} UEs > {n_edges} edges x capacity {cap}"
+        ));
+    }
+    let mut edge_of = vec![usize::MAX; n_ues];
+    let mut available: Vec<usize> = (0..n_ues).collect();
+    for m in 0..n_edges {
+        available.sort_by(|&a, &b| {
+            channel
+                .snr_of(b, m)
+                .partial_cmp(&channel.snr_of(a, m))
+                .unwrap()
+        });
+        let take = available.len().min(cap);
+        for &n in available.iter().take(take) {
+            edge_of[n] = m;
+        }
+        available.drain(..take);
+    }
+    debug_assert!(available.is_empty());
+    let assoc = Association::new(edge_of, n_edges);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Channel, SystemParams, Topology};
+
+    #[test]
+    fn feasible_and_complete() {
+        let t = Topology::sample(&SystemParams::default(), 5, 100, 2);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let a = greedy(&ch, 20).unwrap();
+        a.validate(20).unwrap();
+        assert!(a.edge_of.iter().all(|&m| m < 5));
+    }
+
+    #[test]
+    fn first_edge_gets_its_best_ues() {
+        let t = Topology::sample(&SystemParams::default(), 3, 30, 7);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let a = greedy(&ch, 20).unwrap();
+        // Every UE on edge 0 has SNR toward edge 0 at least as large as
+        // every UE NOT on edge 0 (they were taken first).
+        let on0: Vec<usize> = (0..30).filter(|&n| a.edge_of[n] == 0).collect();
+        let off0: Vec<usize> = (0..30).filter(|&n| a.edge_of[n] != 0).collect();
+        let min_on = on0
+            .iter()
+            .map(|&n| ch.snr_of(n, 0))
+            .fold(f64::INFINITY, f64::min);
+        let max_off = off0
+            .iter()
+            .map(|&n| ch.snr_of(n, 0))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(min_on >= max_off);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let t = Topology::sample(&SystemParams::default(), 1, 30, 9);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        assert!(greedy(&ch, 20).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Sub-problem II: UE-to-edge association (paper §IV-D).
+//!
+//! Four strategies, matching the paper's evaluation (§V-C):
+//!
+//! * [`proposed`] — Algorithm 3, the paper's time-minimized association;
+//! * [`greedy`] — per-edge max-SNR selection under the bandwidth cap;
+//! * [`random`] — uniform random assignment under the bandwidth cap;
+//! * [`bnb`] — exact solutions of the MILP epigraph form (39): a
+//!   branch-and-bound solver (the baseline the paper calls impractical)
+//!   plus a polynomial threshold-matching solver used to cross-check it.
+//!
+//! All strategies produce an [`Association`] that is validated against the
+//! paper's constraints (3)/(13c)–(13e).
+
+pub mod bnb;
+pub mod greedy;
+pub mod proposed;
+pub mod random;
+
+use crate::net::{Channel, Topology};
+
+pub use bnb::{solve_exact_bnb, solve_exact_matching};
+pub use greedy::greedy;
+pub use proposed::{time_minimized, time_minimized_claims};
+pub use random::random;
+
+/// A UE→edge association χ: `edge_of[n] = m` ⟺ χ_{n,m} = 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Association {
+    pub edge_of: Vec<usize>,
+    pub num_edges: usize,
+}
+
+impl Association {
+    pub fn new(edge_of: Vec<usize>, num_edges: usize) -> Association {
+        Association { edge_of, num_edges }
+    }
+
+    pub fn num_ues(&self) -> usize {
+        self.edge_of.len()
+    }
+
+    /// UEs per edge (|N_m| for every m).
+    pub fn load(&self) -> Vec<usize> {
+        let mut load = vec![0usize; self.num_edges];
+        for &m in &self.edge_of {
+            load[m] += 1;
+        }
+        load
+    }
+
+    /// The member set N_m for each edge.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut members = vec![Vec::new(); self.num_edges];
+        for (n, &m) in self.edge_of.iter().enumerate() {
+            members[m].push(n);
+        }
+        members
+    }
+
+    /// Check the paper's association constraints (3)/(13c)-(13e):
+    /// each UE on exactly one edge (by construction) and no edge above the
+    /// bandwidth capacity `cap` (`usize::MAX` disables the check).
+    pub fn validate(&self, cap: usize) -> Result<(), String> {
+        for (n, &m) in self.edge_of.iter().enumerate() {
+            if m >= self.num_edges {
+                return Err(format!("UE {n} mapped to nonexistent edge {m}"));
+            }
+        }
+        if cap != usize::MAX {
+            for (m, &k) in self.load().iter().enumerate() {
+                if k > cap {
+                    return Err(format!("edge {m} hosts {k} UEs > capacity {cap}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-link one-round latency `l_{n,m} = a·t_n^cmp + d_n / r_{n,m}` used by
+/// every association strategy (the objective of problem (38)).
+#[derive(Debug, Clone)]
+pub struct LatencyTable {
+    pub num_ues: usize,
+    pub num_edges: usize,
+    /// Row-major [ue][edge].
+    pub latency_s: Vec<f64>,
+}
+
+impl LatencyTable {
+    /// Build from a topology + channel for a given local-iteration count a.
+    pub fn build(topo: &Topology, channel: &Channel, a: f64) -> LatencyTable {
+        let (n, m) = (topo.num_ues(), topo.num_edges());
+        let mut lat = Vec::with_capacity(n * m);
+        for ue in &topo.ues {
+            let t_cmp = crate::delay::ue_compute_time(ue);
+            for em in 0..m {
+                let r = channel.rate_of(ue.id, em);
+                lat.push(a * t_cmp + ue.model_bits / r);
+            }
+        }
+        LatencyTable {
+            num_ues: n,
+            num_edges: m,
+            latency_s: lat,
+        }
+    }
+
+    #[inline]
+    pub fn of(&self, ue: usize, edge: usize) -> f64 {
+        self.latency_s[ue * self.num_edges + edge]
+    }
+
+    /// The min-max objective (38) for an association.
+    pub fn max_latency(&self, assoc: &Association) -> f64 {
+        assoc
+            .edge_of
+            .iter()
+            .enumerate()
+            .map(|(n, &m)| self.of(n, m))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{SystemParams, Topology};
+
+    fn setup() -> (Topology, Channel) {
+        let t = Topology::sample(&SystemParams::default(), 3, 12, 5);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        (t, ch)
+    }
+
+    #[test]
+    fn association_helpers() {
+        let a = Association::new(vec![0, 1, 1, 2, 0], 3);
+        assert_eq!(a.load(), vec![2, 2, 1]);
+        assert_eq!(a.members()[1], vec![1, 2]);
+        assert!(a.validate(2).is_ok());
+        assert!(a.validate(1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_edge() {
+        let a = Association::new(vec![0, 7], 3);
+        assert!(a.validate(usize::MAX).is_err());
+    }
+
+    #[test]
+    fn latency_table_positive_and_sane() {
+        let (t, ch) = setup();
+        let lt = LatencyTable::build(&t, &ch, 10.0);
+        for n in 0..lt.num_ues {
+            for m in 0..lt.num_edges {
+                assert!(lt.of(n, m) > 0.0);
+            }
+        }
+        // More local iterations => strictly larger link latency.
+        let lt2 = LatencyTable::build(&t, &ch, 20.0);
+        assert!(lt2.of(0, 0) > lt.of(0, 0));
+    }
+
+    #[test]
+    fn max_latency_is_max() {
+        let (t, ch) = setup();
+        let lt = LatencyTable::build(&t, &ch, 5.0);
+        let assoc = Association::new(vec![0; 12], 3);
+        let expect = (0..12).map(|n| lt.of(n, 0)).fold(0.0, f64::max);
+        assert_eq!(lt.max_latency(&assoc), expect);
+    }
+}

@@ -1,0 +1,276 @@
+//! Algorithm 3 — the paper's time-minimized UE-to-edge association.
+//!
+//! The paper's pseudo-code is terse; two readings are implemented and
+//! compared (`benches/assoc_optimality.rs`, EXPERIMENTS.md §Deviations):
+//!
+//! * [`time_minimized`] (primary) — **global-SNR-order assignment**: walk
+//!   all (UE, edge) pairs by decreasing uplink SNR `g_{n,m} p_n / N_0`
+//!   and assign each UE the first time it appears, respecting the
+//!   per-edge bandwidth capacity. This operationalizes the paper's
+//!   "the UE n' and edge server m' with largest uplink channel SNR are
+//!   chosen" selection rule, which the conflict-resolution loop keeps
+//!   applying until a fixed point; it reproduces the paper's Fig. 5
+//!   ordering (proposed < greedy < random) and lands within a few
+//!   percent of the exact matching optimum.
+//! * [`time_minimized_claims`] (literal) — the line-by-line reading:
+//!   every edge claims its top-SNR UEs, then double-claims are resolved
+//!   pairwise as written. On our topologies this variant does NOT beat
+//!   per-edge greedy (it strands bottleneck UEs on whichever edge
+//!   claimed them), which is why it is kept only as an ablation.
+//!
+//! `refine_swaps` adds an optional 1-move local search on the min-max
+//! latency objective (38) — an extension, off by default.
+
+use super::{Association, LatencyTable};
+use crate::net::Channel;
+
+/// Primary Algorithm 3: global-SNR-order assignment under capacity `cap`.
+///
+/// Returns an error when the instance is infeasible (`N > M·cap`).
+pub fn time_minimized(channel: &Channel, cap: usize) -> Result<Association, String> {
+    let (n_ues, n_edges) = (channel.num_ues, channel.num_edges);
+    if n_ues > n_edges * cap {
+        return Err(format!(
+            "infeasible: {n_ues} UEs > {n_edges} edges x capacity {cap}"
+        ));
+    }
+    // Sort all links by SNR descending (paper line 1: "sort g p / N0").
+    let mut pairs: Vec<u32> = (0..(n_ues * n_edges) as u32).collect();
+    pairs.sort_by(|&p, &q| {
+        let (pn, pm) = ((p as usize) / n_edges, (p as usize) % n_edges);
+        let (qn, qm) = ((q as usize) / n_edges, (q as usize) % n_edges);
+        channel
+            .snr_of(qn, qm)
+            .partial_cmp(&channel.snr_of(pn, pm))
+            .unwrap()
+    });
+    let mut edge_of = vec![usize::MAX; n_ues];
+    let mut load = vec![0usize; n_edges];
+    let mut assigned = 0usize;
+    for p in pairs {
+        let (n, m) = ((p as usize) / n_edges, (p as usize) % n_edges);
+        if edge_of[n] == usize::MAX && load[m] < cap {
+            edge_of[n] = m;
+            load[m] += 1;
+            assigned += 1;
+            if assigned == n_ues {
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(assigned, n_ues, "capacity check guarantees completion");
+    let assoc = Association::new(edge_of, n_edges);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+/// Literal claims-then-conflict-resolution reading of Algorithm 3
+/// (ablation; see module docs).
+pub fn time_minimized_claims(channel: &Channel, cap: usize) -> Result<Association, String> {
+    let (n_ues, n_edges) = (channel.num_ues, channel.num_edges);
+    if n_ues > n_edges * cap {
+        return Err(format!(
+            "infeasible: {n_ues} UEs > {n_edges} edges x capacity {cap}"
+        ));
+    }
+
+    // claimed_by[n] = edges currently claiming UE n.
+    let mut sets: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
+    let mut claimed_by: Vec<Vec<usize>> = vec![Vec::new(); n_ues];
+
+    // Line 1-3: each edge claims "the N_m UEs with largest SNR" — read as
+    // the balanced member-set size, capped by the bandwidth constraint.
+    let claim = n_ues.div_ceil(n_edges).min(cap);
+    for m in 0..n_edges {
+        let mut order: Vec<usize> = (0..n_ues).collect();
+        order.sort_by(|&a, &b| {
+            channel
+                .snr_of(b, m)
+                .partial_cmp(&channel.snr_of(a, m))
+                .unwrap()
+        });
+        for &n in order.iter().take(claim) {
+            sets[m].push(n);
+            claimed_by[n].push(m);
+        }
+    }
+
+    // Line 4-8: resolve double claims.
+    loop {
+        let Some((ue, mi, mj)) = claimed_by.iter().enumerate().find_map(|(n, ms)| {
+            (ms.len() >= 2).then(|| (n, ms[ms.len() - 1], ms[ms.len() - 2]))
+        }) else {
+            break;
+        };
+        // Candidate pool: UEs claimed by nobody.
+        let pool: Vec<usize> = (0..n_ues).filter(|&n| claimed_by[n].is_empty()).collect();
+        if pool.is_empty() {
+            // No replacement: keep the UE on its better-SNR edge
+            // (deterministic tie-break the paper leaves implicit).
+            let keep = if channel.snr_of(ue, mi) >= channel.snr_of(ue, mj) {
+                mi
+            } else {
+                mj
+            };
+            let drop = if keep == mi { mj } else { mi };
+            sets[drop].retain(|&x| x != ue);
+            claimed_by[ue].retain(|&m| m != drop);
+            continue;
+        }
+        // (n', m') = argmax SNR over pool x {mi, mj}.
+        let (mut best, mut best_snr) = ((pool[0], mi), f64::NEG_INFINITY);
+        for &n in &pool {
+            for &m in &[mi, mj] {
+                let s = channel.snr_of(n, m);
+                if s > best_snr {
+                    best_snr = s;
+                    best = (n, m);
+                }
+            }
+        }
+        let (n_new, m_new) = best;
+        sets[m_new].retain(|&x| x != ue);
+        claimed_by[ue].retain(|&m| m != m_new);
+        sets[m_new].push(n_new);
+        claimed_by[n_new].push(m_new);
+    }
+
+    // Assign leftovers to their best-SNR edge with spare capacity.
+    let mut edge_of = vec![usize::MAX; n_ues];
+    for (m, set) in sets.iter().enumerate() {
+        for &n in set {
+            edge_of[n] = m;
+        }
+    }
+    let mut load: Vec<usize> = sets.iter().map(Vec::len).collect();
+    for n in 0..n_ues {
+        if edge_of[n] != usize::MAX {
+            continue;
+        }
+        let m = (0..n_edges)
+            .filter(|&m| load[m] < cap)
+            .max_by(|&a, &b| {
+                channel
+                    .snr_of(n, a)
+                    .partial_cmp(&channel.snr_of(n, b))
+                    .unwrap()
+            })
+            .ok_or_else(|| "no edge with spare capacity".to_string())?;
+        edge_of[n] = m;
+        load[m] += 1;
+    }
+
+    let assoc = Association::new(edge_of, n_edges);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+/// Extension (ablation): greedy 1-move local search on the min-max
+/// latency objective (38), starting from any feasible association.
+/// Repeatedly relocates a bottleneck UE to the edge that most reduces the
+/// system maximum, until a fixed point.
+pub fn refine_swaps(
+    assoc: &Association,
+    table: &LatencyTable,
+    cap: usize,
+    max_rounds: usize,
+) -> Association {
+    let mut cur = assoc.clone();
+    let mut load = cur.load();
+    for _ in 0..max_rounds {
+        // Locate the bottleneck UE.
+        let (bott_ue, bott_lat) = cur
+            .edge_of
+            .iter()
+            .enumerate()
+            .map(|(n, &m)| (n, table.of(n, m)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        // Try moving it to its best edge among those with spare capacity.
+        let from = cur.edge_of[bott_ue];
+        let best = (0..cur.num_edges)
+            .filter(|&m| m != from && load[m] < cap)
+            .min_by(|&a, &b| {
+                table
+                    .of(bott_ue, a)
+                    .partial_cmp(&table.of(bott_ue, b))
+                    .unwrap()
+            });
+        match best {
+            Some(m) if table.of(bott_ue, m) < bott_lat => {
+                cur.edge_of[bott_ue] = m;
+                load[from] -= 1;
+                load[m] += 1;
+            }
+            _ => break, // bottleneck cannot improve: fixed point
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Channel, SystemParams, Topology};
+
+    fn setup(edges: usize, ues: usize, seed: u64) -> (Topology, Channel) {
+        let t = Topology::sample(&SystemParams::default(), edges, ues, seed);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        (t, ch)
+    }
+
+    #[test]
+    fn produces_feasible_association() {
+        let (_t, ch) = setup(5, 100, 1);
+        for a in [time_minimized(&ch, 20).unwrap(), time_minimized_claims(&ch, 20).unwrap()] {
+            a.validate(20).unwrap();
+            assert_eq!(a.num_ues(), 100);
+        }
+    }
+
+    #[test]
+    fn infeasible_when_over_capacity() {
+        let (_t, ch) = setup(2, 50, 2);
+        assert!(time_minimized(&ch, 20).is_err());
+        assert!(time_minimized_claims(&ch, 20).is_err());
+    }
+
+    #[test]
+    fn tight_capacity_fills_exactly() {
+        let (_t, ch) = setup(5, 100, 3);
+        assert_eq!(time_minimized(&ch, 20).unwrap().load(), vec![20; 5]);
+        assert_eq!(time_minimized_claims(&ch, 20).unwrap().load(), vec![20; 5]);
+    }
+
+    #[test]
+    fn slack_capacity_ok() {
+        let (_t, ch) = setup(8, 40, 4);
+        time_minimized(&ch, 20).unwrap().validate(20).unwrap();
+        time_minimized_claims(&ch, 20).unwrap().validate(20).unwrap();
+    }
+
+    #[test]
+    fn global_order_beats_greedy_on_average() {
+        // The property the paper claims in Fig. 5 — averaged over seeds.
+        let mut prop = 0.0;
+        let mut greedy = 0.0;
+        for seed in 0..10u64 {
+            let (t, ch) = setup(8, 100, 100 + seed);
+            let table = LatencyTable::build(&t, &ch, 20.0);
+            prop += table.max_latency(&time_minimized(&ch, 20).unwrap());
+            greedy += table.max_latency(&crate::assoc::greedy(&ch, 20).unwrap());
+        }
+        assert!(prop < greedy, "proposed {prop} vs greedy {greedy}");
+    }
+
+    #[test]
+    fn refine_never_worsens() {
+        let (t, ch) = setup(5, 100, 5);
+        let a = time_minimized(&ch, 20).unwrap();
+        let table = LatencyTable::build(&t, &ch, 20.0);
+        let before = table.max_latency(&a);
+        let refined = refine_swaps(&a, &table, 20, 1000);
+        refined.validate(20).unwrap();
+        assert!(table.max_latency(&refined) <= before + 1e-12);
+    }
+}

@@ -1,0 +1,67 @@
+//! Random-association baseline (paper §V-C): UEs are assigned uniformly
+//! at random among edges with remaining bandwidth capacity.
+
+use super::Association;
+use crate::util::Rng;
+
+pub fn random(
+    num_ues: usize,
+    num_edges: usize,
+    cap: usize,
+    rng: &mut Rng,
+) -> Result<Association, String> {
+    if num_ues > num_edges * cap {
+        return Err(format!(
+            "infeasible: {num_ues} UEs > {num_edges} edges x capacity {cap}"
+        ));
+    }
+    let mut load = vec![0usize; num_edges];
+    let mut edge_of = vec![0usize; num_ues];
+    // Shuffle UE order so capacity pressure is not biased toward low ids.
+    let order = rng.permutation(num_ues);
+    for n in order {
+        let open: Vec<usize> = (0..num_edges).filter(|&m| load[m] < cap).collect();
+        let m = *rng.choose(&open);
+        edge_of[n] = m;
+        load[m] += 1;
+    }
+    let assoc = Association::new(edge_of, num_edges);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_and_deterministic_per_seed() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let a = random(100, 5, 20, &mut r1).unwrap();
+        let b = random(100, 5, 20, &mut r2).unwrap();
+        assert_eq!(a, b);
+        a.validate(20).unwrap();
+    }
+
+    #[test]
+    fn tight_instance_fills_all_edges() {
+        let mut rng = Rng::new(1);
+        let a = random(100, 5, 20, &mut rng).unwrap();
+        assert_eq!(a.load(), vec![20; 5]);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut rng = Rng::new(1);
+        assert!(random(101, 5, 20, &mut rng).is_err());
+    }
+
+    #[test]
+    fn spreads_across_edges() {
+        let mut rng = Rng::new(5);
+        let a = random(200, 10, 100, &mut rng).unwrap();
+        let load = a.load();
+        assert!(load.iter().all(|&l| l > 0), "load {load:?}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI argument parser (offline substitute for `clap`).
+//!
+//! Grammar: `hfl <subcommand> [--key value]... [--flag]...`.
+//! Values are parsed on demand (`f64`, `u64`, `usize`, `String`), unknown
+//! keys are rejected up front so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("expected --option, got '{tok}'")))?
+                .to_string();
+            if key.is_empty() {
+                return Err(CliError("empty option name".into()));
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let val = it.next().unwrap();
+                    args.kv.insert(key, val);
+                }
+                _ => args.flags.push(key),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        let found = self.flags.iter().any(|f| f == name);
+        if found {
+            self.consumed.borrow_mut().push(name.to_string());
+        }
+        found
+    }
+
+    pub fn str(&self, name: &str) -> Option<String> {
+        let v = self.kv.get(name).cloned();
+        if v.is_some() {
+            self.consumed.borrow_mut().push(name.to_string());
+        }
+        v
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("cannot parse --{name} value '{s}'"))),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        Ok(self.get(name)?.unwrap_or(default))
+    }
+
+    /// After all lookups, reject options nobody consumed (typo guard).
+    pub fn reject_unknown(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError(format!("unknown options: {unknown:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("train --eps 0.25 --edges 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get::<f64>("eps").unwrap(), Some(0.25));
+        assert_eq!(a.get_or::<usize>("edges", 1).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = parse("simulate");
+        assert_eq!(a.get_or::<u64>("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let a = parse("x --eps banana");
+        assert!(a.get::<f64>("eps").is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("x --epss 0.1");
+        let _ = a.get::<f64>("eps");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--eps 0.1");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get::<f64>("eps").unwrap(), Some(0.1));
+    }
+}

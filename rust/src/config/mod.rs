@@ -1,0 +1,380 @@
+//! Scenario configuration: defaults (paper §V-A) + TOML file + CLI
+//! overrides, in that precedence order.
+
+pub mod cli;
+
+use crate::net::{BandwidthPolicy, SystemParams};
+use crate::util::toml::TomlDoc;
+
+pub use cli::Args;
+
+/// Which association strategy a scenario uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssocStrategy {
+    /// Algorithm 3 (the paper's proposal).
+    Proposed,
+    /// Greedy max-SNR baseline.
+    Greedy,
+    /// Random baseline.
+    Random,
+    /// Exact (threshold + matching) solver.
+    Exact,
+}
+
+impl AssocStrategy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "proposed" | "alg3" => Ok(AssocStrategy::Proposed),
+            "greedy" => Ok(AssocStrategy::Greedy),
+            "random" => Ok(AssocStrategy::Random),
+            "exact" | "matching" => Ok(AssocStrategy::Exact),
+            other => Err(format!(
+                "unknown association strategy '{other}' (proposed|greedy|random|exact)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AssocStrategy::Proposed => "proposed",
+            AssocStrategy::Greedy => "greedy",
+            AssocStrategy::Random => "random",
+            AssocStrategy::Exact => "exact",
+        }
+    }
+}
+
+/// Training-loop knobs for the `train` subcommand / FL engine.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Learning rate of the local GD steps.
+    pub lr: f32,
+    /// Cloud rounds to run (training curves use a fixed horizon).
+    pub cloud_rounds: u64,
+    /// Local iterations per edge round (a). `None` = take from optimizer.
+    pub a: Option<u64>,
+    /// Edge rounds per cloud round (b). `None` = take from optimizer.
+    pub b: Option<u64>,
+    /// Samples per UE for the training set.
+    pub samples_per_ue: usize,
+    /// Held-out test samples.
+    pub test_samples: usize,
+    /// Dirichlet concentration for non-IID partitioning (0 = IID).
+    pub dirichlet_alpha: f64,
+    /// Worker threads for parallel UE steps (0 = num_cpus).
+    pub workers: usize,
+    /// Local solver: "gd" (paper) or "dane" (gradient-corrected).
+    pub solver: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 0.05,
+            cloud_rounds: 10,
+            a: None,
+            b: None,
+            samples_per_ue: 256,
+            test_samples: 2048,
+            dirichlet_alpha: 0.0,
+            workers: 0,
+            solver: "gd".to_string(),
+        }
+    }
+}
+
+/// A complete scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub system: SystemParams,
+    pub num_edges: usize,
+    pub num_ues: usize,
+    /// Target global accuracy ε.
+    pub eps: f64,
+    pub seed: u64,
+    pub assoc: AssocStrategy,
+    pub bandwidth_policy: BandwidthPolicy,
+    pub train: TrainConfig,
+    /// Directory for artifacts (HLO + init params + meta).
+    pub artifacts_dir: String,
+    /// Directory for result CSV/JSON.
+    pub results_dir: String,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            system: SystemParams::default(),
+            num_edges: 5,
+            num_ues: 100,
+            eps: 0.25,
+            seed: 42,
+            assoc: AssocStrategy::Proposed,
+            bandwidth_policy: BandwidthPolicy::FixedPerUe,
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+            results_dir: "results".to_string(),
+        }
+    }
+}
+
+impl Scenario {
+    /// Load from a TOML file then apply CLI overrides.
+    pub fn load(path: Option<&str>, args: &Args) -> Result<Scenario, String> {
+        let mut sc = Scenario::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+            let doc = TomlDoc::parse(&text).map_err(|e| e.to_string())?;
+            sc.apply_toml(&doc)?;
+        }
+        sc.apply_args(args).map_err(|e| e.to_string())?;
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        // [scenario]
+        if let Some(v) = doc.i64("scenario", "num_edges") {
+            self.num_edges = v as usize;
+        }
+        if let Some(v) = doc.i64("scenario", "num_ues") {
+            self.num_ues = v as usize;
+        }
+        if let Some(v) = doc.f64("scenario", "eps") {
+            self.eps = v;
+        }
+        if let Some(v) = doc.i64("scenario", "seed") {
+            self.seed = v as u64;
+        }
+        if let Some(s) = doc.str("scenario", "assoc") {
+            self.assoc = AssocStrategy::parse(s)?;
+        }
+        if let Some(s) = doc.str("scenario", "bandwidth_policy") {
+            self.bandwidth_policy = match s {
+                "equal_share" => BandwidthPolicy::EqualShare,
+                "fixed" => BandwidthPolicy::FixedPerUe,
+                other => return Err(format!("unknown bandwidth policy '{other}'")),
+            };
+        }
+        // [system]
+        let sys = &mut self.system;
+        let set = |key: &str, field: &mut f64| {
+            if let Some(v) = doc.f64("system", key) {
+                *field = v;
+            }
+        };
+        set("area_m", &mut sys.area_m);
+        set("carrier_hz", &mut sys.carrier_hz);
+        set("noise_dbm_per_hz", &mut sys.noise_dbm_per_hz);
+        set("edge_bandwidth_hz", &mut sys.edge_bandwidth_hz);
+        set("ue_bandwidth_hz", &mut sys.ue_bandwidth_hz);
+        set("f_max_hz", &mut sys.f_max_hz);
+        set("p_max_dbm", &mut sys.p_max_dbm);
+        set("model_bits", &mut sys.model_bits);
+        set("edge_model_bits", &mut sys.edge_model_bits);
+        set("edge_cloud_rate_bps", &mut sys.edge_cloud_rate_bps);
+        set("gamma", &mut sys.gamma);
+        set("zeta", &mut sys.zeta);
+        set("c_const", &mut sys.c_const);
+        if let Some(model) = doc.str("system", "path_loss") {
+            sys.path_loss = match model {
+                "free_space" => crate::net::topology::PathLossModel::FreeSpace,
+                "log_distance" => crate::net::topology::PathLossModel::LogDistance {
+                    exponent: doc.f64("system", "path_loss_exponent").unwrap_or(3.0),
+                    ref_dist_m: doc.f64("system", "path_loss_ref_dist_m").unwrap_or(10.0),
+                },
+                other => return Err(format!("unknown path_loss '{other}'")),
+            };
+        }
+        if let Some(fad) = doc.str("system", "fading") {
+            sys.fading = match fad {
+                "none" => crate::net::topology::FadingModel::None,
+                "rayleigh" => crate::net::topology::FadingModel::Rayleigh {
+                    seed: doc.i64("system", "fading_seed").unwrap_or(0) as u64,
+                },
+                other => return Err(format!("unknown fading '{other}'")),
+            };
+        }
+        // [train]
+        let tr = &mut self.train;
+        if let Some(v) = doc.f64("train", "lr") {
+            tr.lr = v as f32;
+        }
+        if let Some(v) = doc.i64("train", "cloud_rounds") {
+            tr.cloud_rounds = v as u64;
+        }
+        if let Some(v) = doc.i64("train", "a") {
+            tr.a = Some(v as u64);
+        }
+        if let Some(v) = doc.i64("train", "b") {
+            tr.b = Some(v as u64);
+        }
+        if let Some(v) = doc.i64("train", "samples_per_ue") {
+            tr.samples_per_ue = v as usize;
+        }
+        if let Some(v) = doc.i64("train", "test_samples") {
+            tr.test_samples = v as usize;
+        }
+        if let Some(v) = doc.f64("train", "dirichlet_alpha") {
+            tr.dirichlet_alpha = v;
+        }
+        if let Some(v) = doc.i64("train", "workers") {
+            tr.workers = v as usize;
+        }
+        if let Some(s) = doc.str("train", "solver") {
+            tr.solver = s.to_string();
+        }
+        // [paths]
+        if let Some(s) = doc.str("paths", "artifacts_dir") {
+            self.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = doc.str("paths", "results_dir") {
+            self.results_dir = s.to_string();
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), cli::CliError> {
+        if let Some(v) = args.get::<usize>("edges")? {
+            self.num_edges = v;
+        }
+        if let Some(v) = args.get::<usize>("ues")? {
+            self.num_ues = v;
+        }
+        if let Some(v) = args.get::<f64>("eps")? {
+            self.eps = v;
+        }
+        if let Some(v) = args.get::<u64>("seed")? {
+            self.seed = v;
+        }
+        if let Some(s) = args.str("assoc") {
+            self.assoc = AssocStrategy::parse(&s).map_err(cli::CliError)?;
+        }
+        if let Some(v) = args.get::<f32>("lr")? {
+            self.train.lr = v;
+        }
+        if let Some(v) = args.get::<u64>("cloud-rounds")? {
+            self.train.cloud_rounds = v;
+        }
+        if let Some(v) = args.get::<u64>("a")? {
+            self.train.a = Some(v);
+        }
+        if let Some(v) = args.get::<u64>("b")? {
+            self.train.b = Some(v);
+        }
+        if let Some(v) = args.get::<usize>("samples-per-ue")? {
+            self.train.samples_per_ue = v;
+        }
+        if let Some(v) = args.get::<usize>("test-samples")? {
+            self.train.test_samples = v;
+        }
+        if let Some(v) = args.get::<f64>("dirichlet-alpha")? {
+            self.train.dirichlet_alpha = v;
+        }
+        if let Some(v) = args.get::<usize>("workers")? {
+            self.train.workers = v;
+        }
+        if let Some(s) = args.str("solver") {
+            self.train.solver = s;
+        }
+        if let Some(s) = args.str("artifacts-dir") {
+            self.artifacts_dir = s;
+        }
+        if let Some(s) = args.str("results-dir") {
+            self.results_dir = s;
+        }
+        if let Some(v) = args.get::<f64>("gamma")? {
+            self.system.gamma = v;
+        }
+        if let Some(v) = args.get::<f64>("zeta")? {
+            self.system.zeta = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_edges == 0 || self.num_ues == 0 {
+            return Err("need at least one edge and one UE".into());
+        }
+        if !(0.0 < self.eps && self.eps < 1.0) {
+            return Err(format!("eps must be in (0,1), got {}", self.eps));
+        }
+        if self.system.gamma <= 0.0 || self.system.zeta <= 0.0 {
+            return Err("gamma/zeta must be positive".into());
+        }
+        if self.bandwidth_policy == BandwidthPolicy::FixedPerUe
+            && self.num_ues > self.num_edges * self.system.edge_capacity()
+        {
+            return Err(format!(
+                "infeasible: {} UEs exceed {} edges x {} capacity",
+                self.num_ues,
+                self.num_edges,
+                self.system.edge_capacity()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn defaults_are_papers() {
+        let sc = Scenario::default();
+        assert_eq!(sc.num_edges, 5);
+        assert_eq!(sc.num_ues, 100);
+        assert_eq!(sc.eps, 0.25);
+        assert_eq!(sc.system.area_m, 500.0);
+        sc.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = TomlDoc::parse(
+            "[scenario]\nnum_edges = 7\neps = 0.1\nassoc = \"greedy\"\n[system]\ngamma = 3\n[train]\nlr = 0.1\na = 35",
+        )
+        .unwrap();
+        let mut sc = Scenario::default();
+        sc.apply_toml(&doc).unwrap();
+        assert_eq!(sc.num_edges, 7);
+        assert_eq!(sc.eps, 0.1);
+        assert_eq!(sc.assoc, AssocStrategy::Greedy);
+        assert_eq!(sc.system.gamma, 3.0);
+        assert_eq!(sc.train.lr, 0.1);
+        assert_eq!(sc.train.a, Some(35));
+    }
+
+    #[test]
+    fn cli_overrides_beat_defaults() {
+        let mut sc = Scenario::default();
+        sc.apply_args(&args("--edges 9 --eps 0.05 --assoc random")).unwrap();
+        assert_eq!(sc.num_edges, 9);
+        assert_eq!(sc.eps, 0.05);
+        assert_eq!(sc.assoc, AssocStrategy::Random);
+    }
+
+    #[test]
+    fn validation_catches_infeasible() {
+        let mut sc = Scenario::default();
+        sc.num_ues = 10_000; // over 5 edges x 20 capacity
+        assert!(sc.validate().is_err());
+        sc = Scenario::default();
+        sc.eps = 1.5;
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(
+            AssocStrategy::parse("alg3").unwrap(),
+            AssocStrategy::Proposed
+        );
+        assert!(AssocStrategy::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! The production HFL runtime: cloud leader + edge actor threads.
+//!
+//! Topology-faithful implementation of Algorithm 1: one OS thread per
+//! edge server (the paper's edges aggregate independently and in
+//! parallel), each running its `b` edge rounds over a UE worker pool
+//! (`worker.rs`), reporting aggregates to the cloud leader over mpsc
+//! channels. The leader performs the cloud aggregation (Eq. (10)),
+//! evaluates the global model, stamps simulated protocol time from the
+//! delay model, and broadcasts the next round's global model.
+//!
+//! Determinism: for a given seed this runtime produces bitwise the same
+//! models as the sequential `fl::HflEngine` (asserted in
+//! `rust/tests/runtime_integration.rs`), because member order fixes the
+//! aggregation order and UE streams are keyed by UE id.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::messages::{CloudMsg, EdgeReport};
+use super::worker::{parallel_gradients, parallel_local_rounds};
+use crate::data::Dataset;
+use crate::fl::aggregate::{cloud_aggregate, weighted_average};
+use crate::fl::metrics::{CurvePoint, TrainingCurve};
+use crate::fl::{LocalSolver, TrainRun, UeState};
+use crate::runtime::Engine;
+
+/// Result of a coordinated training run.
+#[derive(Debug)]
+pub struct HflOutcome {
+    pub curve: TrainingCurve,
+    pub final_model: Vec<f32>,
+    /// Wall-clock seconds of the whole run.
+    pub wall_s: f64,
+}
+
+/// Edge actor main loop: owns its members' states for the whole run.
+fn edge_actor(
+    engine: &Engine,
+    solver: LocalSolver,
+    edge_id: usize,
+    mut members: Vec<UeState>,
+    b: u64,
+    a: u64,
+    workers: usize,
+    rx: mpsc::Receiver<CloudMsg>,
+    tx: mpsc::Sender<EdgeReport>,
+) {
+    let data_size: u64 = members.iter().map(|u| u.data_size()).sum();
+    while let Ok(msg) = rx.recv() {
+        let (round, global) = match msg {
+            CloudMsg::Shutdown => return,
+            CloudMsg::RunRound { round, global } => (round, global),
+        };
+        let mut w_m = global;
+        let mut loss_acc = 0.0f64;
+        let mut loss_cnt = 0usize;
+        let mut error = None;
+        'rounds: for _k in 0..b {
+            // DANE corrections if requested.
+            let corrections: Vec<Vec<f32>> = if matches!(solver, LocalSolver::Dane { .. }) {
+                match parallel_gradients(engine, &w_m, &mut members, workers) {
+                    Ok(grads) => {
+                        let weights: Vec<(f64, &[f32])> = members
+                            .iter()
+                            .zip(&grads)
+                            .map(|(u, g)| (u.data_size() as f64, g.as_slice()))
+                            .collect();
+                        let global_grad = weighted_average(&weights);
+                        grads
+                            .iter()
+                            .map(|g| global_grad.iter().zip(g).map(|(gg, gn)| gg - gn).collect())
+                            .collect()
+                    }
+                    Err(e) => {
+                        error = Some(e.to_string());
+                        break 'rounds;
+                    }
+                }
+            } else {
+                vec![Vec::new(); members.len()]
+            };
+            match parallel_local_rounds(engine, &solver, &w_m, &mut members, a, &corrections, workers)
+            {
+                Ok(results) => {
+                    let refs: Vec<(f64, &[f32])> = results
+                        .iter()
+                        .map(|r| (r.data_size as f64, r.model.as_slice()))
+                        .collect();
+                    w_m = weighted_average(&refs);
+                    loss_acc += results.iter().map(|r| r.loss as f64).sum::<f64>()
+                        / results.len().max(1) as f64;
+                    loss_cnt += 1;
+                }
+                Err(e) => {
+                    error = Some(e.to_string());
+                    break 'rounds;
+                }
+            }
+        }
+        let report = EdgeReport {
+            edge: edge_id,
+            round,
+            model: w_m,
+            data_size,
+            mean_loss: (loss_acc / loss_cnt.max(1) as f64) as f32,
+            error,
+        };
+        if tx.send(report).is_err() {
+            return; // leader gone
+        }
+    }
+}
+
+/// Run hierarchical FL with the threaded coordinator.
+///
+/// `shards[i]` is UE i's local dataset; `members[m]` lists the UE ids of
+/// edge m (the association); `workers` bounds the per-edge UE thread pool
+/// (0 = available parallelism / #edges, at least 1).
+#[allow(clippy::too_many_arguments)]
+pub fn run_hfl(
+    engine: &Engine,
+    solver: LocalSolver,
+    shards: Vec<Dataset>,
+    members: Vec<Vec<usize>>,
+    test: &Dataset,
+    run: &TrainRun,
+    workers: usize,
+    seed: u64,
+) -> Result<HflOutcome> {
+    let num_edges = members.len();
+    if num_edges == 0 {
+        bail!("no edges");
+    }
+    let n_ues = shards.len();
+    for (m, ms) in members.iter().enumerate() {
+        for &n in ms {
+            if n >= n_ues {
+                bail!("edge {m} references UE {n} >= {n_ues}");
+            }
+        }
+    }
+    let workers = if workers == 0 {
+        (std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4) / num_edges).max(1)
+    } else {
+        workers
+    };
+
+    // Move each UE's state into its edge, preserving global UE-id seeding.
+    let mut shard_opts: Vec<Option<Dataset>> = shards.into_iter().map(Some).collect();
+    let mut edge_states: Vec<Vec<UeState>> = Vec::with_capacity(num_edges);
+    for ms in &members {
+        let states = ms
+            .iter()
+            .map(|&n| {
+                let shard = shard_opts[n]
+                    .take()
+                    .ok_or_else(|| anyhow!("UE {n} assigned to two edges"))?;
+                Ok(UeState::seeded(shard, n, seed))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        edge_states.push(states);
+    }
+
+    let t0 = std::time::Instant::now();
+    let (report_tx, report_rx) = mpsc::channel::<EdgeReport>();
+
+    let mut curve = TrainingCurve::new(run.a, run.b);
+    let mut final_model = engine.init_params();
+
+    std::thread::scope(|scope| -> Result<()> {
+        // Spawn edge actors.
+        let mut cmd_txs = Vec::with_capacity(num_edges);
+        for (m, states) in edge_states.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<CloudMsg>();
+            cmd_txs.push(tx);
+            let report_tx = report_tx.clone();
+            let solver = solver;
+            scope.spawn(move || {
+                edge_actor(engine, solver, m, states, run.b, run.a, workers, rx, report_tx)
+            });
+        }
+        drop(report_tx);
+
+        // Leader loop.
+        let mut global = engine.init_params();
+        let (loss0, acc0) = engine.evaluate(&global, &test.x, &test.y)?;
+        curve.push(CurvePoint {
+            cloud_round: 0,
+            sim_time_s: 0.0,
+            wall_s: t0.elapsed().as_secs_f64(),
+            test_acc: acc0,
+            test_loss: loss0,
+            train_loss: f32::NAN,
+        });
+
+        for round in 1..=run.cloud_rounds {
+            for tx in &cmd_txs {
+                tx.send(CloudMsg::RunRound {
+                    round,
+                    global: global.clone(),
+                })
+                .map_err(|_| anyhow!("edge actor exited early"))?;
+            }
+            // Collect all edge reports for this round (order-independent:
+            // stored by edge id, aggregated in edge order).
+            let mut reports: Vec<Option<EdgeReport>> = (0..num_edges).map(|_| None).collect();
+            let mut received = 0;
+            while received < num_edges {
+                let rep = report_rx
+                    .recv()
+                    .map_err(|_| anyhow!("all edge actors exited"))?;
+                if rep.round != round {
+                    bail!("edge {} reported round {} during {round}", rep.edge, rep.round);
+                }
+                if let Some(err) = &rep.error {
+                    bail!("edge {} failed: {err}", rep.edge);
+                }
+                let slot = rep.edge;
+                if reports[slot].replace(rep).is_some() {
+                    bail!("duplicate report from edge {slot}");
+                }
+                received += 1;
+            }
+            let collected: Vec<EdgeReport> =
+                reports.into_iter().map(|r| r.expect("filled")).collect();
+            let refs: Vec<(u64, &[f32])> = collected
+                .iter()
+                .filter(|r| r.data_size > 0)
+                .map(|r| (r.data_size, r.model.as_slice()))
+                .collect();
+            if refs.is_empty() {
+                bail!("no edge contributed data");
+            }
+            global = cloud_aggregate(&refs);
+            let mean_loss = collected.iter().map(|r| r.mean_loss as f64).sum::<f64>()
+                / collected.len() as f64;
+
+            if round % run.eval_every == 0 || round == run.cloud_rounds {
+                let (loss, acc) = engine.evaluate(&global, &test.x, &test.y)?;
+                curve.push(CurvePoint {
+                    cloud_round: round,
+                    sim_time_s: round as f64 * run.round_time_s,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    test_acc: acc,
+                    test_loss: loss,
+                    train_loss: mean_loss as f32,
+                });
+            }
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(CloudMsg::Shutdown);
+        }
+        final_model = global;
+        Ok(())
+    })?;
+
+    Ok(HflOutcome {
+        curve,
+        final_model,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,24 @@
+//! Message types between the cloud leader and the edge actors.
+
+/// Leader → edge.
+#[derive(Debug, Clone)]
+pub enum CloudMsg {
+    /// Start one cloud round from this global model.
+    RunRound { round: u64, global: Vec<f32> },
+    /// Terminate the actor.
+    Shutdown,
+}
+
+/// Edge → leader: the edge's aggregate after its `b` edge rounds.
+#[derive(Debug, Clone)]
+pub struct EdgeReport {
+    pub edge: usize,
+    pub round: u64,
+    pub model: Vec<f32>,
+    /// Σ D_n over the edge's members (cloud-aggregation weight, Eq. (10)).
+    pub data_size: u64,
+    /// Mean member training loss across the edge rounds.
+    pub mean_loss: f32,
+    /// Error string if the edge failed (poisoned round).
+    pub error: Option<String>,
+}

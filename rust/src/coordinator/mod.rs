@@ -1,0 +1,7 @@
+//! L3 coordination runtime (populated by leader/worker/messages).
+
+pub mod messages;
+pub mod leader;
+pub mod worker;
+
+pub use leader::{run_hfl, HflOutcome};

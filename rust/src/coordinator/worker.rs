@@ -1,0 +1,113 @@
+//! UE worker pool: run one edge round's local training across threads.
+//!
+//! Each UE's `a` local iterations are independent given the edge-round
+//! start model, so members are chunked across `workers` scoped threads,
+//! all executing against the shared PJRT [`Engine`] (thread-safe; see the
+//! safety note in `runtime/engine.rs`). Results come back in member
+//! order, so aggregation — and therefore the whole run — is bitwise
+//! deterministic regardless of thread scheduling.
+
+use anyhow::{anyhow, Result};
+
+use crate::fl::solver::{local_gradient_at, local_round};
+use crate::fl::{LocalSolver, UeState};
+use crate::runtime::Engine;
+
+/// Outcome of one UE's local round.
+#[derive(Debug)]
+pub struct UeResult {
+    pub data_size: u64,
+    pub model: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Run `a` local iterations for every member state in parallel.
+/// `corrections[i]` is the DANE correction for member i (empty for GD).
+pub fn parallel_local_rounds(
+    engine: &Engine,
+    solver: &LocalSolver,
+    w_m: &[f32],
+    members: &mut [UeState],
+    a: u64,
+    corrections: &[Vec<f32>],
+    workers: usize,
+) -> Result<Vec<UeResult>> {
+    assert_eq!(corrections.len(), members.len());
+    let n = members.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(n);
+    let chunk = n.div_ceil(workers);
+
+    let mut slots: Vec<Option<Result<UeResult>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        // Pair each member with its correction and output slot, chunked.
+        let member_chunks = members.chunks_mut(chunk);
+        let corr_chunks = corrections.chunks(chunk);
+        let slot_chunks = slots.chunks_mut(chunk);
+        for ((ms, cs), outs) in member_chunks.zip(corr_chunks).zip(slot_chunks) {
+            handles.push(scope.spawn(move || {
+                for ((ue, corr), out) in ms.iter_mut().zip(cs).zip(outs.iter_mut()) {
+                    let res = local_round(engine, solver, w_m, &ue.shard, &mut ue.cursor, a, corr)
+                        .map(|(model, loss)| UeResult {
+                            data_size: ue.data_size(),
+                            model,
+                            loss,
+                        });
+                    *out = Some(res);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("UE worker panicked"))?;
+        }
+        Ok::<(), anyhow::Error>(())
+    })?;
+
+    slots
+        .into_iter()
+        .map(|s| s.expect("every slot filled"))
+        .collect()
+}
+
+/// Parallel DANE preparation: each member's gradient at `w_m`, in member
+/// order.
+pub fn parallel_gradients(
+    engine: &Engine,
+    w_m: &[f32],
+    members: &mut [UeState],
+    workers: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let n = members.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(n);
+    let chunk = n.div_ceil(workers);
+    let mut slots: Vec<Option<Result<Vec<f32>>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (ms, outs) in members.chunks_mut(chunk).zip(slots.chunks_mut(chunk)) {
+            handles.push(scope.spawn(move || {
+                for (ue, out) in ms.iter_mut().zip(outs.iter_mut()) {
+                    *out = Some(local_gradient_at(engine, w_m, &ue.shard, &mut ue.cursor, 4));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("gradient worker panicked"))?;
+        }
+        Ok::<(), anyhow::Error>(())
+    })?;
+
+    slots
+        .into_iter()
+        .map(|s| s.expect("every slot filled"))
+        .collect()
+}

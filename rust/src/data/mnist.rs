@@ -1,0 +1,163 @@
+//! MNIST IDX-format loader. When a real MNIST copy is present (e.g.
+//! `data/mnist/train-images-idx3-ubyte`), scenarios use it; otherwise the
+//! synthetic generator stands in (DESIGN.md §3).
+
+use std::io::Read;
+use std::path::Path;
+
+use super::Dataset;
+
+const IDX_IMAGES_MAGIC: u32 = 0x0000_0803;
+const IDX_LABELS_MAGIC: u32 = 0x0000_0801;
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_be_bytes(buf))
+}
+
+/// Parse an IDX3 image file into normalized pixels.
+pub fn parse_idx_images(bytes: &[u8]) -> Result<(Vec<f32>, usize, usize), String> {
+    let mut r = bytes;
+    let magic = read_u32(&mut r).map_err(|e| e.to_string())?;
+    if magic != IDX_IMAGES_MAGIC {
+        return Err(format!("bad image magic {magic:#x}"));
+    }
+    let n = read_u32(&mut r).map_err(|e| e.to_string())? as usize;
+    let rows = read_u32(&mut r).map_err(|e| e.to_string())? as usize;
+    let cols = read_u32(&mut r).map_err(|e| e.to_string())? as usize;
+    if rows != cols {
+        return Err(format!("non-square images {rows}x{cols}"));
+    }
+    let mut pix = vec![0u8; n * rows * cols];
+    r.read_exact(&mut pix)
+        .map_err(|e| format!("truncated image data: {e}"))?;
+    Ok((
+        pix.iter().map(|&b| b as f32 / 255.0).collect(),
+        n,
+        rows,
+    ))
+}
+
+/// Parse an IDX1 label file.
+pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<i32>, String> {
+    let mut r = bytes;
+    let magic = read_u32(&mut r).map_err(|e| e.to_string())?;
+    if magic != IDX_LABELS_MAGIC {
+        return Err(format!("bad label magic {magic:#x}"));
+    }
+    let n = read_u32(&mut r).map_err(|e| e.to_string())? as usize;
+    let mut lab = vec![0u8; n];
+    r.read_exact(&mut lab)
+        .map_err(|e| format!("truncated label data: {e}"))?;
+    Ok(lab.iter().map(|&b| b as i32).collect())
+}
+
+/// Load `(train, test)` from a directory holding the four canonical
+/// MNIST files (optionally without the `-ubyte` suffix).
+pub fn load_mnist_dir(dir: &Path) -> Result<(Dataset, Dataset), String> {
+    let read = |names: &[&str]| -> Result<Vec<u8>, String> {
+        for name in names {
+            let p = dir.join(name);
+            if p.exists() {
+                return std::fs::read(&p).map_err(|e| format!("read {}: {e}", p.display()));
+            }
+        }
+        Err(format!("none of {names:?} found in {}", dir.display()))
+    };
+    let load_pair = |img_names: &[&str], lab_names: &[&str]| -> Result<Dataset, String> {
+        let (x, n, hw) = parse_idx_images(&read(img_names)?)?;
+        let y = parse_idx_labels(&read(lab_names)?)?;
+        if y.len() != n {
+            return Err(format!("{n} images but {} labels", y.len()));
+        }
+        let ds = Dataset {
+            x,
+            y,
+            hw,
+            num_classes: 10,
+        };
+        ds.validate()?;
+        Ok(ds)
+    };
+    let train = load_pair(
+        &["train-images-idx3-ubyte", "train-images.idx3-ubyte"],
+        &["train-labels-idx1-ubyte", "train-labels.idx1-ubyte"],
+    )?;
+    let test = load_pair(
+        &["t10k-images-idx3-ubyte", "t10k-images.idx3-ubyte"],
+        &["t10k-labels-idx1-ubyte", "t10k-labels.idx1-ubyte"],
+    )?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx_images(n: usize, hw: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&IDX_IMAGES_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(hw as u32).to_be_bytes());
+        b.extend_from_slice(&(hw as u32).to_be_bytes());
+        b.extend((0..n * hw * hw).map(|i| (i % 251) as u8));
+        b
+    }
+
+    fn idx_labels(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&IDX_LABELS_MAGIC.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend((0..n).map(|i| (i % 10) as u8));
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let (x, n, hw) = parse_idx_images(&idx_images(5, 4)).unwrap();
+        assert_eq!((n, hw), (5, 4));
+        assert_eq!(x.len(), 5 * 16);
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let y = parse_idx_labels(&idx_labels(5)).unwrap();
+        assert_eq!(y, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut b = idx_images(1, 4);
+        b[3] = 0x99;
+        assert!(parse_idx_images(&b).is_err());
+        let mut l = idx_labels(1);
+        l[3] = 0x99;
+        assert!(parse_idx_labels(&l).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let b = idx_images(5, 4);
+        assert!(parse_idx_images(&b[..b.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn load_dir_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("hfl_mnist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), idx_images(20, 28)).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), idx_labels(20)).unwrap();
+        std::fs::write(dir.join("t10k-images-idx3-ubyte"), idx_images(10, 28)).unwrap();
+        std::fs::write(dir.join("t10k-labels-idx1-ubyte"), idx_labels(10)).unwrap();
+        let (train, test) = load_mnist_dir(&dir).unwrap();
+        assert_eq!(train.len(), 20);
+        assert_eq!(test.len(), 10);
+        assert_eq!(train.hw, 28);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_files_reported() {
+        let dir = std::env::temp_dir().join("hfl_mnist_missing");
+        std::fs::create_dir_all(&dir).ok();
+        assert!(load_mnist_dir(&dir).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Dataset substrate: MNIST IDX loading, a synthetic MNIST-like
+//! generator (the offline substitution documented in DESIGN.md §3), and
+//! IID / Dirichlet non-IID partitioning across UEs.
+
+pub mod mnist;
+pub mod partition;
+pub mod synthetic;
+
+pub use mnist::load_mnist_dir;
+pub use partition::{partition_dirichlet, partition_iid};
+pub use synthetic::generate;
+
+/// An image-classification dataset in the layout the PJRT executables
+/// expect: `x` is row-major `[n, hw, hw, 1]` in `[0, 1]`, `y` is `i32`
+/// class ids.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub hw: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    fn pixels(&self) -> usize {
+        self.hw * self.hw
+    }
+
+    /// Copy example `i`'s pixels into `out`.
+    pub fn copy_example(&self, i: usize, out: &mut [f32]) {
+        let p = self.pixels();
+        out[..p].copy_from_slice(&self.x[i * p..(i + 1) * p]);
+    }
+
+    /// Materialize a subset by example indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let p = self.pixels();
+        let mut x = Vec::with_capacity(idx.len() * p);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(&self.x[i * p..(i + 1) * p]);
+            y.push(self.y[i]);
+        }
+        Dataset {
+            x,
+            y,
+            hw: self.hw,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Gather a batch (with wraparound) starting at a cursor over a
+    /// permutation — the per-UE minibatch iterator the FL engine uses.
+    pub fn fill_batch(
+        &self,
+        order: &[usize],
+        cursor: usize,
+        x_out: &mut [f32],
+        y_out: &mut [i32],
+    ) -> usize {
+        let p = self.pixels();
+        let batch = y_out.len();
+        let mut cur = cursor;
+        for i in 0..batch {
+            let idx = order[cur % order.len()];
+            x_out[i * p..(i + 1) * p].copy_from_slice(&self.x[idx * p..(idx + 1) * p]);
+            y_out[i] = self.y[idx];
+            cur += 1;
+        }
+        cur % order.len()
+    }
+
+    /// Per-class histogram (used by partitioner tests and non-IID stats).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &c in &self.y {
+            h[c as usize] += 1;
+        }
+        h
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.x.len() != self.len() * self.pixels() {
+            return Err(format!(
+                "x length {} != {} examples x {} pixels",
+                self.x.len(),
+                self.len(),
+                self.pixels()
+            ));
+        }
+        for &c in &self.y {
+            if c < 0 || c as usize >= self.num_classes {
+                return Err(format!("label {c} out of range"));
+            }
+        }
+        for &v in &self.x {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("pixel {v} outside [0,1]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: vec![0.5; 3 * 4],
+            y: vec![0, 1, 1],
+            hw: 2,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn subset_and_histogram() {
+        let d = tiny();
+        d.validate().unwrap();
+        let s = d.subset(&[1, 2]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.y, vec![1, 1]);
+        assert_eq!(d.class_histogram(), vec![1, 2]);
+    }
+
+    #[test]
+    fn fill_batch_wraps() {
+        let d = tiny();
+        let order = vec![0, 1, 2];
+        let mut x = vec![0.0; 5 * 4];
+        let mut y = vec![0i32; 5];
+        let cur = d.fill_batch(&order, 0, &mut x, &mut y);
+        assert_eq!(y, vec![0, 1, 1, 0, 1]);
+        assert_eq!(cur, 2);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut d = tiny();
+        d.y[0] = 9;
+        assert!(d.validate().is_err());
+        let mut d2 = tiny();
+        d2.x[0] = 2.0;
+        assert!(d2.validate().is_err());
+    }
+}

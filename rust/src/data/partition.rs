@@ -1,0 +1,175 @@
+//! Partition a dataset across N UEs: IID (uniform shuffle) or label-skewed
+//! non-IID via a per-UE Dirichlet class mixture (the standard FL
+//! heterogeneity model).
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// IID partition: shuffle, then deal `per_ue` examples to each UE.
+/// Requires `n_ues * per_ue <= dataset.len()`.
+pub fn partition_iid(
+    ds: &Dataset,
+    n_ues: usize,
+    per_ue: usize,
+    rng: &mut Rng,
+) -> Result<Vec<Dataset>, String> {
+    if n_ues * per_ue > ds.len() {
+        return Err(format!(
+            "cannot deal {n_ues} x {per_ue} from {} examples",
+            ds.len()
+        ));
+    }
+    let perm = rng.permutation(ds.len());
+    Ok((0..n_ues)
+        .map(|u| ds.subset(&perm[u * per_ue..(u + 1) * per_ue]))
+        .collect())
+}
+
+/// Dirichlet non-IID partition: UE u draws a class mixture
+/// `p_u ~ Dir(alpha)`, then samples `per_ue` examples according to it
+/// (with replacement across the class pools' order, without replacement
+/// within a pool until exhausted, then wrapping).
+pub fn partition_dirichlet(
+    ds: &Dataset,
+    n_ues: usize,
+    per_ue: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Result<Vec<Dataset>, String> {
+    if alpha <= 0.0 {
+        return Err("alpha must be positive (use partition_iid for IID)".into());
+    }
+    // Class pools, shuffled.
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); ds.num_classes];
+    for (i, &c) in ds.y.iter().enumerate() {
+        pools[c as usize].push(i);
+    }
+    for pool in &mut pools {
+        rng.shuffle(pool);
+    }
+    let mut cursor = vec![0usize; ds.num_classes];
+
+    let mut out = Vec::with_capacity(n_ues);
+    for _ in 0..n_ues {
+        let mix = rng.dirichlet(alpha, ds.num_classes);
+        let mut idx = Vec::with_capacity(per_ue);
+        for _ in 0..per_ue {
+            // Sample a class from the mixture, restricted to non-empty pools.
+            let mut r = rng.f64();
+            let mut class = ds.num_classes - 1;
+            for (c, &p) in mix.iter().enumerate() {
+                if r < p {
+                    class = c;
+                    break;
+                }
+                r -= p;
+            }
+            if pools[class].is_empty() {
+                // Degenerate dataset (class absent): fall back to any class.
+                class = (0..ds.num_classes)
+                    .find(|&c| !pools[c].is_empty())
+                    .ok_or("empty dataset")?;
+            }
+            let pool = &pools[class];
+            let pick = pool[cursor[class] % pool.len()];
+            cursor[class] += 1;
+            idx.push(pick);
+        }
+        out.push(ds.subset(&idx));
+    }
+    Ok(out)
+}
+
+/// Non-IID-ness diagnostic: mean total-variation distance between each
+/// UE's class distribution and the global one. 0 = perfectly IID.
+pub fn label_skew(shards: &[Dataset]) -> f64 {
+    if shards.is_empty() {
+        return 0.0;
+    }
+    let k = shards[0].num_classes;
+    let mut global = vec![0.0f64; k];
+    let mut total = 0.0;
+    for s in shards {
+        for (c, &n) in s.class_histogram().iter().enumerate() {
+            global[c] += n as f64;
+            total += n as f64;
+        }
+    }
+    for g in &mut global {
+        *g /= total;
+    }
+    let mut acc = 0.0;
+    for s in shards {
+        let h = s.class_histogram();
+        let n: usize = h.iter().sum();
+        let tv: f64 = h
+            .iter()
+            .enumerate()
+            .map(|(c, &cnt)| (cnt as f64 / n as f64 - global[c]).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn base() -> Dataset {
+        generate(&SyntheticConfig::default(), 600, 1)
+    }
+
+    #[test]
+    fn iid_shapes_and_disjoint() {
+        let ds = base();
+        let mut rng = Rng::new(2);
+        let shards = partition_iid(&ds, 10, 50, &mut rng).unwrap();
+        assert_eq!(shards.len(), 10);
+        assert!(shards.iter().all(|s| s.len() == 50));
+        // IID skew should be small.
+        assert!(label_skew(&shards) < 0.25, "skew {}", label_skew(&shards));
+    }
+
+    #[test]
+    fn iid_over_allocation_rejected() {
+        let ds = base();
+        let mut rng = Rng::new(2);
+        assert!(partition_iid(&ds, 10, 100, &mut rng).is_err());
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed() {
+        let ds = base();
+        let mut rng = Rng::new(3);
+        let skewed = partition_dirichlet(&ds, 10, 50, 0.1, &mut rng).unwrap();
+        let mut rng2 = Rng::new(3);
+        let mild = partition_dirichlet(&ds, 10, 50, 100.0, &mut rng2).unwrap();
+        assert!(
+            label_skew(&skewed) > label_skew(&mild),
+            "skewed {} vs mild {}",
+            label_skew(&skewed),
+            label_skew(&mild)
+        );
+        assert!(skewed.iter().all(|s| s.len() == 50));
+    }
+
+    #[test]
+    fn dirichlet_rejects_bad_alpha() {
+        let ds = base();
+        let mut rng = Rng::new(4);
+        assert!(partition_dirichlet(&ds, 5, 10, 0.0, &mut rng).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = base();
+        let a = partition_dirichlet(&ds, 5, 20, 0.5, &mut Rng::new(7)).unwrap();
+        let b = partition_dirichlet(&ds, 5, 20, 0.5, &mut Rng::new(7)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.y, y.y);
+        }
+    }
+}

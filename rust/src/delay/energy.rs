@@ -1,0 +1,187 @@
+//! Energy model extension (paper context: ref. [21], "Energy efficient
+//! federated learning over wireless communication networks").
+//!
+//! The paper pins `f_n = f_max`, `p_n = p_max` because its objective is
+//! pure time (§IV-C.1). The natural follow-up question — what does the
+//! time-optimal schedule COST, and how does the frontier move if UEs
+//! scale their CPU down — needs the standard CMOS/transmission energy
+//! model, implemented here:
+//!
+//! * computation: `E_cmp = κ · f² · C_n · D_n` per local iteration
+//!   (effective-capacitance model; energy/cycle ∝ f², time ∝ 1/f);
+//! * transmission: `E_com = p_n · t_{n→m}^com`.
+//!
+//! `energy_time_frontier` sweeps a CPU-frequency scaling factor and
+//! reports the (time, energy) Pareto curve for a [`DelayInstance`]-like
+//! scenario — the ablation `EXPERIMENTS.md` cites for the "max frequency
+//! is time-optimal but energy-hungry" observation.
+
+use crate::net::{Channel, Topology};
+
+/// Effective switched capacitance κ (J·s²/cycle³ scale). Typical value
+/// in the FL-over-wireless literature: 1e-28.
+pub const KAPPA_DEFAULT: f64 = 1e-28;
+
+/// Per-UE energy for one edge round at CPU frequency `f` (Hz):
+/// `a` local iterations of compute plus one model upload.
+pub fn ue_round_energy(
+    kappa: f64,
+    f_hz: f64,
+    cycles_per_sample: f64,
+    num_samples: u64,
+    a: f64,
+    tx_power_w: f64,
+    upload_s: f64,
+) -> f64 {
+    let cycles = cycles_per_sample * num_samples as f64;
+    a * kappa * f_hz * f_hz * cycles + tx_power_w * upload_s
+}
+
+/// One point of the time/energy frontier.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierPoint {
+    /// CPU frequency scale in (0, 1] relative to f_max.
+    pub f_scale: f64,
+    /// One-cloud-round time T(a,b) under the scaled frequencies (s).
+    pub round_time_s: f64,
+    /// Total energy across all UEs for one cloud round (J).
+    pub round_energy_j: f64,
+}
+
+/// Sweep CPU-frequency scaling and report the per-cloud-round
+/// (time, energy) frontier for association `members` (edge -> UE ids)
+/// at iteration counts (a, b).
+pub fn energy_time_frontier(
+    topo: &Topology,
+    channel: &Channel,
+    members: &[Vec<usize>],
+    a: f64,
+    b: f64,
+    kappa: f64,
+    scales: &[f64],
+) -> Vec<FrontierPoint> {
+    scales
+        .iter()
+        .map(|&s| {
+            assert!(s > 0.0 && s <= 1.0, "frequency scale in (0,1]");
+            let mut worst_edge = 0.0f64;
+            let mut energy = 0.0f64;
+            for (m, ues) in members.iter().enumerate() {
+                let mut tau = 0.0f64;
+                for &n in ues {
+                    let ue = &topo.ues[n];
+                    let f = ue.cpu_hz * s;
+                    let t_cmp = ue.cycles_per_sample * ue.num_samples as f64 / f;
+                    let upload = ue.model_bits / channel.rate_of(n, m);
+                    tau = tau.max(a * t_cmp + upload);
+                    energy += b
+                        * ue_round_energy(
+                            kappa,
+                            f,
+                            ue.cycles_per_sample,
+                            ue.num_samples,
+                            a,
+                            ue.tx_power_w,
+                            upload,
+                        );
+                }
+                let backhaul = topo.edges[m].model_bits / topo.edges[m].cloud_rate_bps;
+                worst_edge = worst_edge.max(b * tau + backhaul);
+            }
+            FrontierPoint {
+                f_scale: s,
+                round_time_s: worst_edge,
+                round_energy_j: energy,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc;
+    use crate::net::{Channel, SystemParams, Topology};
+
+    fn world() -> (Topology, Channel, Vec<Vec<usize>>) {
+        let params = SystemParams::default();
+        let topo = Topology::sample(&params, 3, 30, 7);
+        let ch = Channel::compute(&params, &topo.ues, &topo.edges);
+        let assoc = assoc::time_minimized(&ch, params.edge_capacity()).unwrap();
+        let members = assoc.members();
+        (topo, ch, members)
+    }
+
+    #[test]
+    fn energy_scales_quadratically_with_frequency() {
+        // Pure-compute energy at equal iteration counts: E(f)/E(f/2) = 4.
+        let e1 = ue_round_energy(KAPPA_DEFAULT, 2e9, 2e4, 500, 10.0, 0.0, 0.0);
+        let e2 = ue_round_energy(KAPPA_DEFAULT, 1e9, 2e4, 500, 10.0, 0.0, 0.0);
+        assert!((e1 / e2 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frontier_is_monotone_tradeoff() {
+        let (topo, ch, members) = world();
+        let pts = energy_time_frontier(
+            &topo,
+            &ch,
+            &members,
+            18.0,
+            5.0,
+            KAPPA_DEFAULT,
+            &[0.25, 0.5, 0.75, 1.0],
+        );
+        assert_eq!(pts.len(), 4);
+        for w in pts.windows(2) {
+            // Higher frequency: faster rounds...
+            assert!(w[1].round_time_s < w[0].round_time_s);
+            // ...but more energy.
+            assert!(w[1].round_energy_j > w[0].round_energy_j);
+        }
+    }
+
+    #[test]
+    fn full_speed_matches_delay_model() {
+        let (topo, ch, members) = world();
+        let assoc = crate::assoc::Association::new(
+            {
+                let mut edge_of = vec![0usize; topo.num_ues()];
+                for (m, ues) in members.iter().enumerate() {
+                    for &n in ues {
+                        edge_of[n] = m;
+                    }
+                }
+                edge_of
+            },
+            members.len(),
+        );
+        let inst = crate::delay::DelayInstance::build(&topo, &ch, &assoc, 0.25);
+        let pts =
+            energy_time_frontier(&topo, &ch, &members, 18.0, 5.0, KAPPA_DEFAULT, &[1.0]);
+        let t_model = inst.round_time(18.0, 5.0);
+        assert!(
+            (pts[0].round_time_s - t_model).abs() < 1e-9 * t_model,
+            "frontier {} vs delay model {}",
+            pts[0].round_time_s,
+            t_model
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "frequency scale")]
+    fn rejects_bad_scale() {
+        let (topo, ch, members) = world();
+        energy_time_frontier(&topo, &ch, &members, 1.0, 1.0, KAPPA_DEFAULT, &[1.5]);
+    }
+
+    #[test]
+    fn energy_magnitudes_plausible() {
+        // 2 GHz, 2e4 cyc/sample, 500 samples, 10 iterations:
+        // E_cmp = 10 · 1e-28 · (2e9)² · 1e7 = 40 mJ, plus 10 mJ of
+        // transmission — the right ballpark for mobile CPU training
+        // bursts in the FL-over-wireless literature.
+        let e = ue_round_energy(KAPPA_DEFAULT, 2e9, 2e4, 500, 10.0, 0.01, 1.0);
+        assert!(e > 1e-3 && e < 10.0, "{e} J");
+    }
+}

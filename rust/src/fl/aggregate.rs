@@ -1,0 +1,106 @@
+//! Model aggregation: the data-size-weighted averages of Eqs. (6) and
+//! (10). Hot-path code — called once per edge round per edge and once per
+//! cloud round — so it is allocation-conscious: `weighted_average_into`
+//! reuses the output buffer.
+
+/// `out = Σ w_i x_i / Σ w_i` over equal-length vectors.
+pub fn weighted_average_into(models: &[(f64, &[f32])], out: &mut [f32]) {
+    assert!(!models.is_empty(), "aggregate of zero models");
+    let dim = models[0].1.len();
+    assert!(models.iter().all(|(_, m)| m.len() == dim));
+    assert_eq!(out.len(), dim);
+    let total: f64 = models.iter().map(|(w, _)| *w).sum();
+    assert!(total > 0.0, "aggregate weights sum to {total}");
+
+    // f64 accumulation: edge aggregates feed cloud aggregates, so keep
+    // rounding error out of the hierarchy.
+    out.iter_mut().for_each(|o| *o = 0.0);
+    let mut acc = vec![0.0f64; dim];
+    for (w, m) in models {
+        let wn = *w / total;
+        for (a, &v) in acc.iter_mut().zip(m.iter()) {
+            *a += wn * v as f64;
+        }
+    }
+    for (o, a) in out.iter_mut().zip(acc) {
+        *o = a as f32;
+    }
+}
+
+/// Allocating convenience wrapper.
+pub fn weighted_average(models: &[(f64, &[f32])]) -> Vec<f32> {
+    assert!(!models.is_empty(), "aggregate of zero models");
+    let mut out = vec![0.0f32; models[0].1.len()];
+    weighted_average_into(models, &mut out);
+    out
+}
+
+/// Eq. (6): edge aggregation `ω_m = Σ_{n∈N_m} D_n ω_n / D_{N_m}`.
+pub fn edge_aggregate(ue_models: &[(u64, &[f32])]) -> Vec<f32> {
+    let weighted: Vec<(f64, &[f32])> = ue_models
+        .iter()
+        .map(|&(d, m)| (d as f64, m))
+        .collect();
+    weighted_average(&weighted)
+}
+
+/// Eq. (10): cloud aggregation `ω = Σ_m D_{N_m} ω_m / D`.
+pub fn cloud_aggregate(edge_models: &[(u64, &[f32])]) -> Vec<f32> {
+    edge_aggregate(edge_models)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 4.0, 5.0];
+        let avg = weighted_average(&[(1.0, &a), (1.0, &b)]);
+        assert_eq!(avg, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn weights_proportional_to_data() {
+        let a = [0.0f32];
+        let b = [10.0f32];
+        let avg = edge_aggregate(&[(900, &a), (100, &b)]);
+        assert!((avg[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_model_identity() {
+        let a = [1.5f32, -2.5];
+        assert_eq!(weighted_average(&[(7.0, &a)]), a.to_vec());
+    }
+
+    #[test]
+    fn hierarchy_equals_flat_average() {
+        // Cloud(Edge(a,b), Edge(c)) must equal flat weighted average —
+        // the algebraic identity FedAvg hierarchies rely on.
+        let (m1, m2, m3) = ([1.0f32, 0.0], [0.0f32, 1.0], [4.0f32, 4.0]);
+        let (d1, d2, d3) = (100u64, 300, 600);
+        let e1 = edge_aggregate(&[(d1, &m1), (d2, &m2)]);
+        let e2 = edge_aggregate(&[(d3, &m3)]);
+        let cloud = cloud_aggregate(&[(d1 + d2, &e1), (d3, &e2)]);
+        let flat = edge_aggregate(&[(d1, &m1), (d2, &m2), (d3, &m3)]);
+        for (c, f) in cloud.iter().zip(&flat) {
+            assert!((c - f).abs() < 1e-6, "{cloud:?} vs {flat:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero models")]
+    fn empty_rejected() {
+        weighted_average(&[]);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer() {
+        let a = [1.0f32, 2.0];
+        let mut out = vec![9.0f32; 2];
+        weighted_average_into(&[(2.0, &a)], &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+}

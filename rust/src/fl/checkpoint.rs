@@ -1,0 +1,130 @@
+//! Model checkpointing: save/restore the flat parameter vector together
+//! with run metadata, so long training runs (and the `hfl train` CLI) can
+//! resume and trained models can be handed to evaluation tooling.
+//!
+//! Format: `<stem>.bin` (raw f32 little-endian, same layout as
+//! `artifacts/init_params.bin`) + `<stem>.json` (metadata: param count,
+//! cloud round, a, b, test accuracy).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Checkpoint metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub param_count: usize,
+    pub cloud_round: u64,
+    pub a: u64,
+    pub b: u64,
+    pub test_acc: f64,
+}
+
+/// Write `<stem>.bin` + `<stem>.json`. Returns the bin path.
+pub fn save(stem: &Path, params: &[f32], meta: &CheckpointMeta) -> Result<PathBuf> {
+    if params.len() != meta.param_count {
+        bail!(
+            "params length {} != meta.param_count {}",
+            params.len(),
+            meta.param_count
+        );
+    }
+    if let Some(dir) = stem.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let bin = stem.with_extension("bin");
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for &p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(&bin, &bytes).with_context(|| format!("write {}", bin.display()))?;
+
+    let json = Json::obj(vec![
+        ("param_count", Json::num(meta.param_count as f64)),
+        ("cloud_round", Json::num(meta.cloud_round as f64)),
+        ("a", Json::num(meta.a as f64)),
+        ("b", Json::num(meta.b as f64)),
+        ("test_acc", Json::num(meta.test_acc)),
+    ]);
+    std::fs::write(stem.with_extension("json"), json.to_string())?;
+    Ok(bin)
+}
+
+/// Load a checkpoint pair written by [`save`].
+pub fn load(stem: &Path) -> Result<(Vec<f32>, CheckpointMeta)> {
+    let json_text = std::fs::read_to_string(stem.with_extension("json"))
+        .with_context(|| format!("read {}.json", stem.display()))?;
+    let json = Json::parse(&json_text).map_err(|e| anyhow!("parse checkpoint meta: {e}"))?;
+    let field = |name: &str| -> Result<f64> {
+        json.get(name)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("checkpoint meta missing '{name}'"))
+    };
+    let meta = CheckpointMeta {
+        param_count: field("param_count")? as usize,
+        cloud_round: field("cloud_round")? as u64,
+        a: field("a")? as u64,
+        b: field("b")? as u64,
+        test_acc: field("test_acc")?,
+    };
+    let bytes = std::fs::read(stem.with_extension("bin"))
+        .with_context(|| format!("read {}.bin", stem.display()))?;
+    if bytes.len() != meta.param_count * 4 {
+        bail!(
+            "checkpoint bin is {} bytes, expected {}",
+            bytes.len(),
+            meta.param_count * 4
+        );
+    }
+    let params = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((params, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta {
+            param_count: 5,
+            cloud_round: 3,
+            a: 35,
+            b: 5,
+            test_acc: 0.91,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hfl_ckpt_{}", std::process::id()));
+        let stem = dir.join("round3");
+        let params = vec![1.0f32, -2.5, 3.25, 0.0, 9.75];
+        save(&stem, &params, &meta()).unwrap();
+        let (loaded, lmeta) = load(&stem).unwrap();
+        assert_eq!(loaded, params);
+        assert_eq!(lmeta, meta());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("hfl_ckpt_bad_{}", std::process::id()));
+        let stem = dir.join("x");
+        assert!(save(&stem, &[1.0, 2.0], &meta()).is_err());
+        // Corrupt the bin after a good save.
+        save(&stem, &[0.0; 5], &meta()).unwrap();
+        std::fs::write(stem.with_extension("bin"), [0u8; 7]).unwrap();
+        assert!(load(&stem).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_files_reported() {
+        assert!(load(Path::new("/nonexistent/ckpt")).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Sequential reference implementation of Algorithm 1 (hierarchical FL).
+//!
+//! Every UE trains `a` local iterations from its edge's current model;
+//! the edge aggregates (Eq. (6)) after each of its `b` edge rounds; the
+//! cloud aggregates (Eq. (10)) once per cloud round, evaluates on the
+//! held-out set, and stamps the point with the *simulated* protocol time
+//! from the delay model (Figs. 4/6 x-axis).
+//!
+//! The threaded production path (`coordinator/`) must produce bitwise
+//! identical models to this engine for the same seed — UE updates are
+//! independent within an edge round and aggregation order is fixed —
+//! which the integration tests assert.
+
+use anyhow::Result;
+
+use super::aggregate::edge_aggregate;
+use super::metrics::{CurvePoint, TrainingCurve};
+use super::solver::{local_gradient_at, local_round, BatchCursor, LocalSolver};
+use crate::data::Dataset;
+use crate::runtime::Engine;
+
+/// Per-UE training state.
+#[derive(Debug)]
+pub struct UeState {
+    pub shard: Dataset,
+    pub cursor: BatchCursor,
+}
+
+impl UeState {
+    pub fn new(shard: Dataset, seed: u64) -> UeState {
+        let cursor = BatchCursor::new(shard.len(), seed);
+        UeState { shard, cursor }
+    }
+
+    /// Canonical per-UE seeding shared by the sequential engine and the
+    /// threaded coordinator so both produce bitwise-identical runs.
+    pub fn seeded(shard: Dataset, ue_id: usize, seed: u64) -> UeState {
+        UeState::new(shard, seed ^ (0x9E37 + ue_id as u64 * 0x51_7CC1))
+    }
+
+    pub fn data_size(&self) -> u64 {
+        self.shard.len() as u64
+    }
+}
+
+/// One training run's parameters.
+#[derive(Debug, Clone)]
+pub struct TrainRun {
+    /// Local iterations per edge round.
+    pub a: u64,
+    /// Edge rounds per cloud round.
+    pub b: u64,
+    /// Cloud rounds to execute.
+    pub cloud_rounds: u64,
+    /// Simulated seconds one cloud round costs (delay-model `T(a,b)`).
+    pub round_time_s: f64,
+    /// Evaluate every k cloud rounds (1 = every round).
+    pub eval_every: u64,
+}
+
+/// The engine: model state + data + solver.
+pub struct HflEngine<'e> {
+    pub engine: &'e Engine,
+    pub solver: LocalSolver,
+    /// UE states, indexed by UE id.
+    pub ues: Vec<UeState>,
+    /// Edge membership (N_m for each edge).
+    pub members: Vec<Vec<usize>>,
+    /// Held-out test set.
+    pub test: Dataset,
+    /// Final global model of the last `train` call.
+    pub global: Vec<f32>,
+}
+
+impl<'e> HflEngine<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        solver: LocalSolver,
+        shards: Vec<Dataset>,
+        members: Vec<Vec<usize>>,
+        test: Dataset,
+        seed: u64,
+    ) -> HflEngine<'e> {
+        let ues = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| UeState::seeded(s, i, seed))
+            .collect();
+        HflEngine {
+            engine,
+            solver,
+            ues,
+            members,
+            test,
+            global: Vec::new(),
+        }
+    }
+
+    /// One edge round for edge `m` starting from `w_m`: every member
+    /// trains `a` iterations, then Eq. (6). Returns (new w_m, mean loss).
+    pub fn edge_round(&mut self, m: usize, w_m: &[f32], a: u64) -> Result<(Vec<f32>, f32)> {
+        let member_ids = self.members[m].clone();
+        // DANE correction: global-gradient estimate at w_m.
+        let corrections: Vec<Vec<f32>> = if matches!(self.solver, LocalSolver::Dane { .. }) {
+            let mut grads = Vec::with_capacity(member_ids.len());
+            for &n in &member_ids {
+                let ue = &mut self.ues[n];
+                grads.push(local_gradient_at(
+                    self.engine,
+                    w_m,
+                    &ue.shard,
+                    &mut ue.cursor,
+                    4,
+                )?);
+            }
+            let weights: Vec<(f64, &[f32])> = member_ids
+                .iter()
+                .zip(&grads)
+                .map(|(&n, g)| (self.ues[n].data_size() as f64, g.as_slice()))
+                .collect();
+            let global_grad = super::aggregate::weighted_average(&weights);
+            grads
+                .iter()
+                .map(|g| {
+                    global_grad
+                        .iter()
+                        .zip(g)
+                        .map(|(gg, gn)| gg - gn)
+                        .collect()
+                })
+                .collect()
+        } else {
+            vec![Vec::new(); member_ids.len()]
+        };
+
+        let mut models: Vec<(u64, Vec<f32>)> = Vec::with_capacity(member_ids.len());
+        let mut loss_acc = 0.0f64;
+        for (slot, &n) in member_ids.iter().enumerate() {
+            let ue = &mut self.ues[n];
+            let (w_n, loss) = local_round(
+                self.engine,
+                &self.solver,
+                w_m,
+                &ue.shard,
+                &mut ue.cursor,
+                a,
+                &corrections[slot],
+            )?;
+            loss_acc += loss as f64;
+            models.push((ue.data_size(), w_n));
+        }
+        let refs: Vec<(u64, &[f32])> = models.iter().map(|(d, m)| (*d, m.as_slice())).collect();
+        Ok((
+            edge_aggregate(&refs),
+            (loss_acc / member_ids.len().max(1) as f64) as f32,
+        ))
+    }
+
+    /// Run Algorithm 1 for `run.cloud_rounds` cloud rounds from the
+    /// build-time initial model. Returns the training curve.
+    pub fn train(&mut self, run: &TrainRun) -> Result<TrainingCurve> {
+        let mut global = self.engine.init_params();
+        let mut curve = TrainingCurve::new(run.a, run.b);
+        let t0 = std::time::Instant::now();
+
+        // Round-0 point: the initial model.
+        let (loss0, acc0) = self.engine.evaluate(&global, &self.test.x, &self.test.y)?;
+        curve.push(CurvePoint {
+            cloud_round: 0,
+            sim_time_s: 0.0,
+            wall_s: t0.elapsed().as_secs_f64(),
+            test_acc: acc0,
+            test_loss: loss0,
+            train_loss: f32::NAN,
+        });
+
+        for round in 1..=run.cloud_rounds {
+            let mut edge_models: Vec<(u64, Vec<f32>)> = Vec::with_capacity(self.members.len());
+            let mut loss_acc = 0.0f64;
+            let mut loss_cnt = 0usize;
+            for m in 0..self.members.len() {
+                if self.members[m].is_empty() {
+                    continue;
+                }
+                let mut w_m = global.clone();
+                for _k in 0..run.b {
+                    let (next, loss) = self.edge_round(m, &w_m, run.a)?;
+                    w_m = next;
+                    loss_acc += loss as f64;
+                    loss_cnt += 1;
+                }
+                let d_m: u64 = self.members[m]
+                    .iter()
+                    .map(|&n| self.ues[n].data_size())
+                    .sum();
+                edge_models.push((d_m, w_m));
+            }
+            let refs: Vec<(u64, &[f32])> =
+                edge_models.iter().map(|(d, m)| (*d, m.as_slice())).collect();
+            global = super::aggregate::cloud_aggregate(&refs);
+
+            if round % run.eval_every == 0 || round == run.cloud_rounds {
+                let (loss, acc) = self.engine.evaluate(&global, &self.test.x, &self.test.y)?;
+                curve.push(CurvePoint {
+                    cloud_round: round,
+                    sim_time_s: round as f64 * run.round_time_s,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    test_acc: acc,
+                    test_loss: loss,
+                    train_loss: (loss_acc / loss_cnt.max(1) as f64) as f32,
+                });
+            }
+        }
+        self.global = global;
+        Ok(curve)
+    }
+}

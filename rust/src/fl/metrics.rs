@@ -1,0 +1,117 @@
+//! Training-curve records: the accuracy-vs-completion-time series of the
+//! paper's Figs. 4 and 6.
+
+use crate::metrics::Series;
+
+/// One evaluation point along a training run.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Cloud round index (1-based; 0 = initial model).
+    pub cloud_round: u64,
+    /// Simulated protocol completion time (seconds) per the delay model.
+    pub sim_time_s: f64,
+    /// Wall-clock seconds actually spent (PJRT compute).
+    pub wall_s: f64,
+    /// Held-out test accuracy.
+    pub test_acc: f32,
+    /// Held-out mean test loss.
+    pub test_loss: f32,
+    /// Mean training loss across UEs in the round.
+    pub train_loss: f32,
+}
+
+/// A full run: configuration echo + the curve.
+#[derive(Debug, Clone)]
+pub struct TrainingCurve {
+    pub a: u64,
+    pub b: u64,
+    pub points: Vec<CurvePoint>,
+}
+
+impl TrainingCurve {
+    pub fn new(a: u64, b: u64) -> TrainingCurve {
+        TrainingCurve {
+            a,
+            b,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// Final test accuracy (0 if no points).
+    pub fn final_acc(&self) -> f32 {
+        self.points.last().map(|p| p.test_acc).unwrap_or(0.0)
+    }
+
+    /// First simulated time at which accuracy ≥ target (None if never) —
+    /// the paper's "completion time to reach accuracy X" reading of
+    /// Figs. 4/6.
+    pub fn time_to_accuracy(&self, target: f32) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.test_acc >= target)
+            .map(|p| p.sim_time_s)
+    }
+
+    /// Convert to a metrics table.
+    pub fn to_series(&self) -> Series {
+        let mut s = Series::new(&[
+            "cloud_round",
+            "sim_time_s",
+            "wall_s",
+            "test_acc",
+            "test_loss",
+            "train_loss",
+        ]);
+        for p in &self.points {
+            s.push(vec![
+                p.cloud_round as f64,
+                p.sim_time_s,
+                p.wall_s,
+                p.test_acc as f64,
+                p.test_loss as f64,
+                p.train_loss as f64,
+            ]);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> TrainingCurve {
+        let mut c = TrainingCurve::new(35, 5);
+        for (i, acc) in [0.1f32, 0.5, 0.8, 0.9].iter().enumerate() {
+            c.push(CurvePoint {
+                cloud_round: i as u64,
+                sim_time_s: i as f64 * 10.0,
+                wall_s: i as f64,
+                test_acc: *acc,
+                test_loss: 1.0 - acc,
+                train_loss: 1.0 - acc,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let c = curve();
+        assert_eq!(c.time_to_accuracy(0.5), Some(10.0));
+        assert_eq!(c.time_to_accuracy(0.85), Some(30.0));
+        assert_eq!(c.time_to_accuracy(0.99), None);
+        assert_eq!(c.final_acc(), 0.9);
+    }
+
+    #[test]
+    fn series_shape() {
+        let s = curve().to_series();
+        assert_eq!(s.columns.len(), 6);
+        assert_eq!(s.rows.len(), 4);
+    }
+}

@@ -1,0 +1,20 @@
+//! Hierarchical federated learning engine (paper Algorithm 1).
+//!
+//! `aggregate` implements the data-weighted model averaging of Eqs. (6)
+//! and (10); `solver` the local UE update rules (GD as in the paper, plus
+//! a DANE-style gradient-corrected variant, §III-B); `engine` the
+//! sequential reference implementation of Algorithm 1 over the PJRT
+//! runtime; `metrics` the accuracy-vs-(simulated)-time curves of
+//! Figs. 4/6. The parallel production path lives in `coordinator/`.
+
+pub mod aggregate;
+pub mod checkpoint;
+pub mod engine;
+pub mod metrics;
+pub mod solver;
+
+pub use aggregate::{cloud_aggregate, edge_aggregate, weighted_average};
+pub use checkpoint::{load as load_checkpoint, save as save_checkpoint, CheckpointMeta};
+pub use engine::{HflEngine, TrainRun, UeState};
+pub use metrics::{CurvePoint, TrainingCurve};
+pub use solver::LocalSolver;

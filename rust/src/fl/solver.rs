@@ -1,0 +1,179 @@
+//! Local UE update rules for the `a` iterations of Algorithm 1 lines 6–8.
+//!
+//! The paper trains with plain gradient descent at the UEs ("we use GD in
+//! UE local training", §III-B) while referencing DANE [22] as the
+//! framework. Both are provided:
+//!
+//! * [`LocalSolver::Gd`] — `a` fused PJRT `train_step` executions
+//!   (gradient + SGD update inside one executable).
+//! * [`LocalSolver::Dane`] — DANE-style gradient correction: at round
+//!   start each UE evaluates its local gradient at the shared model; the
+//!   caller (edge) averages them into a global-gradient estimate; each
+//!   UE then takes `a` corrected steps
+//!   `w ← w − lr·(∇F_n(w) − ∇F_n(w₀) + ∇F(w₀))` via `grad_step` +
+//!   rust-side axpy. This matches DANE's inexact Newton step with the
+//!   regularizer μ = 0 and a GD inner solver.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::Engine;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LocalSolver {
+    Gd { lr: f32 },
+    Dane { lr: f32 },
+}
+
+impl LocalSolver {
+    pub fn parse(name: &str, lr: f32) -> Result<LocalSolver, String> {
+        match name {
+            "gd" => Ok(LocalSolver::Gd { lr }),
+            "dane" => Ok(LocalSolver::Dane { lr }),
+            other => Err(format!("unknown solver '{other}' (gd|dane)")),
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        match self {
+            LocalSolver::Gd { lr } | LocalSolver::Dane { lr } => *lr,
+        }
+    }
+}
+
+/// Mini-batch cursor over a UE's shard (reshuffled every wrap).
+#[derive(Debug, Clone)]
+pub struct BatchCursor {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl BatchCursor {
+    pub fn new(len: usize, seed: u64) -> BatchCursor {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..len).collect();
+        rng.shuffle(&mut order);
+        BatchCursor {
+            order,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    pub fn next_batch(&mut self, ds: &Dataset, x: &mut [f32], y: &mut [i32]) {
+        let new_cursor = ds.fill_batch(&self.order, self.cursor, x, y);
+        if new_cursor <= self.cursor {
+            // Wrapped: reshuffle for the next epoch.
+            self.rng.shuffle(&mut self.order);
+        }
+        self.cursor = new_cursor;
+    }
+}
+
+/// Run `a` local iterations of the chosen solver. `correction` is the
+/// DANE term `∇F(w₀) − ∇F_n(w₀)` (empty slice for GD). Returns the new
+/// local model and the mean training loss across the `a` steps.
+pub fn local_round(
+    engine: &Engine,
+    solver: &LocalSolver,
+    params: &[f32],
+    shard: &Dataset,
+    cursor: &mut BatchCursor,
+    a: u64,
+    correction: &[f32],
+) -> Result<(Vec<f32>, f32)> {
+    let batch = engine.meta.train_batch;
+    let hw = engine.meta.image_hw;
+    let mut x = vec![0.0f32; batch * hw * hw];
+    let mut y = vec![0i32; batch];
+    let mut w = params.to_vec();
+    let mut loss_acc = 0.0f64;
+    for _ in 0..a {
+        cursor.next_batch(shard, &mut x, &mut y);
+        match solver {
+            LocalSolver::Gd { lr } => {
+                let (nw, loss) = engine.train_step(&w, &x, &y, *lr)?;
+                w = nw;
+                loss_acc += loss as f64;
+            }
+            LocalSolver::Dane { lr } => {
+                let (grad, loss) = engine.grad_step(&w, &x, &y)?;
+                debug_assert_eq!(correction.len(), w.len());
+                for ((wi, gi), ci) in w.iter_mut().zip(&grad).zip(correction) {
+                    *wi -= lr * (gi + ci);
+                }
+                loss_acc += loss as f64;
+            }
+        }
+    }
+    Ok((w, (loss_acc / a.max(1) as f64) as f32))
+}
+
+/// Evaluate the DANE correction inputs: the UE's local gradient at the
+/// shared round-start model (averaged over one pass of up to
+/// `max_batches` batches for stability).
+pub fn local_gradient_at(
+    engine: &Engine,
+    params: &[f32],
+    shard: &Dataset,
+    cursor: &mut BatchCursor,
+    max_batches: usize,
+) -> Result<Vec<f32>> {
+    let batch = engine.meta.train_batch;
+    let hw = engine.meta.image_hw;
+    let mut x = vec![0.0f32; batch * hw * hw];
+    let mut y = vec![0i32; batch];
+    let n_batches = shard.len().div_ceil(batch).min(max_batches).max(1);
+    let mut acc = vec![0.0f64; params.len()];
+    for _ in 0..n_batches {
+        cursor.next_batch(shard, &mut x, &mut y);
+        let (grad, _) = engine.grad_step(params, &x, &y)?;
+        for (a, &g) in acc.iter_mut().zip(&grad) {
+            *a += g as f64;
+        }
+    }
+    Ok(acc
+        .into_iter()
+        .map(|v| (v / n_batches as f64) as f32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_solvers() {
+        assert_eq!(
+            LocalSolver::parse("gd", 0.1).unwrap(),
+            LocalSolver::Gd { lr: 0.1 }
+        );
+        assert_eq!(
+            LocalSolver::parse("dane", 0.2).unwrap(),
+            LocalSolver::Dane { lr: 0.2 }
+        );
+        assert!(LocalSolver::parse("sgd9", 0.1).is_err());
+    }
+
+    #[test]
+    fn cursor_covers_all_examples() {
+        let ds = crate::data::synthetic::generate(
+            &crate::data::synthetic::SyntheticConfig::default(),
+            10,
+            1,
+        );
+        let mut cur = BatchCursor::new(ds.len(), 3);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut x = vec![0.0f32; 2 * 28 * 28];
+        let mut y = vec![0i32; 2];
+        for _ in 0..5 {
+            cur.next_batch(&ds, &mut x, &mut y);
+            seen.extend(y.iter().copied());
+        }
+        // After one epoch (5 batches of 2 over 10 examples) we must have
+        // seen every label present in the balanced set.
+        assert_eq!(seen.len(), 10);
+    }
+}

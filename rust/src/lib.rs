@@ -1,0 +1,41 @@
+//! # hfl — Time Minimization in Hierarchical Federated Learning
+//!
+//! Production-grade reproduction of *"Time Minimization in Hierarchical
+//! Federated Learning"* (Liu, Chua, Zhao — 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   wireless/delay model, the (a, b) iteration-count optimizer
+//!   (Algorithm 2 + exact reference solvers), the UE-to-edge association
+//!   strategies (Algorithm 3, greedy, random, exact MILP), an
+//!   event-driven latency simulator, and a threaded hierarchical-FedAvg
+//!   training runtime (Algorithm 1).
+//! * **L2 (python/compile/model.py, build-time only)** — LeNet-5 fwd/bwd
+//!   in JAX over a flat parameter vector, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time only)** — the Pallas
+//!   tiled-matmul kernel every dense layer and im2col convolution flows
+//!   through.
+//!
+//! At runtime the rust binary is self-contained: `runtime/` loads the
+//! `artifacts/*.hlo.txt` produced by `make artifacts` into a PJRT CPU
+//! client and the FL engine executes them on the hot path; Python never
+//! runs during serving/training.
+//!
+//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for the
+//! per-figure reproduction results.
+
+pub mod assoc;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod fl;
+pub mod metrics;
+pub mod net;
+pub mod opt;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

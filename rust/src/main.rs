@@ -1,0 +1,346 @@
+//! `hfl` — CLI launcher for the hierarchical-FL time-minimization stack.
+//!
+//! Subcommands:
+//!   optimize   solve sub-problem I (a*, b*) for a scenario
+//!   associate  compare UE-to-edge association strategies (sub-problem II)
+//!   simulate   event-driven protocol latency simulation
+//!   train      run hierarchical FL training via the PJRT runtime
+//!   info       print scenario + artifact information
+//!
+//! Common options: --edges N --ues N --eps E --seed S --assoc NAME
+//!                 --config FILE (TOML; CLI overrides file)
+//! Run `hfl help` for the full list.
+
+use anyhow::{anyhow, bail, Result};
+
+use hfl::assoc::{self, LatencyTable};
+use hfl::config::{Args, AssocStrategy, Scenario};
+use hfl::coordinator::run_hfl;
+use hfl::data::{partition_dirichlet, partition_iid, synthetic};
+use hfl::delay::DelayInstance;
+use hfl::fl::{LocalSolver, TrainRun};
+use hfl::metrics::Recorder;
+use hfl::net::{Channel, Topology};
+use hfl::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
+use hfl::runtime::{find_artifacts, Engine};
+use hfl::sim::{simulate, SimConfig};
+use hfl::util::Rng;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow!("{e}"))?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "optimize" => cmd_optimize(&args),
+        "associate" => cmd_associate(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `hfl help`)"),
+    }
+}
+
+const HELP: &str = "\
+hfl — Time Minimization in Hierarchical Federated Learning (reproduction)
+
+USAGE: hfl <subcommand> [options]
+
+SUBCOMMANDS
+  optimize   solve sub-problem I: optimal local iterations a* and edge
+             iterations b* (exact + Algorithm 2), print both
+  associate  solve sub-problem II: compare proposed/greedy/random/exact
+             UE-to-edge association latencies
+  simulate   event-driven latency simulation (supports --jitter, --dropout)
+  train      hierarchical FL training (LeNet via PJRT artifacts)
+  info       scenario + artifact summary
+
+COMMON OPTIONS
+  --config FILE        TOML scenario file (CLI overrides it)
+  --edges N            number of edge servers        (default 5)
+  --ues N              number of UEs                 (default 100)
+  --eps E              global accuracy ε             (default 0.25)
+  --seed S             RNG seed                      (default 42)
+  --assoc NAME         proposed|greedy|random|exact  (default proposed)
+  --gamma G, --zeta Z  loss-geometry constants
+
+TRAIN OPTIONS
+  --a N --b N          iteration counts (default: from optimizer)
+  --cloud-rounds N     cloud rounds                  (default 10)
+  --lr LR              local GD learning rate        (default 0.05)
+  --samples-per-ue N   training samples per UE       (default 256)
+  --test-samples N     held-out test set size        (default 2048)
+  --dirichlet-alpha A  non-IID partition (0 = IID)
+  --workers N          UE worker threads per edge (0 = auto)
+  --solver NAME        gd|dane                       (default gd)
+  --artifacts-dir DIR  AOT artifacts (default: ./artifacts)
+  --results-dir DIR    CSV/JSON output (default: ./results)
+
+SIMULATE OPTIONS
+  --a N --b N          iteration counts (default: from optimizer)
+  --jitter SIGMA       lognormal jitter on every delay (default 0)
+  --dropout P          per-round UE dropout probability (default 0)
+  --rounds N           override the ⌈R⌉ cloud-round count
+";
+
+/// Build topology + channel + association for a scenario.
+fn build_world(sc: &Scenario) -> Result<(Topology, Channel, assoc::Association)> {
+    let topo = Topology::sample(&sc.system, sc.num_edges, sc.num_ues, sc.seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let cap = sc.system.edge_capacity();
+    let a0 = 20.0; // provisional a for exact latency tables
+    let association = match sc.assoc {
+        AssocStrategy::Proposed => assoc::time_minimized(&channel, cap),
+        AssocStrategy::Greedy => assoc::greedy(&channel, cap),
+        AssocStrategy::Random => {
+            assoc::random(sc.num_ues, sc.num_edges, cap, &mut Rng::new(sc.seed))
+        }
+        AssocStrategy::Exact => {
+            let table = LatencyTable::build(&topo, &channel, a0);
+            assoc::solve_exact_matching(&table, cap)
+        }
+    }
+    .map_err(|e| anyhow!("association: {e}"))?;
+    Ok((topo, channel, association))
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let sc = load_scenario(args)?;
+    let (topo, channel, association) = build_world(&sc)?;
+    let inst = DelayInstance::build(&topo, &channel, &association, sc.eps);
+    let opts = SolveOptions::default();
+
+    let cont = solve_continuous(&inst, &opts);
+    let int = solve_integer(&inst, &opts);
+    let alg2 = SubgradientSolver::default().solve(&inst);
+
+    println!(
+        "scenario: {} edges, {} UEs, eps={}, gamma={}, zeta={}, assoc={}",
+        sc.num_edges,
+        sc.num_ues,
+        sc.eps,
+        sc.system.gamma,
+        sc.system.zeta,
+        sc.assoc.name()
+    );
+    println!(
+        "continuous relaxation: a*={:.3} b*={:.3} J={:.4}s (R={:.2}, T={:.4}s)",
+        cont.a, cont.b, cont.objective, cont.rounds, cont.round_time
+    );
+    println!(
+        "integer (⌈R⌉, exact):  a*={} b*={} J={:.4}s (R={}, T={:.4}s)",
+        int.a, int.b, int.objective, int.rounds, int.round_time
+    );
+    println!(
+        "Algorithm 2 (paper):   a*={:.3} b*={:.3} J={:.4}s in {} iters",
+        alg2.a, alg2.b, alg2.objective, alg2.iterations
+    );
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_associate(args: &Args) -> Result<()> {
+    let sc = load_scenario(args)?;
+    let topo = Topology::sample(&sc.system, sc.num_edges, sc.num_ues, sc.seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let cap = sc.system.edge_capacity();
+
+    // The paper fixes a, b from sub-problem I before association; use the
+    // integer-optimal a under a provisional (greedy) association.
+    let tmp_assoc = assoc::greedy(&channel, cap).map_err(|e| anyhow!(e))?;
+    let inst = DelayInstance::build(&topo, &channel, &tmp_assoc, sc.eps);
+    let int = solve_integer(&inst, &SolveOptions::default());
+    let table = LatencyTable::build(&topo, &channel, int.a as f64);
+
+    println!(
+        "scenario: {} edges, {} UEs, eps={}, a={}, capacity={}",
+        sc.num_edges, sc.num_ues, sc.eps, int.a, cap
+    );
+    let proposed = assoc::time_minimized(&channel, cap).map_err(|e| anyhow!(e))?;
+    let greedy = assoc::greedy(&channel, cap).map_err(|e| anyhow!(e))?;
+    let random = assoc::random(sc.num_ues, sc.num_edges, cap, &mut Rng::new(sc.seed))
+        .map_err(|e| anyhow!(e))?;
+    let exact = assoc::solve_exact_matching(&table, cap).map_err(|e| anyhow!(e))?;
+    for (name, a) in [
+        ("proposed (Alg 3)", &proposed),
+        ("greedy", &greedy),
+        ("random", &random),
+        ("exact (matching)", &exact),
+    ] {
+        println!("  {name:<20} max latency {:.4}s", table.max_latency(a));
+    }
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let sc = load_scenario(args)?;
+    let (topo, channel, association) = build_world(&sc)?;
+    let inst = DelayInstance::build(&topo, &channel, &association, sc.eps);
+    let int = solve_integer(&inst, &SolveOptions::default());
+    let a = args.get_or("a", int.a).map_err(|e| anyhow!("{e}"))?;
+    let b = args.get_or("b", int.b).map_err(|e| anyhow!("{e}"))?;
+    let cfg = SimConfig {
+        a,
+        b,
+        rounds: args.get("rounds").map_err(|e| anyhow!("{e}"))?,
+        jitter_sigma: args.get_or("jitter", 0.0).map_err(|e| anyhow!("{e}"))?,
+        dropout_prob: args.get_or("dropout", 0.0).map_err(|e| anyhow!("{e}"))?,
+        seed: sc.seed,
+    };
+    let res = simulate(&inst, &cfg);
+    println!(
+        "simulated protocol: a={a} b={b} rounds={} (assoc={})",
+        res.rounds,
+        sc.assoc.name()
+    );
+    println!("  makespan            {:.4}s", res.total_time_s);
+    println!(
+        "  closed-form R·T     {:.4}s",
+        inst.total_time_int(a as f64, b as f64)
+    );
+    println!("  events              {}", res.events);
+    println!("  dropped uploads     {}", res.dropped_uploads);
+    println!("  UE barrier wait     {:.4}s", res.ue_barrier_wait_s);
+    println!("  edge barrier wait   {:.4}s", res.edge_barrier_wait_s);
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let sc = load_scenario(args)?;
+    let (topo, channel, association) = build_world(&sc)?;
+    let inst = DelayInstance::build(&topo, &channel, &association, sc.eps);
+    let int = solve_integer(&inst, &SolveOptions::default());
+    let a = sc.train.a.unwrap_or(int.a);
+    let b = sc.train.b.unwrap_or(int.b);
+    let _ = &topo;
+
+    let artifacts = find_artifacts(Some(sc.artifacts_dir.as_str()).filter(|s| !s.is_empty()))?;
+    let engine = Engine::load(&artifacts)?;
+    println!(
+        "loaded artifacts from {} (P={} params)",
+        artifacts.display(),
+        engine.meta.param_count
+    );
+
+    // Data: synthetic MNIST-like corpus partitioned across UEs. Train and
+    // test share the prototype seed (same task), not the sample seed.
+    let gen_cfg = synthetic::SyntheticConfig::default();
+    let total = sc.num_ues * sc.train.samples_per_ue;
+    let corpus = synthetic::generate_split(&gen_cfg, total, sc.seed, sc.seed ^ 0xDA7A);
+    let test = synthetic::generate_split(&gen_cfg, sc.train.test_samples, sc.seed, sc.seed ^ 0x7E57);
+    let mut rng = Rng::new(sc.seed ^ 0x5EED);
+    let shards = if sc.train.dirichlet_alpha > 0.0 {
+        partition_dirichlet(
+            &corpus,
+            sc.num_ues,
+            sc.train.samples_per_ue,
+            sc.train.dirichlet_alpha,
+            &mut rng,
+        )
+    } else {
+        partition_iid(&corpus, sc.num_ues, sc.train.samples_per_ue, &mut rng)
+    }
+    .map_err(|e| anyhow!(e))?;
+
+    let solver = LocalSolver::parse(&sc.train.solver, sc.train.lr).map_err(|e| anyhow!(e))?;
+    let run = TrainRun {
+        a,
+        b,
+        cloud_rounds: sc.train.cloud_rounds,
+        round_time_s: inst.round_time(a as f64, b as f64),
+        eval_every: 1,
+    };
+    println!(
+        "training: a={a} b={b} rounds={} lr={} solver={} ({} UEs x {} samples)",
+        run.cloud_rounds, sc.train.lr, sc.train.solver, sc.num_ues, sc.train.samples_per_ue
+    );
+
+    let outcome = run_hfl(
+        &engine,
+        solver,
+        shards,
+        association.members(),
+        &test,
+        &run,
+        sc.train.workers,
+        sc.seed,
+    )?;
+
+    let series = outcome.curve.to_series();
+    series.print("training curve (accuracy vs simulated completion time)");
+    let mut rec = Recorder::new();
+    rec.series.insert("train_curve".into(), series);
+    rec.write_dir(std::path::Path::new(&sc.results_dir))?;
+    if let Some(stem) = args.str("save-checkpoint") {
+        let meta = hfl::fl::CheckpointMeta {
+            param_count: outcome.final_model.len(),
+            cloud_round: sc.train.cloud_rounds,
+            a,
+            b,
+            test_acc: outcome.curve.final_acc() as f64,
+        };
+        let bin = hfl::fl::save_checkpoint(std::path::Path::new(&stem), &outcome.final_model, &meta)?;
+        println!("checkpoint saved to {}", bin.display());
+    }
+    println!(
+        "\nfinal accuracy {:.4} | wall {:.1}s | mean PJRT step {:.2}ms | results in {}/",
+        outcome.curve.final_acc(),
+        outcome.wall_s,
+        engine.mean_exec_ns() / 1e6,
+        sc.results_dir
+    );
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let sc = load_scenario(args)?;
+    println!("hfl v{}", hfl::VERSION);
+    println!(
+        "scenario: {} edges, {} UEs, eps={}, seed={}",
+        sc.num_edges, sc.num_ues, sc.eps, sc.seed
+    );
+    println!(
+        "system: area {}m, carrier {:.1} GHz, B={} MHz, B_n={} MHz, capacity {}",
+        sc.system.area_m,
+        sc.system.carrier_hz / 1e9,
+        sc.system.edge_bandwidth_hz / 1e6,
+        sc.system.ue_bandwidth_hz / 1e6,
+        sc.system.edge_capacity()
+    );
+    println!(
+        "learning: gamma={} zeta={} C={}",
+        sc.system.gamma, sc.system.zeta, sc.system.c_const
+    );
+    match find_artifacts(Some(sc.artifacts_dir.as_str()).filter(|s| !s.is_empty())) {
+        Ok(dir) => {
+            let meta = hfl::runtime::ArtifactMeta::load(&dir)?;
+            println!(
+                "artifacts: {} (P={}, train_batch={}, eval_batch={})",
+                dir.display(),
+                meta.param_count,
+                meta.train_batch,
+                meta.eval_batch
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn load_scenario(args: &Args) -> Result<Scenario> {
+    let cfg_path = args.str("config");
+    Scenario::load(cfg_path.as_deref(), args).map_err(|e| anyhow!(e))
+}

@@ -1,0 +1,206 @@
+//! Experiment metrics: named series, CSV/JSON emission, scoped timers.
+//!
+//! Examples and benches record every figure's series through a
+//! [`Recorder`], then dump `results/<name>.csv` + `.json` so the tables in
+//! EXPERIMENTS.md are regenerable from artifacts rather than retyped.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A named table: column names + rows.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(columns: &[&str]) -> Series {
+        Series {
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row arity mismatch for columns {:?}",
+            self.columns
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "columns",
+                Json::arr(self.columns.iter().map(|c| Json::str(c))),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|&v| Json::num(v)))),
+                ),
+            ),
+        ])
+    }
+
+    /// Pretty-print as an aligned text table (what benches show on stdout).
+    pub fn print(&self, title: &str) {
+        println!("\n--- {title} ---");
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| format!("{:.6}", r[i]).len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap_or(8)
+            })
+            .collect();
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(v, w)| format!("{:>w$}", format_cell(*v)))
+                .collect();
+            println!("{}", cells.join("  "));
+        }
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// Collects named series and writes them out together.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn series(&mut self, name: &str, columns: &[&str]) -> &mut Series {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(columns))
+    }
+
+    /// Write every series as `<dir>/<name>.csv` and a combined JSON file.
+    pub fn write_dir(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut all = BTreeMap::new();
+        for (name, series) in &self.series {
+            let mut f = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+            f.write_all(series.to_csv().as_bytes())?;
+            all.insert(name.clone(), series.to_json());
+        }
+        let mut f = std::fs::File::create(dir.join("results.json"))?;
+        f.write_all(Json::Obj(all).to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Timer {
+        Timer {
+            start: Instant::now(),
+            label: label.to_string(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn stop(self) -> f64 {
+        let dt = self.elapsed_s();
+        println!("[timer] {}: {:.3}s", self.label, dt);
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut s = Series::new(&["a", "b"]);
+        s.push(vec![1.0, 2.5]);
+        s.push(vec![3.0, 4.0]);
+        let csv = s.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("a,b\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut s = Series::new(&["a", "b"]);
+        s.push(vec![1.0]);
+    }
+
+    #[test]
+    fn recorder_writes_files() {
+        let dir = std::env::temp_dir().join(format!("hfl_metrics_{}", std::process::id()));
+        let mut rec = Recorder::new();
+        rec.series("t1", &["x", "y"]).push(vec![1.0, 2.0]);
+        rec.write_dir(&dir).unwrap();
+        assert!(dir.join("t1.csv").exists());
+        assert!(dir.join("results.json").exists());
+        let json = std::fs::read_to_string(dir.join("results.json")).unwrap();
+        assert!(Json::parse(&json).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+}

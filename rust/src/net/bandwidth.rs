@@ -1,0 +1,70 @@
+//! Bandwidth allocation policies for constraint (13e).
+//!
+//! The paper states both that "the bandwidth is equally allocated to all
+//! the UEs associated with the edge server" (§III-A.2) and that the
+//! association algorithms reason about a fixed per-UE block B_n with the
+//! cap `Σ_n χ_{n,m} B_n ≤ B` (Algorithm 3's `B/B_n` comparisons). Both
+//! policies are implemented; scenarios pick one.
+
+use super::topology::SystemParams;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BandwidthPolicy {
+    /// Every associated UE gets B / |N_m| (paper §III-A.2).
+    EqualShare,
+    /// Every UE gets a fixed block B_n; an edge hosts at most B/B_n UEs
+    /// (the capacity semantics Algorithm 3 uses).
+    FixedPerUe,
+}
+
+impl BandwidthPolicy {
+    /// Bandwidth (Hz) each UE gets when `k` UEs share edge `m`'s band.
+    pub fn per_ue_hz(&self, params: &SystemParams, k: usize) -> f64 {
+        match self {
+            BandwidthPolicy::EqualShare => params.edge_bandwidth_hz / k.max(1) as f64,
+            BandwidthPolicy::FixedPerUe => params.ue_bandwidth_hz,
+        }
+    }
+
+    /// Max UEs an edge can host under this policy (usize::MAX = unbounded).
+    pub fn capacity(&self, params: &SystemParams) -> usize {
+        match self {
+            BandwidthPolicy::EqualShare => usize::MAX,
+            BandwidthPolicy::FixedPerUe => params.edge_capacity(),
+        }
+    }
+
+    /// Check constraint (13e) for an edge hosting `k` UEs.
+    pub fn feasible(&self, params: &SystemParams, k: usize) -> bool {
+        match self {
+            BandwidthPolicy::EqualShare => true,
+            BandwidthPolicy::FixedPerUe => {
+                k as f64 * params.ue_bandwidth_hz <= params.edge_bandwidth_hz + 1e-9
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_share_splits() {
+        let p = SystemParams::default();
+        let pol = BandwidthPolicy::EqualShare;
+        assert_eq!(pol.per_ue_hz(&p, 4), p.edge_bandwidth_hz / 4.0);
+        assert_eq!(pol.per_ue_hz(&p, 0), p.edge_bandwidth_hz);
+        assert!(pol.feasible(&p, 10_000));
+    }
+
+    #[test]
+    fn fixed_caps_at_capacity() {
+        let p = SystemParams::default(); // 20 MHz / 1 MHz => 20
+        let pol = BandwidthPolicy::FixedPerUe;
+        assert_eq!(pol.capacity(&p), 20);
+        assert!(pol.feasible(&p, 20));
+        assert!(!pol.feasible(&p, 21));
+        assert_eq!(pol.per_ue_hz(&p, 7), p.ue_bandwidth_hz);
+    }
+}

@@ -1,0 +1,248 @@
+//! Channel model: free-space path loss + Shannon capacity (paper Eq. (4)
+//! and §V-A).
+//!
+//! The paper adopts the free-space model from Goldsmith [24]:
+//! `g_{n,m} = (wavelength / (4π · distance))²` at 28 GHz, and the uplink
+//! rate `r_{n,m} = B_n log2(1 + g_{n,m} p_n / N_0)` with OFDMA (no
+//! intra-cell interference).
+
+use super::topology::{EdgeServer, FadingModel, PathLossModel, SystemParams, Ue};
+use crate::util::Rng;
+
+/// Free-space path-loss channel gain between two points `dist_m` apart.
+///
+/// A minimum distance of 1 m is enforced (the far-field assumption of the
+/// model; also keeps the gain finite when a UE is sampled on top of an
+/// edge server).
+pub fn path_loss_gain(wavelength_m: f64, dist_m: f64) -> f64 {
+    let d = dist_m.max(1.0);
+    let x = wavelength_m / (4.0 * std::f64::consts::PI * d);
+    x * x
+}
+
+/// Channel gain under a configurable large-scale model.
+pub fn model_gain(model: PathLossModel, wavelength_m: f64, dist_m: f64) -> f64 {
+    match model {
+        PathLossModel::FreeSpace => path_loss_gain(wavelength_m, dist_m),
+        PathLossModel::LogDistance {
+            exponent,
+            ref_dist_m,
+        } => {
+            let d0 = ref_dist_m.max(1.0);
+            let g0 = path_loss_gain(wavelength_m, d0);
+            g0 * (d0 / dist_m.max(d0)).powf(exponent)
+        }
+    }
+}
+
+/// Uplink SNR `g p / N0` for a UE→edge link over `bandwidth_hz`.
+pub fn snr(params: &SystemParams, ue: &Ue, edge: &EdgeServer, bandwidth_hz: f64) -> f64 {
+    let g = path_loss_gain(params.wavelength_m(), ue.pos.dist(&edge.pos));
+    g * ue.tx_power_w / params.noise_w(bandwidth_hz)
+}
+
+/// Shannon rate (bit/s): `B log2(1 + snr)`.
+pub fn shannon_rate(bandwidth_hz: f64, snr: f64) -> f64 {
+    bandwidth_hz * (1.0 + snr).log2()
+}
+
+/// Precomputed N x M channel tables for one topology: gains, SNRs and
+/// uplink rates under the *fixed per-UE bandwidth* policy (the one the
+/// association sub-problem optimizes over; see `BandwidthPolicy` for the
+/// equal-share alternative).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub num_ues: usize,
+    pub num_edges: usize,
+    /// Row-major [ue][edge] channel gains g_{n,m}.
+    pub gain: Vec<f64>,
+    /// Row-major [ue][edge] SNR at B_n bandwidth.
+    pub snr: Vec<f64>,
+    /// Row-major [ue][edge] uplink rate (bit/s) at B_n bandwidth.
+    pub rate_bps: Vec<f64>,
+}
+
+impl Channel {
+    pub fn compute(params: &SystemParams, ues: &[Ue], edges: &[EdgeServer]) -> Channel {
+        let (n, m) = (ues.len(), edges.len());
+        let mut gain = Vec::with_capacity(n * m);
+        let mut snr_v = Vec::with_capacity(n * m);
+        let mut rate = Vec::with_capacity(n * m);
+        let bn = params.ue_bandwidth_hz;
+        let noise = params.noise_w(bn);
+        let wl = params.wavelength_m();
+        let mut fade_rng = match params.fading {
+            FadingModel::None => None,
+            FadingModel::Rayleigh { seed } => Some(Rng::new(seed ^ 0xFAD1_2345)),
+        };
+        for ue in ues {
+            for edge in edges {
+                let mut g = model_gain(params.path_loss, wl, ue.pos.dist(&edge.pos));
+                if let Some(rng) = fade_rng.as_mut() {
+                    // Rayleigh power: |h|^2 ~ Exp(1), unit mean.
+                    g *= rng.exponential(1.0);
+                }
+                let s = g * ue.tx_power_w / noise;
+                gain.push(g);
+                snr_v.push(s);
+                rate.push(shannon_rate(bn, s));
+            }
+        }
+        Channel {
+            num_ues: n,
+            num_edges: m,
+            gain,
+            snr: snr_v,
+            rate_bps: rate,
+        }
+    }
+
+    #[inline]
+    pub fn gain_of(&self, ue: usize, edge: usize) -> f64 {
+        self.gain[ue * self.num_edges + edge]
+    }
+
+    #[inline]
+    pub fn snr_of(&self, ue: usize, edge: usize) -> f64 {
+        self.snr[ue * self.num_edges + edge]
+    }
+
+    #[inline]
+    pub fn rate_of(&self, ue: usize, edge: usize) -> f64 {
+        self.rate_bps[ue * self.num_edges + edge]
+    }
+
+    /// Rate if the edge's bandwidth is equally shared among `k` UEs
+    /// (Eq. (4) with B_n = B/k). Noise scales with the allocated band.
+    pub fn rate_equal_share(
+        &self,
+        params: &SystemParams,
+        ue: usize,
+        edge: usize,
+        k: usize,
+    ) -> f64 {
+        let bn = params.edge_bandwidth_hz / k.max(1) as f64;
+        let snr = self.gain_of(ue, edge) * params_tx_power(params)
+            / params.noise_w(bn);
+        shannon_rate(bn, snr)
+    }
+}
+
+// All UEs transmit at p_max in the optimal solution (§IV-C.1); keep the
+// helper local so `rate_equal_share` does not need the Ue list again.
+fn params_tx_power(params: &SystemParams) -> f64 {
+    super::topology::dbm_to_w(params.p_max_dbm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::Topology;
+
+    fn topo() -> Topology {
+        Topology::sample(&SystemParams::default(), 3, 30, 42)
+    }
+
+    #[test]
+    fn gain_decreases_with_distance() {
+        let wl = 3.0 / 280.0;
+        assert!(path_loss_gain(wl, 10.0) > path_loss_gain(wl, 100.0));
+        assert!(path_loss_gain(wl, 100.0) > path_loss_gain(wl, 400.0));
+    }
+
+    #[test]
+    fn gain_matches_paper_formula() {
+        // g = ((3/280) / (4π·250))² at 250 m.
+        let wl = 3.0 / 280.0;
+        let g = path_loss_gain(wl, 250.0);
+        let expect = (wl / (4.0 * std::f64::consts::PI * 250.0)).powi(2);
+        assert!((g - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn min_distance_clamped() {
+        let wl = 3.0 / 280.0;
+        assert_eq!(path_loss_gain(wl, 0.0), path_loss_gain(wl, 0.5));
+    }
+
+    #[test]
+    fn rate_monotone_in_snr() {
+        assert!(shannon_rate(1e6, 100.0) > shannon_rate(1e6, 10.0));
+        assert!(shannon_rate(2e6, 10.0) > shannon_rate(1e6, 10.0));
+        assert_eq!(shannon_rate(1e6, 0.0), 0.0);
+    }
+
+    #[test]
+    fn channel_tables_consistent() {
+        let t = topo();
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        for n in 0..t.num_ues() {
+            for m in 0..t.num_edges() {
+                let s = snr(&t.params, &t.ues[n], &t.edges[m], t.params.ue_bandwidth_hz);
+                assert!((ch.snr_of(n, m) - s).abs() / s < 1e-9);
+                let r = shannon_rate(t.params.ue_bandwidth_hz, s);
+                assert!((ch.rate_of(n, m) - r).abs() / r < 1e-9);
+                assert!(ch.rate_of(n, m) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn equal_share_rate_decreases_with_more_ues() {
+        let t = topo();
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let r1 = ch.rate_equal_share(&t.params, 0, 0, 1);
+        let r10 = ch.rate_equal_share(&t.params, 0, 0, 10);
+        assert!(r1 > r10, "{r1} vs {r10}");
+    }
+
+    #[test]
+    fn log_distance_decays_faster_than_free_space() {
+        let wl = 3.0 / 280.0;
+        let model = crate::net::topology::PathLossModel::LogDistance {
+            exponent: 3.5,
+            ref_dist_m: 10.0,
+        };
+        // Equal at the reference distance...
+        let g_ref = model_gain(model, wl, 10.0);
+        assert!((g_ref - path_loss_gain(wl, 10.0)).abs() / g_ref < 1e-12);
+        // ...and below free space beyond it.
+        assert!(model_gain(model, wl, 200.0) < path_loss_gain(wl, 200.0));
+        // Monotone decreasing.
+        assert!(model_gain(model, wl, 100.0) > model_gain(model, wl, 400.0));
+    }
+
+    #[test]
+    fn rayleigh_fading_is_seeded_and_unit_mean() {
+        let mut params = SystemParams::default();
+        params.fading = crate::net::topology::FadingModel::Rayleigh { seed: 9 };
+        let t = Topology::sample(&params, 2, 400, 1);
+        let faded1 = Channel::compute(&params, &t.ues, &t.edges);
+        let faded2 = Channel::compute(&params, &t.ues, &t.edges);
+        assert_eq!(faded1.gain, faded2.gain, "same seed, same fading");
+        let mut base = params.clone();
+        base.fading = crate::net::topology::FadingModel::None;
+        let clean = Channel::compute(&base, &t.ues, &t.edges);
+        // Fading is multiplicative with unit mean: the gain ratios must
+        // average close to 1 over many links.
+        let ratios: Vec<f64> = faded1
+            .gain
+            .iter()
+            .zip(&clean.gain)
+            .map(|(f, c)| f / c)
+            .collect();
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 1.0).abs() < 0.1, "mean fading power {mean}");
+        assert!(ratios.iter().any(|&r| r < 0.5) && ratios.iter().any(|&r| r > 1.5));
+    }
+
+    #[test]
+    fn realistic_magnitudes() {
+        // At ~250 m, 1 MHz, 10 dBm the uplink should land in the single-
+        // digit Mbit/s range — the regime the paper's latency numbers live in.
+        let t = topo();
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let r = ch.rate_of(0, 0);
+        assert!(r > 1e5 && r < 1e8, "rate {r}");
+    }
+}

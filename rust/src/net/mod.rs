@@ -1,0 +1,15 @@
+//! Wireless-network substrate for the paper's system model (§III).
+//!
+//! The paper evaluates on a *simulated* wireless deployment: UEs uniform in
+//! a 500 m x 500 m square, edge servers at cell centers, free-space path
+//! loss at 28 GHz, OFDMA uplinks with Shannon-capacity rates, and a wired
+//! edge→cloud backhaul. This module owns all of that physical-layer state;
+//! `delay/` turns it into the paper's timing quantities.
+
+pub mod bandwidth;
+pub mod channel;
+pub mod topology;
+
+pub use bandwidth::BandwidthPolicy;
+pub use channel::{path_loss_gain, shannon_rate, snr, Channel};
+pub use topology::{EdgeServer, Position, SystemParams, Topology, Ue};

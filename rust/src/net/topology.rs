@@ -1,0 +1,303 @@
+//! Deployment geometry + per-entity physical parameters (paper §V-A).
+
+use crate::util::Rng;
+
+/// 2-D position in meters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Position {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Position {
+    pub fn dist(&self, other: &Position) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// Physical / learning constants of a scenario. Defaults follow the
+/// paper's §V-A experiment settings; everything is overridable from TOML
+/// or the CLI (see `config/`).
+#[derive(Debug, Clone)]
+pub struct SystemParams {
+    /// Side of the square deployment area (m). Paper: 500.
+    pub area_m: f64,
+    /// Carrier frequency (Hz). Paper: 28 GHz.
+    pub carrier_hz: f64,
+    /// Noise power spectral density (dBm/Hz). Thermal: -174.
+    pub noise_dbm_per_hz: f64,
+    /// Total uplink bandwidth per edge server B (Hz).
+    pub edge_bandwidth_hz: f64,
+    /// Per-UE allocated bandwidth B_n (Hz) under the fixed-allocation
+    /// policy used by the association sub-problem (constraint (13e)).
+    pub ue_bandwidth_hz: f64,
+    /// Max UE CPU frequency f_n^max (Hz). Paper: 2 GHz.
+    pub f_max_hz: f64,
+    /// Max UE transmit power p_n^max (dBm). Paper: 10 dBm.
+    pub p_max_dbm: f64,
+    /// CPU cycles per sample C_n, drawn uniformly from this range.
+    pub cycles_per_sample: (f64, f64),
+    /// Local dataset size D_n (samples), drawn uniformly from this range.
+    pub samples_per_ue: (u64, u64),
+    /// Local model size d_n (bits). LeNet: 44426 f32 = 1.42 Mbit.
+    pub model_bits: f64,
+    /// Edge model size d_m (bits). Same architecture => same size.
+    pub edge_model_bits: f64,
+    /// Edge→cloud backhaul rate r_m (bit/s). The paper never states
+    /// its backhaul; 1 Mb/s (a constrained wireless backhaul) places the
+    /// optimizer in the paper's operating regime (b* ≈ 3-7, Fig. 2/4/6).
+    /// With a fast wired backhaul (e.g. 150 Mb/s) b* pins to 1 — see
+    /// EXPERIMENTS.md §Fig2.
+    pub edge_cloud_rate_bps: f64,
+    /// Loss-geometry constant γ of Eq. (7). Paper: random int 1..10.
+    pub gamma: f64,
+    /// Loss-geometry constant ζ of Eq. (2). Paper: random int 1..10.
+    pub zeta: f64,
+    /// Constant C of Eq. (14).
+    pub c_const: f64,
+    /// Large-scale propagation model (paper: free space).
+    pub path_loss: PathLossModel,
+    /// Small-scale fading (extension; paper: none).
+    pub fading: FadingModel,
+}
+
+/// Large-scale path-loss models. The paper uses free space (§V-A);
+/// log-distance is the standard urban generalization [Goldsmith, ch. 2]
+/// provided as an extension for sensitivity studies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PathLossModel {
+    /// `g = (λ / 4πd)²` — the paper's model.
+    FreeSpace,
+    /// Free-space gain at `ref_dist_m`, then decay with `exponent`:
+    /// `g(d) = g_fs(d0) · (d0/d)^exponent`.
+    LogDistance { exponent: f64, ref_dist_m: f64 },
+}
+
+/// Small-scale fading applied multiplicatively to the channel gain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FadingModel {
+    /// Deterministic gains (the paper's setting).
+    None,
+    /// Rayleigh block fading: per-link power `|h|² ~ Exp(1)` (unit mean),
+    /// drawn once per topology from `seed` — models a static snapshot of
+    /// a scattering environment.
+    Rayleigh { seed: u64 },
+}
+
+impl Default for SystemParams {
+    fn default() -> Self {
+        SystemParams {
+            area_m: 500.0,
+            carrier_hz: 28e9,
+            noise_dbm_per_hz: -174.0,
+            edge_bandwidth_hz: 20e6,
+            ue_bandwidth_hz: 1e6,
+            f_max_hz: 2e9,
+            p_max_dbm: 10.0,
+            cycles_per_sample: (1e4, 3e4),
+            samples_per_ue: (300, 700),
+            model_bits: 44426.0 * 32.0,
+            edge_model_bits: 44426.0 * 32.0,
+            edge_cloud_rate_bps: 1e6,
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            path_loss: PathLossModel::FreeSpace,
+            fading: FadingModel::None,
+        }
+    }
+}
+
+impl SystemParams {
+    /// Wavelength (m) of the carrier.
+    pub fn wavelength_m(&self) -> f64 {
+        299_792_458.0 / self.carrier_hz
+    }
+
+    /// Noise power (W) over a band of `bandwidth_hz`.
+    pub fn noise_w(&self, bandwidth_hz: f64) -> f64 {
+        dbm_to_w(self.noise_dbm_per_hz) * bandwidth_hz
+    }
+
+    /// Max UEs one edge server can host under constraint (13e) with the
+    /// fixed per-UE bandwidth allocation.
+    pub fn edge_capacity(&self) -> usize {
+        (self.edge_bandwidth_hz / self.ue_bandwidth_hz).floor() as usize
+    }
+
+    /// Draw γ, ζ as the paper does ("random integers between 1 to 10").
+    pub fn randomize_loss_constants(&mut self, rng: &mut Rng) {
+        self.gamma = rng.int_range(1, 10) as f64;
+        self.zeta = rng.int_range(1, 10) as f64;
+    }
+}
+
+/// Convert dBm to watts.
+pub fn dbm_to_w(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// A user equipment (paper: UE n).
+#[derive(Debug, Clone)]
+pub struct Ue {
+    pub id: usize,
+    pub pos: Position,
+    /// CPU frequency f_n (Hz); optimal solution pins it to f_max (§IV-C.1).
+    pub cpu_hz: f64,
+    /// Transmit power p_n (W); pinned to p_max by the optimizer.
+    pub tx_power_w: f64,
+    /// Cycles to process one sample, C_n.
+    pub cycles_per_sample: f64,
+    /// Local dataset size D_n.
+    pub num_samples: u64,
+    /// Local model size d_n (bits).
+    pub model_bits: f64,
+}
+
+/// An edge server (paper: m).
+#[derive(Debug, Clone)]
+pub struct EdgeServer {
+    pub id: usize,
+    pub pos: Position,
+    /// Total uplink bandwidth B (Hz).
+    pub bandwidth_hz: f64,
+    /// Backhaul rate to the cloud r_m (bit/s).
+    pub cloud_rate_bps: f64,
+    /// Edge model size d_m (bits).
+    pub model_bits: f64,
+}
+
+/// A sampled deployment: N UEs + M edge servers + the scenario constants.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub params: SystemParams,
+    pub ues: Vec<Ue>,
+    pub edges: Vec<EdgeServer>,
+}
+
+impl Topology {
+    /// Sample a deployment: UEs uniform in the square; edge servers on a
+    /// regular sub-grid ("located in the center" of their cells, §V-A).
+    pub fn sample(params: &SystemParams, num_edges: usize, num_ues: usize, seed: u64) -> Topology {
+        let mut rng = Rng::new(seed);
+        let a = params.area_m;
+
+        // Edge grid: ceil(sqrt(M)) columns; centers of equal cells.
+        let cols = (num_edges as f64).sqrt().ceil() as usize;
+        let rows = num_edges.div_ceil(cols);
+        let mut edges = Vec::with_capacity(num_edges);
+        for m in 0..num_edges {
+            let (r, c) = (m / cols, m % cols);
+            edges.push(EdgeServer {
+                id: m,
+                pos: Position {
+                    x: (c as f64 + 0.5) * a / cols as f64,
+                    y: (r as f64 + 0.5) * a / rows as f64,
+                },
+                bandwidth_hz: params.edge_bandwidth_hz,
+                cloud_rate_bps: params.edge_cloud_rate_bps,
+                model_bits: params.edge_model_bits,
+            });
+        }
+
+        let ues = (0..num_ues)
+            .map(|n| {
+                let (c_lo, c_hi) = params.cycles_per_sample;
+                let (s_lo, s_hi) = params.samples_per_ue;
+                Ue {
+                    id: n,
+                    pos: Position {
+                        x: rng.range(0.0, a),
+                        y: rng.range(0.0, a),
+                    },
+                    cpu_hz: params.f_max_hz,
+                    tx_power_w: dbm_to_w(params.p_max_dbm),
+                    cycles_per_sample: rng.range(c_lo, c_hi),
+                    num_samples: rng.int_range(s_lo as i64, s_hi as i64) as u64,
+                    model_bits: params.model_bits,
+                }
+            })
+            .collect();
+
+        Topology {
+            params: params.clone(),
+            ues,
+            edges,
+        }
+    }
+
+    pub fn num_ues(&self) -> usize {
+        self.ues.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Total data volume D across all UEs (Eq. (10) denominator).
+    pub fn total_samples(&self) -> u64 {
+        self.ues.iter().map(|u| u.num_samples).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_is_deterministic() {
+        let p = SystemParams::default();
+        let a = Topology::sample(&p, 5, 50, 7);
+        let b = Topology::sample(&p, 5, 50, 7);
+        assert_eq!(a.ues.len(), 50);
+        assert_eq!(a.edges.len(), 5);
+        for (x, y) in a.ues.iter().zip(&b.ues) {
+            assert_eq!(x.pos, y.pos);
+            assert_eq!(x.num_samples, y.num_samples);
+        }
+    }
+
+    #[test]
+    fn ues_inside_area() {
+        let p = SystemParams::default();
+        let t = Topology::sample(&p, 4, 200, 3);
+        for u in &t.ues {
+            assert!(u.pos.x >= 0.0 && u.pos.x <= p.area_m);
+            assert!(u.pos.y >= 0.0 && u.pos.y <= p.area_m);
+        }
+        for e in &t.edges {
+            assert!(e.pos.x > 0.0 && e.pos.x < p.area_m);
+        }
+    }
+
+    #[test]
+    fn single_edge_is_centered() {
+        let p = SystemParams::default();
+        let t = Topology::sample(&p, 1, 10, 1);
+        assert!((t.edges[0].pos.x - 250.0).abs() < 1e-9);
+        assert!((t.edges[0].pos.y - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn physical_constants() {
+        let p = SystemParams::default();
+        // 28 GHz -> wavelength ~ 10.7 mm (paper uses 3/280 m ≈ 10.714 mm).
+        assert!((p.wavelength_m() - 3.0 / 280.0).abs() < 1e-4);
+        // 10 dBm = 10 mW.
+        assert!((dbm_to_w(10.0) - 0.01).abs() < 1e-12);
+        // Capacity: 20 MHz / 1 MHz = 20 UEs per edge.
+        assert_eq!(p.edge_capacity(), 20);
+    }
+
+    #[test]
+    fn randomize_loss_constants_in_range() {
+        let mut p = SystemParams::default();
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            p.randomize_loss_constants(&mut rng);
+            assert!((1.0..=10.0).contains(&p.gamma));
+            assert!((1.0..=10.0).contains(&p.zeta));
+            assert_eq!(p.gamma.fract(), 0.0);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Sub-problem I: optimal local-iteration count `a` and edge-iteration
+//! count `b` (paper §IV-B/C).
+//!
+//! Three solvers over the same [`DelayInstance`] objective
+//! `J(a,b) = R(a,b,ε) · T(a,b)`:
+//!
+//! * [`exact::solve_continuous`] — nested golden-section on the relaxed
+//!   (continuous) problem, exploiting the convexity the paper proves in
+//!   Lemmas 1–3. The reference the other solvers are validated against.
+//! * [`exact::solve_integer`] — exhaustive scan over the integer grid
+//!   (constraint (13f)) with the protocol-real ⌈R⌉ round count. The
+//!   instance sizes of the paper (a ≤ ~100, b ≤ ~50) make this exact
+//!   solver microseconds-fast, so it is also the production path.
+//! * [`lagrangian::SubgradientSolver`] — the paper's Algorithm 2: KKT
+//!   closed forms (31)/(32) for (a*, b*) inside a subgradient-projection
+//!   loop on the Lagrange dual variables (36)/(37).
+
+pub mod exact;
+pub mod lagrangian;
+
+pub use exact::{solve_continuous, solve_integer, IntSolution, Solution, SolveOptions};
+pub use lagrangian::{SubgradientSolver, SubgradientTrace};

@@ -1,0 +1,347 @@
+//! The PJRT bridge: load `artifacts/*.hlo.txt`, compile once on the CPU
+//! PJRT client, and expose typed `execute` wrappers for the FL hot loop.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` for why the
+//! serialized-proto path is rejected by xla_extension 0.5.1). Each
+//! executable is compiled exactly once at engine construction; per-step
+//! cost is literal upload + execute + literal download.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/meta.json` (written by the python AOT pass).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub param_count: usize,
+    pub image_hw: usize,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub init_seed: u64,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parse meta.json: {e}"))?;
+        let field = |name: &str| -> Result<usize> {
+            json.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json missing numeric field '{name}'"))
+        };
+        Ok(ArtifactMeta {
+            param_count: field("param_count")?,
+            image_hw: field("image_hw")?,
+            num_classes: field("num_classes")?,
+            train_batch: field("train_batch")?,
+            eval_batch: field("eval_batch")?,
+            init_seed: field("init_seed")? as u64,
+        })
+    }
+}
+
+/// Execution statistics (hot-path observability).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub train_steps: AtomicU64,
+    pub grad_steps: AtomicU64,
+    pub eval_steps: AtomicU64,
+    pub exec_ns: AtomicU64,
+}
+
+/// Compiled-model runtime. One instance per process; shareable across the
+/// coordinator's worker threads (see [`Engine`] safety note).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    train_step: xla::PjRtLoadedExecutable,
+    grad_step: xla::PjRtLoadedExecutable,
+    eval_step: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    init_params: Vec<f32>,
+    pub stats: EngineStats,
+    pub artifacts_dir: PathBuf,
+}
+
+// SAFETY: the xla crate's wrappers are `!Send`/`!Sync` only because they
+// hold raw pointers. The underlying objects — PJRT CPU client and loaded
+// executables — are documented thread-safe in XLA (the PJRT C API allows
+// concurrent `Execute` calls on one loaded executable; the TFRT CPU
+// client serializes/parallelizes internally). We never mutate the
+// wrappers after construction; all &self calls go straight to
+// thread-safe C++ entry points.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("load {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))
+        };
+
+        let train_step = compile("train_step")?;
+        let grad_step = compile("grad_step")?;
+        let eval_step = compile("eval_step")?;
+
+        let init_path = dir.join("init_params.bin");
+        let bytes = std::fs::read(&init_path)
+            .with_context(|| format!("read {}", init_path.display()))?;
+        if bytes.len() != meta.param_count * 4 {
+            bail!(
+                "init_params.bin is {} bytes, expected {} (param_count {})",
+                bytes.len(),
+                meta.param_count * 4,
+                meta.param_count
+            );
+        }
+        let init_params: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        Ok(Engine {
+            client,
+            train_step,
+            grad_step,
+            eval_step,
+            meta,
+            init_params,
+            stats: EngineStats::default(),
+            artifacts_dir: dir.to_path_buf(),
+        })
+    }
+
+    /// The build-time initial parameter vector (identical for every UE, as
+    /// Algorithm 1 line 1 requires).
+    pub fn init_params(&self) -> Vec<f32> {
+        self.init_params.clone()
+    }
+
+    fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        if params.len() != self.meta.param_count {
+            bail!(
+                "params length {} != param_count {}",
+                params.len(),
+                self.meta.param_count
+            );
+        }
+        Ok(xla::Literal::vec1(params))
+    }
+
+    fn batch_literals(&self, x: &[f32], y: &[i32], batch: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let hw = self.meta.image_hw;
+        if x.len() != batch * hw * hw {
+            bail!("x length {} != {}x{}x{}", x.len(), batch, hw, hw);
+        }
+        if y.len() != batch {
+            bail!("y length {} != batch {}", y.len(), batch);
+        }
+        let xl = xla::Literal::vec1(x).reshape(&[batch as i64, hw as i64, hw as i64, 1])?;
+        let yl = xla::Literal::vec1(y);
+        Ok((xl, yl))
+    }
+
+    /// One fused GD step: `(params, batch, lr) -> (params', loss)`.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let t0 = std::time::Instant::now();
+        let p = self.params_literal(params)?;
+        let (xl, yl) = self.batch_literals(x, y, self.meta.train_batch)?;
+        let lrl = xla::Literal::scalar(lr);
+        let result = self.train_step.execute::<xla::Literal>(&[p, xl, yl, lrl])?[0][0]
+            .to_literal_sync()?;
+        let (new_params, loss) = result.to_tuple2()?;
+        let out = (new_params.to_vec::<f32>()?, loss.get_first_element::<f32>()?);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Gradient only: `(params, batch) -> (grad, loss)` — used by the
+    /// DANE-style local solver which forms its own update on the rust side.
+    pub fn grad_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let t0 = std::time::Instant::now();
+        let p = self.params_literal(params)?;
+        let (xl, yl) = self.batch_literals(x, y, self.meta.train_batch)?;
+        let result =
+            self.grad_step.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let (grad, loss) = result.to_tuple2()?;
+        let out = (grad.to_vec::<f32>()?, loss.get_first_element::<f32>()?);
+        self.stats.grad_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// One evaluation shard: `(params, batch) -> (loss_sum, correct)`.
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let t0 = std::time::Instant::now();
+        let p = self.params_literal(params)?;
+        let (xl, yl) = self.batch_literals(x, y, self.meta.eval_batch)?;
+        let result =
+            self.eval_step.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let (loss_sum, correct) = result.to_tuple2()?;
+        let out = (
+            loss_sum.get_first_element::<f32>()?,
+            correct.get_first_element::<f32>()?,
+        );
+        self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Evaluate over a full test set, padding the last shard. Returns
+    /// (mean loss, accuracy).
+    pub fn evaluate(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f32, f32)> {
+        let e = self.meta.eval_batch;
+        let hw = self.meta.image_hw;
+        let n = ys.len();
+        if n == 0 {
+            bail!("empty eval set");
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        let mut shard_x = vec![0.0f32; e * hw * hw];
+        let mut shard_y = vec![0i32; e];
+        while seen < n {
+            let take = (n - seen).min(e);
+            shard_x[..take * hw * hw]
+                .copy_from_slice(&xs[seen * hw * hw..(seen + take) * hw * hw]);
+            shard_y[..take].copy_from_slice(&ys[seen..seen + take]);
+            if take < e {
+                // Pad by repeating the first example; corrections applied below.
+                for i in take..e {
+                    shard_x.copy_within(0..hw * hw, i * hw * hw);
+                    shard_y[i] = shard_y[0];
+                }
+            }
+            let (ls, cc) = self.eval_step(params, &shard_x, &shard_y)?;
+            if take < e {
+                // Subtract the padded duplicates' contribution: evaluate the
+                // first example alone via proportionality is not exact, so
+                // recompute: padded examples are copies of shard[0]; their
+                // per-example loss/correctness equals (ls0, cc0) measured on
+                // a full shard of copies.
+                let x0: Vec<f32> = shard_x[..hw * hw].repeat(e);
+                let y0 = vec![shard_y[0]; e];
+                let (ls0, cc0) = self.eval_step(params, &x0, &y0)?;
+                let pad = (e - take) as f32;
+                loss_sum += (ls - ls0 / e as f32 * pad) as f64;
+                correct += (cc - cc0 / e as f32 * pad) as f64;
+            } else {
+                loss_sum += ls as f64;
+                correct += cc as f64;
+            }
+            seen += take;
+        }
+        Ok((
+            (loss_sum / n as f64) as f32,
+            (correct / n as f64) as f32,
+        ))
+    }
+
+    /// Mean PJRT execute latency in nanoseconds (all step kinds).
+    pub fn mean_exec_ns(&self) -> f64 {
+        let steps = self.stats.train_steps.load(Ordering::Relaxed)
+            + self.stats.grad_steps.load(Ordering::Relaxed)
+            + self.stats.eval_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.stats.exec_ns.load(Ordering::Relaxed) as f64 / steps as f64
+        }
+    }
+}
+
+/// Locate the artifacts directory: explicit argument, `HFL_ARTIFACTS`
+/// env var, or walk up from the current directory.
+pub fn find_artifacts(explicit: Option<&str>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        let path = PathBuf::from(p);
+        if path.join("meta.json").exists() {
+            return Ok(path);
+        }
+        bail!("artifacts dir {p} has no meta.json (run `make artifacts`)");
+    }
+    if let Ok(p) = std::env::var("HFL_ARTIFACTS") {
+        let path = PathBuf::from(p);
+        if path.join("meta.json").exists() {
+            return Ok(path);
+        }
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("no artifacts/ directory found (run `make artifacts`)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hfl_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"param_count": 44426, "image_hw": 28, "num_classes": 10,
+                "train_batch": 32, "eval_batch": 128, "init_seed": 0}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.param_count, 44426);
+        assert_eq!(meta.image_hw, 28);
+        assert_eq!(meta.eval_batch, 128);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_missing_field_rejected() {
+        let dir = std::env::temp_dir().join(format!("hfl_meta_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{"param_count": 5}"#).unwrap();
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_artifacts_rejects_bogus() {
+        assert!(find_artifacts(Some("/nonexistent/nowhere")).is_err());
+    }
+}

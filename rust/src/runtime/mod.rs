@@ -1,0 +1,6 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once on the CPU
+//! PJRT client, execute train/grad/eval steps from the L3 hot path.
+
+pub mod engine;
+
+pub use engine::{find_artifacts, ArtifactMeta, Engine, EngineStats};

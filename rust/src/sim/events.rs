@@ -1,0 +1,356 @@
+//! The discrete-event engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::delay::{cloud_rounds_int, DelayInstance};
+use crate::util::Rng;
+
+/// Total-order wrapper for event timestamps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN timestamp")
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Local iterations per edge round (paper: a).
+    pub a: u64,
+    /// Edge rounds per cloud round (paper: b).
+    pub b: u64,
+    /// Cloud rounds; `None` = derive from the accuracy model (⌈R⌉).
+    pub rounds: Option<u64>,
+    /// Lognormal jitter sigma on every compute/upload duration
+    /// (0 = deterministic).
+    pub jitter_sigma: f64,
+    /// Probability a UE drops out of a given edge round.
+    pub dropout_prob: f64,
+    /// RNG seed for jitter/dropout.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn deterministic(a: u64, b: u64) -> SimConfig {
+        SimConfig {
+            a,
+            b,
+            rounds: None,
+            jitter_sigma: 0.0,
+            dropout_prob: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Protocol makespan (seconds).
+    pub total_time_s: f64,
+    /// Completion time of each cloud round.
+    pub round_end_s: Vec<f64>,
+    /// Events processed (engine throughput metric).
+    pub events: u64,
+    /// UE-round uploads dropped by failure injection.
+    pub dropped_uploads: u64,
+    /// Cumulative time edges spent waiting at the cloud barrier.
+    pub edge_barrier_wait_s: f64,
+    /// Cumulative time the per-edge aggregation barrier waited on its
+    /// slowest member (straggler cost).
+    pub ue_barrier_wait_s: f64,
+    /// Cloud rounds executed.
+    pub rounds: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    /// UE `ue_slot` of edge `edge` delivered its model for edge round `k`.
+    UeUploadDone { edge: usize, ue_slot: usize, k: u64 },
+    /// Edge `edge` delivered its aggregate to the cloud.
+    EdgeUploadDone { edge: usize },
+}
+
+/// Run the protocol. See module docs.
+pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
+    let rounds = cfg.rounds.unwrap_or_else(|| {
+        cloud_rounds_int(
+            cfg.a as f64,
+            cfg.b as f64,
+            inst.eps,
+            inst.c_const,
+            inst.gamma,
+            inst.zeta,
+        )
+    });
+    let mut rng = Rng::new(cfg.seed);
+    let m_edges = inst.per_edge.len();
+
+    let mut result = SimResult {
+        total_time_s: 0.0,
+        round_end_s: Vec::with_capacity(rounds as usize),
+        events: 0,
+        dropped_uploads: 0,
+        edge_barrier_wait_s: 0.0,
+        ue_barrier_wait_s: 0.0,
+        rounds,
+    };
+
+    // Jittered duration: lognormal multiplier with median 1.
+    let dur = |base: f64, rng: &mut Rng| -> f64 {
+        if cfg.jitter_sigma <= 0.0 {
+            base
+        } else {
+            base * (cfg.jitter_sigma * rng.normal()).exp()
+        }
+    };
+
+    let mut now = 0.0f64;
+    for _round in 0..rounds {
+        let mut heap: BinaryHeap<Reverse<(OrdF64, Event)>> = BinaryHeap::new();
+
+        // Edge state for this cloud round.
+        let mut edge_round: Vec<u64> = vec![0; m_edges]; // current k
+        let mut pending: Vec<usize> = vec![0; m_edges]; // uploads still awaited
+        let mut first_arrival: Vec<f64> = vec![f64::INFINITY; m_edges];
+        let mut edges_pending = m_edges;
+        let mut edge_done_at: Vec<f64> = vec![0.0; m_edges];
+
+        // Kick off edge round 0 at `now` for every edge.
+        for (m, e) in inst.per_edge.iter().enumerate() {
+            let mut live = 0;
+            for (slot, &(cmp, com)) in e.ue.iter().enumerate() {
+                if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
+                    result.dropped_uploads += 1;
+                    continue;
+                }
+                live += 1;
+                let t = now + cfg.a as f64 * dur(cmp, &mut rng) + dur(com, &mut rng);
+                heap.push(Reverse((
+                    OrdF64(t),
+                    Event::UeUploadDone {
+                        edge: m,
+                        ue_slot: slot,
+                        k: 0,
+                    },
+                )));
+            }
+            pending[m] = live;
+            // Edge with zero live members (all dropped / no members):
+            // proceeds through its b rounds instantly.
+            if live == 0 {
+                let t = now + dur(e.backhaul_s, &mut rng);
+                heap.push(Reverse((OrdF64(t), Event::EdgeUploadDone { edge: m })));
+            }
+        }
+
+        let mut cloud_round_end = now;
+        while let Some(Reverse((OrdF64(t), ev))) = heap.pop() {
+            result.events += 1;
+            match ev {
+                Event::UeUploadDone { edge, ue_slot, k } => {
+                    debug_assert_eq!(k, edge_round[edge]);
+                    let _ = ue_slot;
+                    first_arrival[edge] = first_arrival[edge].min(t);
+                    pending[edge] -= 1;
+                    if pending[edge] > 0 {
+                        continue;
+                    }
+                    // Barrier complete: straggler wait = last - first.
+                    if first_arrival[edge].is_finite() {
+                        result.ue_barrier_wait_s += t - first_arrival[edge];
+                    }
+                    first_arrival[edge] = f64::INFINITY;
+                    edge_round[edge] += 1;
+                    if edge_round[edge] < cfg.b {
+                        // Next edge round: every member restarts at `t`.
+                        let k_next = edge_round[edge];
+                        let mut live = 0;
+                        for (slot, &(cmp, com)) in inst.per_edge[edge].ue.iter().enumerate() {
+                            if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
+                                result.dropped_uploads += 1;
+                                continue;
+                            }
+                            live += 1;
+                            let tn = t + cfg.a as f64 * dur(cmp, &mut rng) + dur(com, &mut rng);
+                            heap.push(Reverse((
+                                OrdF64(tn),
+                                Event::UeUploadDone {
+                                    edge,
+                                    ue_slot: slot,
+                                    k: k_next,
+                                },
+                            )));
+                        }
+                        pending[edge] = live;
+                        if live == 0 {
+                            // Everyone dropped: skip straight to backhaul.
+                            let tb = t + dur(inst.per_edge[edge].backhaul_s, &mut rng);
+                            heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
+                        }
+                    } else {
+                        // b edge rounds done: upload aggregate to the cloud.
+                        let tb = t + dur(inst.per_edge[edge].backhaul_s, &mut rng);
+                        heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
+                    }
+                }
+                Event::EdgeUploadDone { edge } => {
+                    edge_done_at[edge] = t;
+                    edges_pending -= 1;
+                    cloud_round_end = cloud_round_end.max(t);
+                    if edges_pending == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        // Cloud barrier wait accounting.
+        for &done in &edge_done_at {
+            result.edge_barrier_wait_s += cloud_round_end - done;
+        }
+        now = cloud_round_end;
+        result.round_end_s.push(now);
+    }
+    result.total_time_s = now;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{DelayInstance, EdgeDelays};
+
+    fn inst() -> DelayInstance {
+        DelayInstance {
+            per_edge: vec![
+                EdgeDelays {
+                    ue: vec![(0.005, 0.3), (0.008, 0.2)],
+                    backhaul_s: 0.01,
+                },
+                EdgeDelays {
+                    ue: vec![(0.004, 0.25), (0.010, 0.15), (0.002, 0.4)],
+                    backhaul_s: 0.02,
+                },
+            ],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        }
+    }
+
+    #[test]
+    fn deterministic_matches_closed_form() {
+        let i = inst();
+        for &(a, b) in &[(1u64, 1u64), (10, 5), (35, 5), (30, 7)] {
+            let cfg = SimConfig::deterministic(a, b);
+            let res = simulate(&i, &cfg);
+            let rounds = cloud_rounds_int(a as f64, b as f64, i.eps, i.c_const, i.gamma, i.zeta);
+            let expect = rounds as f64 * i.round_time(a as f64, b as f64);
+            assert!(
+                (res.total_time_s - expect).abs() < 1e-9,
+                "a={a} b={b}: sim {} vs closed form {expect}",
+                res.total_time_s
+            );
+            assert_eq!(res.rounds, rounds);
+            assert_eq!(res.round_end_s.len(), rounds as usize);
+        }
+    }
+
+    #[test]
+    fn explicit_round_count_respected() {
+        let i = inst();
+        let cfg = SimConfig {
+            rounds: Some(3),
+            ..SimConfig::deterministic(10, 4)
+        };
+        let res = simulate(&i, &cfg);
+        assert_eq!(res.rounds, 3);
+        let expect = 3.0 * i.round_time(10.0, 4.0);
+        assert!((res.total_time_s - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_changes_but_stays_near_deterministic() {
+        let i = inst();
+        let det = simulate(&i, &SimConfig::deterministic(10, 4)).total_time_s;
+        let cfg = SimConfig {
+            jitter_sigma: 0.1,
+            seed: 7,
+            ..SimConfig::deterministic(10, 4)
+        };
+        let jit = simulate(&i, &cfg).total_time_s;
+        assert!(jit != det);
+        // Max-of-lognormals has positive bias: jittered ≥ 0.8x det, ≤ 2x.
+        assert!(jit > det * 0.8 && jit < det * 2.0, "jit {jit} det {det}");
+    }
+
+    #[test]
+    fn dropout_reduces_or_keeps_makespan_and_counts_drops() {
+        let i = inst();
+        let cfg = SimConfig {
+            dropout_prob: 0.5,
+            seed: 3,
+            ..SimConfig::deterministic(10, 4)
+        };
+        let res = simulate(&i, &cfg);
+        assert!(res.dropped_uploads > 0);
+        // Dropping stragglers can only shorten a barrier round.
+        let det = simulate(&i, &SimConfig::deterministic(10, 4));
+        assert!(res.total_time_s <= det.total_time_s + 1e-9);
+    }
+
+    #[test]
+    fn full_dropout_still_terminates() {
+        let i = inst();
+        let cfg = SimConfig {
+            dropout_prob: 1.0,
+            seed: 1,
+            ..SimConfig::deterministic(10, 4)
+        };
+        let res = simulate(&i, &cfg);
+        // Only backhaul remains.
+        let expect_round = i
+            .per_edge
+            .iter()
+            .map(|e| e.backhaul_s)
+            .fold(0.0, f64::max);
+        assert!((res.total_time_s - res.rounds as f64 * expect_round).abs() < 1e-9);
+    }
+
+    #[test]
+    fn barrier_waits_nonnegative() {
+        let i = inst();
+        let res = simulate(&i, &SimConfig::deterministic(20, 6));
+        assert!(res.edge_barrier_wait_s >= 0.0);
+        assert!(res.ue_barrier_wait_s >= 0.0);
+        assert!(res.events > 0);
+    }
+
+    #[test]
+    fn seeded_runs_reproduce() {
+        let i = inst();
+        let cfg = SimConfig {
+            jitter_sigma: 0.2,
+            dropout_prob: 0.1,
+            seed: 99,
+            ..SimConfig::deterministic(8, 3)
+        };
+        let r1 = simulate(&i, &cfg);
+        let r2 = simulate(&i, &cfg);
+        assert_eq!(r1.total_time_s, r2.total_time_s);
+        assert_eq!(r1.dropped_uploads, r2.dropped_uploads);
+    }
+}

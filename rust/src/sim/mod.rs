@@ -1,0 +1,18 @@
+//! Event-driven latency simulator for the hierarchical FL protocol.
+//!
+//! Replays Algorithm 1's timing as discrete events — UE compute, UE→edge
+//! upload, edge aggregation barrier, edge→cloud upload, cloud barrier —
+//! over a [`DelayInstance`]. With deterministic delays the simulated
+//! makespan equals the closed-form `R_int · T(a,b)` of `delay/` exactly
+//! (property-tested), which validates both; the simulator additionally
+//! supports what the closed form cannot express:
+//!
+//! * per-event lognormal jitter (`jitter_sigma`) — straggler modeling;
+//! * per-round UE dropout (`dropout_prob`) — failure injection (the edge
+//!   aggregates whoever arrived, like partial-participation FedAvg);
+//! * per-round timelines and barrier-wait accounting (who is the
+//!   bottleneck, how much time edges idle at the cloud barrier).
+
+pub mod events;
+
+pub use events::{simulate, SimConfig, SimResult};

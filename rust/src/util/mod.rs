@@ -1,0 +1,12 @@
+//! Shared utilities: PRNG, JSON/TOML codecs, statistics, bench and
+//! property-test harnesses. These are the in-repo substitutes for the
+//! crates.io dependencies a networked build would use (see Cargo.toml).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+pub use rng::Rng;

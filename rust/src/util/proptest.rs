@@ -1,0 +1,77 @@
+//! Seeded property-test harness (offline substitute for `proptest`).
+//!
+//! A property is a closure over a [`Rng`]; the harness runs it across many
+//! derived seeds and, on failure, reports the failing seed so the case can
+//! be replayed deterministically (`HFL_PROP_SEED=<seed> cargo test ...`).
+//! No shrinking — instances are kept small enough to debug directly.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` across `cases` random instances. Panics (with the failing
+/// seed) on the first violation so `cargo test` reports it.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
+    // Replay a single seed if requested.
+    if let Ok(seed_str) = std::env::var("HFL_PROP_SEED") {
+        if let Ok(seed) = seed_str.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+            return;
+        }
+    }
+    let base = 0xD1B5_4A32_D192_ED03u64 ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (replay with HFL_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// `check` with the default case count.
+pub fn check_default<F: FnMut(&mut Rng)>(name: &str, prop: F) {
+    check(name, DEFAULT_CASES, prop)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("unit interval", 64, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_seed() {
+        check("always fails", 8, |_rng| {
+            panic!("boom");
+        });
+    }
+}

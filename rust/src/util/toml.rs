@@ -1,0 +1,259 @@
+//! Minimal TOML-subset parser for scenario config files.
+//!
+//! Supports exactly what `config/*.toml` needs: `[section]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous array
+//! values, `#` comments, and blank lines. Nested tables, dates and inline
+//! tables are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name -> key -> value. Top-level keys live in
+/// the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = idx + 1;
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(|v| v.as_f64())
+    }
+
+    pub fn i64(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(|v| v.as_i64())
+    }
+
+    pub fn str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(|v| v.as_bool())
+    }
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError {
+        line,
+        msg: msg.to_string(),
+    }
+}
+
+/// Remove a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = text.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| err(line, &format!("cannot parse value '{text}'")))
+}
+
+/// Split an array body on commas (no nested arrays needed, but strings may
+/// contain commas).
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&text[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# scenario
+title = "fig5"
+[network]
+num_ues = 100         # total UEs
+area_m = 500.0
+bandwidth_hz = 20e6
+ofdma = true
+eps_sweep = [0.05, 0.1, 0.25]
+names = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("", "title"), Some("fig5"));
+        assert_eq!(doc.i64("network", "num_ues"), Some(100));
+        assert_eq!(doc.f64("network", "area_m"), Some(500.0));
+        assert_eq!(doc.f64("network", "bandwidth_hz"), Some(2.0e7));
+        assert_eq!(doc.bool("network", "ofdma"), Some(true));
+        let arr = doc.get("network", "eps_sweep").unwrap();
+        match arr {
+            TomlValue::Arr(items) => assert_eq!(items.len(), 3),
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.i64("", "n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str("", "k"), Some("a#b"));
+    }
+}

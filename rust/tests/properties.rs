@@ -1,0 +1,236 @@
+//! Property-based tests over the L3 substrates (seeded harness — replay
+//! any failure with HFL_PROP_SEED=<seed>).
+//!
+//! These are the paper's invariants, checked on random instances:
+//! association feasibility (constraints (3)/(13c)-(13e)), the min-max
+//! dominance ordering exact ≤ {proposed, greedy, random}, monotonicity of
+//! R(a,b,ε), the closed-form/simulator identity, and optimizer sanity.
+
+use hfl::assoc::{self, LatencyTable};
+use hfl::data::synthetic::{generate_split, SyntheticConfig};
+use hfl::data::{partition_dirichlet, partition_iid};
+use hfl::delay::{cloud_rounds, DelayInstance, EdgeDelays};
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
+use hfl::sim::{simulate, SimConfig};
+use hfl::util::proptest::check;
+use hfl::util::Rng;
+
+/// Random wireless world (feasible by construction).
+fn random_world(rng: &mut Rng) -> (Topology, Channel, usize) {
+    let edges = rng.int_range(2, 6) as usize;
+    let cap_each = rng.int_range(4, 25) as usize;
+    // Keep N within 80% of total capacity so every strategy can place all.
+    let max_ues = (edges * cap_each) as i64;
+    let ues = rng.int_range(edges as i64, (max_ues * 4 / 5).max(edges as i64)) as usize;
+    let mut params = SystemParams::default();
+    params.ue_bandwidth_hz = params.edge_bandwidth_hz / cap_each as f64;
+    let topo = Topology::sample(&params, edges, ues, rng.next_u64());
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    (topo, channel, cap_each)
+}
+
+fn random_instance(rng: &mut Rng) -> DelayInstance {
+    let edges = rng.int_range(1, 5) as usize;
+    let per_edge = (0..edges)
+        .map(|_| {
+            let n = rng.int_range(1, 8) as usize;
+            EdgeDelays {
+                ue: (0..n)
+                    .map(|_| (rng.range(1e-4, 0.05), rng.range(0.01, 1.0)))
+                    .collect(),
+                backhaul_s: rng.range(0.001, 0.1),
+            }
+        })
+        .collect();
+    DelayInstance {
+        per_edge,
+        gamma: rng.int_range(1, 10) as f64,
+        zeta: rng.int_range(1, 10) as f64,
+        c_const: 1.0,
+        eps: rng.range(0.02, 0.8),
+    }
+}
+
+#[test]
+fn prop_associations_always_feasible() {
+    check("associations feasible", 64, |rng| {
+        let (topo, channel, cap) = random_world(rng);
+        let n = topo.num_ues();
+        let m = topo.num_edges();
+        let prop = assoc::time_minimized(&channel, cap).expect("alg3 feasible");
+        prop.validate(cap).unwrap();
+        assert_eq!(prop.num_ues(), n);
+        let gre = assoc::greedy(&channel, cap).expect("greedy feasible");
+        gre.validate(cap).unwrap();
+        let ran = assoc::random(n, m, cap, rng).expect("random feasible");
+        ran.validate(cap).unwrap();
+    });
+}
+
+#[test]
+fn prop_exact_dominates_heuristics() {
+    check("exact <= heuristics", 48, |rng| {
+        let (topo, channel, cap) = random_world(rng);
+        let a = rng.range(1.0, 50.0);
+        let table = LatencyTable::build(&topo, &channel, a);
+        let exact = assoc::solve_exact_matching(&table, cap).unwrap();
+        let opt = table.max_latency(&exact);
+        for assoc_ in [
+            assoc::time_minimized(&channel, cap).unwrap(),
+            assoc::greedy(&channel, cap).unwrap(),
+            assoc::random(topo.num_ues(), topo.num_edges(), cap, rng).unwrap(),
+        ] {
+            assert!(
+                opt <= table.max_latency(&assoc_) + 1e-9,
+                "exact {opt} beaten by {}",
+                table.max_latency(&assoc_)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_bnb_agrees_with_matching_on_small_instances() {
+    check("bnb == matching", 24, |rng| {
+        let edges = rng.int_range(2, 3) as usize;
+        let ues = rng.int_range(4, 10) as usize;
+        let cap = ues.div_ceil(edges) + 1;
+        let mut params = SystemParams::default();
+        params.ue_bandwidth_hz = params.edge_bandwidth_hz / cap as f64;
+        let topo = Topology::sample(&params, edges, ues, rng.next_u64());
+        let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+        let table = LatencyTable::build(&topo, &channel, 15.0);
+        let bnb = assoc::solve_exact_bnb(&table, cap, None).unwrap();
+        let mat = assoc::solve_exact_matching(&table, cap).unwrap();
+        let (a, b) = (table.max_latency(&bnb), table.max_latency(&mat));
+        assert!((a - b).abs() < 1e-9, "bnb {a} vs matching {b}");
+    });
+}
+
+#[test]
+fn prop_cloud_rounds_monotone() {
+    check("R(a,b,eps) monotonicity", 128, |rng| {
+        let (g, z, c) = (
+            rng.int_range(1, 10) as f64,
+            rng.int_range(1, 10) as f64,
+            1.0,
+        );
+        let eps = rng.range(0.01, 0.9);
+        let a = rng.range(1.0, 100.0);
+        let b = rng.range(1.0, 50.0);
+        let r = cloud_rounds(a, b, eps, c, g, z);
+        assert!(r > 0.0);
+        // Non-increasing in a and b.
+        assert!(cloud_rounds(a * 1.5, b, eps, c, g, z) <= r + 1e-9);
+        assert!(cloud_rounds(a, b * 1.5, eps, c, g, z) <= r + 1e-9);
+        // Increasing as eps shrinks.
+        assert!(cloud_rounds(a, b, eps * 0.5, c, g, z) >= r - 1e-9);
+    });
+}
+
+#[test]
+fn prop_simulator_matches_closed_form() {
+    check("sim == R_int * T", 64, |rng| {
+        let inst = random_instance(rng);
+        let a = rng.int_range(1, 40) as u64;
+        let b = rng.int_range(1, 12) as u64;
+        let res = simulate(&inst, &SimConfig::deterministic(a, b));
+        let expect = res.rounds as f64 * inst.round_time(a as f64, b as f64);
+        assert!(
+            (res.total_time_s - expect).abs() < 1e-6 * expect.max(1.0),
+            "sim {} vs closed {expect}",
+            res.total_time_s
+        );
+    });
+}
+
+#[test]
+fn prop_integer_solver_is_exact_on_its_grid() {
+    check("solve_integer exactness", 24, |rng| {
+        let inst = random_instance(rng);
+        let opts = SolveOptions {
+            a_max: 40.0,
+            b_max: 20.0,
+            ..Default::default()
+        };
+        let sol = solve_integer(&inst, &opts);
+        for a in 1..=40u64 {
+            for b in 1..=20u64 {
+                let v = inst.total_time_int(a as f64, b as f64);
+                assert!(
+                    sol.objective <= v + 1e-9,
+                    "({a},{b}) beats solver: {v} < {}",
+                    sol.objective
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_continuous_solver_below_integer() {
+    check("relaxation <= integer objective", 48, |rng| {
+        let inst = random_instance(rng);
+        let opts = SolveOptions::default();
+        let c = solve_continuous(&inst, &opts);
+        let i = solve_integer(&inst, &opts);
+        // ⌈R⌉ ≥ R pointwise, so the integer optimum can't undercut the
+        // relaxation's optimum by more than numerical noise.
+        assert!(i.objective >= c.objective - 1e-6 * c.objective);
+    });
+}
+
+#[test]
+fn prop_alg2_within_factor_of_exact() {
+    check("alg2 near exact", 16, |rng| {
+        let inst = random_instance(rng);
+        let exact = solve_continuous(&inst, &SolveOptions::default());
+        let res = SubgradientSolver::default().solve(&inst);
+        assert!(
+            res.objective <= exact.objective * 1.05 + 1e-9,
+            "alg2 {} vs exact {}",
+            res.objective,
+            exact.objective
+        );
+    });
+}
+
+#[test]
+fn prop_partitions_conserve_and_validate() {
+    check("partitions valid", 24, |rng| {
+        let cfg = SyntheticConfig::default();
+        let n = rng.int_range(100, 400) as usize;
+        let ds = generate_split(&cfg, n, 42, rng.next_u64());
+        let ues = rng.int_range(2, 10) as usize;
+        let per = (n / ues).min(rng.int_range(5, 50) as usize);
+        let iid = partition_iid(&ds, ues, per, rng).unwrap();
+        assert_eq!(iid.len(), ues);
+        for s in &iid {
+            assert_eq!(s.len(), per);
+            s.validate().unwrap();
+        }
+        let alpha = rng.range(0.05, 5.0);
+        let dir = partition_dirichlet(&ds, ues, per, alpha, rng).unwrap();
+        for s in &dir {
+            assert_eq!(s.len(), per);
+            s.validate().unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_tau_and_round_time_monotone() {
+    check("tau/T monotone in a,b", 64, |rng| {
+        let inst = random_instance(rng);
+        let a = rng.range(1.0, 50.0);
+        let b = rng.range(1.0, 20.0);
+        let t = inst.round_time(a, b);
+        assert!(t > 0.0);
+        assert!(inst.round_time(a + 1.0, b) >= t);
+        assert!(inst.round_time(a, b + 1.0) >= t);
+        for tau in inst.taus(a) {
+            assert!(tau >= 0.0);
+        }
+    });
+}

@@ -1,0 +1,242 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a
+//! visible message) when artifacts are missing so `cargo test` stays
+//! usable in a fresh checkout.
+
+use hfl::coordinator::run_hfl;
+use hfl::data::synthetic::{generate_split, SyntheticConfig};
+use hfl::fl::{HflEngine, LocalSolver, TrainRun};
+use hfl::runtime::{find_artifacts, Engine};
+use hfl::util::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    match find_artifacts(None) {
+        Ok(dir) => Some(Engine::load(&dir).expect("artifacts exist but failed to load")),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            None
+        }
+    }
+}
+
+fn batchify(engine: &Engine, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let hw = engine.meta.image_hw;
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * hw * hw).map(|_| rng.f64() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn load_and_meta_consistent() {
+    let Some(engine) = engine_or_skip() else { return };
+    assert_eq!(engine.meta.param_count, 44426);
+    assert_eq!(engine.init_params().len(), 44426);
+    assert_eq!(engine.meta.image_hw, 28);
+}
+
+#[test]
+fn train_step_decreases_loss_and_changes_params() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (x, y) = batchify(&engine, engine.meta.train_batch, 1);
+    let mut params = engine.init_params();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let (next, loss) = engine.train_step(&params, &x, &y, 0.1).unwrap();
+        assert_ne!(next, params, "params must move");
+        params = next;
+        losses.push(loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+    // CE at init must be near ln(10).
+    assert!((1.5..3.5).contains(&losses[0]), "init loss {}", losses[0]);
+}
+
+#[test]
+fn zero_lr_train_step_is_identity() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (x, y) = batchify(&engine, engine.meta.train_batch, 2);
+    let params = engine.init_params();
+    let (next, _) = engine.train_step(&params, &x, &y, 0.0).unwrap();
+    assert_eq!(next, params);
+}
+
+#[test]
+fn grad_step_matches_train_step() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (x, y) = batchify(&engine, engine.meta.train_batch, 3);
+    let params = engine.init_params();
+    let lr = 0.05f32;
+    let (grad, loss_g) = engine.grad_step(&params, &x, &y).unwrap();
+    let (stepped, loss_t) = engine.train_step(&params, &x, &y, lr).unwrap();
+    assert!((loss_g - loss_t).abs() < 1e-5);
+    for i in (0..params.len()).step_by(997) {
+        let manual = params[i] - lr * grad[i];
+        assert!(
+            (stepped[i] - manual).abs() < 1e-5,
+            "param {i}: {} vs {}",
+            stepped[i],
+            manual
+        );
+    }
+}
+
+#[test]
+fn eval_step_counts_bounded() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (x, y) = batchify(&engine, engine.meta.eval_batch, 4);
+    let params = engine.init_params();
+    let (loss_sum, correct) = engine.eval_step(&params, &x, &y).unwrap();
+    assert!(loss_sum > 0.0);
+    assert!((0.0..=engine.meta.eval_batch as f32).contains(&correct));
+}
+
+#[test]
+fn evaluate_handles_ragged_test_sets() {
+    let Some(engine) = engine_or_skip() else { return };
+    let params = engine.init_params();
+    // A test set that is NOT a multiple of eval_batch.
+    let n = engine.meta.eval_batch + 37;
+    let (x, y) = batchify(&engine, n, 5);
+    let (loss, acc) = engine.evaluate(&params, &x, &y).unwrap();
+    assert!(loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+
+    // Cross-check against a direct eval_step on an exact multiple.
+    let m = engine.meta.eval_batch;
+    let (x2, y2) = batchify(&engine, m, 6);
+    let (l2, a2) = engine.evaluate(&params, &x2, &y2).unwrap();
+    let (ls, cc) = engine.eval_step(&params, &x2, &y2).unwrap();
+    assert!((l2 - ls / m as f32).abs() < 1e-4);
+    assert!((a2 - cc / m as f32).abs() < 1e-6);
+}
+
+#[test]
+fn engine_is_concurrency_safe() {
+    let Some(engine) = engine_or_skip() else { return };
+    let engine = std::sync::Arc::new(engine);
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let e = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let (x, y) = batchify(&e, e.meta.train_batch, 100 + t);
+            let params = e.init_params();
+            let (p1, l1) = e.train_step(&params, &x, &y, 0.05).unwrap();
+            // Same inputs, same outputs — even under contention.
+            let (p2, l2) = e.train_step(&params, &x, &y, 0.05).unwrap();
+            assert_eq!(p1, p2);
+            assert_eq!(l1, l2);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// The threaded coordinator must reproduce the sequential engine exactly.
+#[test]
+fn coordinator_matches_sequential_engine() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = SyntheticConfig::default();
+    let n_ues = 4;
+    let shards: Vec<_> = (0..n_ues)
+        .map(|i| generate_split(&cfg, 64, 42, 1000 + i as u64))
+        .collect();
+    let members = vec![vec![0, 1], vec![2, 3]];
+    let test = generate_split(&cfg, 128, 42, 99);
+    let run = TrainRun {
+        a: 2,
+        b: 2,
+        cloud_rounds: 2,
+        round_time_s: 10.0,
+        eval_every: 1,
+    };
+    let solver = LocalSolver::Gd { lr: 0.05 };
+
+    let mut seq = HflEngine::new(
+        &engine,
+        solver,
+        shards.clone(),
+        members.clone(),
+        test.clone(),
+        7,
+    );
+    let seq_curve = seq.train(&run).unwrap();
+
+    let outcome = run_hfl(&engine, solver, shards, members, &test, &run, 2, 7).unwrap();
+
+    assert_eq!(outcome.final_model, seq.global, "models diverged");
+    assert_eq!(outcome.curve.points.len(), seq_curve.points.len());
+    for (p, q) in outcome.curve.points.iter().zip(&seq_curve.points) {
+        assert_eq!(p.test_acc, q.test_acc);
+        assert_eq!(p.cloud_round, q.cloud_round);
+    }
+}
+
+/// End-to-end learning: on the structured synthetic task, a short HFL run
+/// must lift accuracy well above the 10% chance level.
+#[test]
+fn hfl_learns_synthetic_task() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = SyntheticConfig::default();
+    let n_ues = 4;
+    let shards: Vec<_> = (0..n_ues)
+        .map(|i| generate_split(&cfg, 128, 42, 2000 + i as u64))
+        .collect();
+    let members = vec![vec![0, 1], vec![2, 3]];
+    let test = generate_split(&cfg, 256, 42, 555);
+    let run = TrainRun {
+        a: 8,
+        b: 2,
+        cloud_rounds: 3,
+        round_time_s: 1.0,
+        eval_every: 1,
+    };
+    let outcome = run_hfl(
+        &engine,
+        LocalSolver::Gd { lr: 0.1 },
+        shards,
+        members,
+        &test,
+        &run,
+        0,
+        3,
+    )
+    .unwrap();
+    let acc = outcome.curve.final_acc();
+    assert!(acc > 0.5, "accuracy {acc} after 3 cloud rounds");
+}
+
+#[test]
+fn dane_solver_also_learns() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = SyntheticConfig::default();
+    let shards: Vec<_> = (0..2).map(|i| generate_split(&cfg, 96, 42, 3000 + i as u64)).collect();
+    let members = vec![vec![0, 1]];
+    let test = generate_split(&cfg, 128, 42, 777);
+    let run = TrainRun {
+        a: 6,
+        b: 2,
+        cloud_rounds: 2,
+        round_time_s: 1.0,
+        eval_every: 1,
+    };
+    let outcome = run_hfl(
+        &engine,
+        LocalSolver::Dane { lr: 0.1 },
+        shards,
+        members,
+        &test,
+        &run,
+        0,
+        5,
+    )
+    .unwrap();
+    let first = outcome.curve.points.first().unwrap().test_acc;
+    let last = outcome.curve.final_acc();
+    assert!(last > first, "DANE did not improve: {first} -> {last}");
+}
