@@ -1,19 +1,22 @@
-//! Fig. 5 driver: maximum system latency of 100 UEs under different
-//! numbers of edge servers, for the proposed (Algorithm 3), greedy and
-//! random association strategies — plus the exact matching optimum the
-//! paper does not compute.
+//! Fig. 5 driver — ported to the declarative scenario engine: maximum
+//! per-edge-round latency of `--ues` UEs under different numbers of edge
+//! servers, for the proposed (Algorithm 3), greedy, random and exact
+//! (matching) association strategies.
 //!
-//!   cargo run --release --example association_study
+//!   cargo run --release --example association_study [-- --ues N --eps E
+//!     --seed S --trials T]
 //!
-//! Writes results/fig5_association.csv.
+//! Each (edges, strategy) cell is one [`ScenarioSpec`] batch of `trials`
+//! instances on the fleet runner; all cells share the batch seed, so
+//! every strategy is scored on identical topologies. The reported metric
+//! is the batch-mean `max_m τ_m(a*)` — the paper's Fig. 5 min-max
+//! association objective, evaluated at each strategy's own solved a*
+//! (the seed version fixed a common provisional a; see EXPERIMENTS.md
+//! §Fig5 for the comparison note). Writes results/fig5_association.csv.
 
-use hfl::assoc::{self, LatencyTable};
-use hfl::config::Args;
-use hfl::delay::DelayInstance;
+use hfl::config::{Args, AssocStrategy};
 use hfl::metrics::Recorder;
-use hfl::net::{Channel, SystemParams, Topology};
-use hfl::opt::{solve_integer, SolveOptions};
-use hfl::util::Rng;
+use hfl::scenario::{run_batch, ScenarioSpec};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
@@ -22,6 +25,13 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
     let trials = args.get_or("trials", 5usize).map_err(anyhow::Error::msg)?;
 
+    let strategies = [
+        AssocStrategy::Proposed,
+        AssocStrategy::Greedy,
+        AssocStrategy::Random,
+        AssocStrategy::Exact,
+    ];
+
     let mut rec = Recorder::new();
     let series = rec.series(
         "fig5_association",
@@ -29,35 +39,28 @@ fn main() -> anyhow::Result<()> {
     );
 
     for edges in [6usize, 7, 8, 9, 10, 12, 14, 16] {
-        let (mut p_acc, mut g_acc, mut r_acc, mut e_acc) = (0.0, 0.0, 0.0, 0.0);
-        for t in 0..trials {
-            let params = SystemParams::default();
-            let topo = Topology::sample(&params, edges, num_ues, seed + t as u64 * 1000);
-            let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
-            let cap = params.edge_capacity();
-
-            // a* from sub-problem I under a provisional association.
-            let prov = assoc::greedy(&channel, cap).map_err(anyhow::Error::msg)?;
-            let inst = DelayInstance::build(&topo, &channel, &prov, eps);
-            let a = solve_integer(&inst, &SolveOptions::default()).a;
-            let table = LatencyTable::build(&topo, &channel, a as f64);
-
-            let proposed = assoc::time_minimized(&channel, cap).map_err(anyhow::Error::msg)?;
-            let greedy = assoc::greedy(&channel, cap).map_err(anyhow::Error::msg)?;
-            let random = assoc::random(num_ues, edges, cap, &mut Rng::new(seed + t as u64))
-                .map_err(anyhow::Error::msg)?;
-            let exact = assoc::solve_exact_matching(&table, cap).map_err(anyhow::Error::msg)?;
-
-            p_acc += table.max_latency(&proposed);
-            g_acc += table.max_latency(&greedy);
-            r_acc += table.max_latency(&random);
-            e_acc += table.max_latency(&exact);
+        let mut row = vec![edges as f64];
+        for strategy in strategies {
+            let spec = ScenarioSpec::new()
+                .edges(edges)
+                .ues(num_ues)
+                .eps(eps)
+                .seed(seed)
+                .assoc(strategy)
+                .instances(trials);
+            let batch = run_batch(&spec).map_err(anyhow::Error::msg)?;
+            let mean_tau = batch
+                .outcomes
+                .iter()
+                .map(|o| o.tau_max_s)
+                .sum::<f64>()
+                / trials as f64;
+            row.push(mean_tau);
         }
-        let k = trials as f64;
-        series.push(vec![edges as f64, p_acc / k, g_acc / k, r_acc / k, e_acc / k]);
+        series.push(row);
     }
     series.print(&format!(
-        "Fig. 5 — max latency of {num_ues} UEs vs #edge servers (mean of {trials} seeds)"
+        "Fig. 5 — max edge-round latency of {num_ues} UEs vs #edge servers (mean of {trials} instances)"
     ));
     rec.write_dir(std::path::Path::new("results"))?;
     println!("\nwrote results/fig5_association.csv");

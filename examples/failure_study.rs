@@ -1,71 +1,69 @@
 //! Extension study (beyond the paper): protocol robustness under
-//! stragglers and dropouts, using the event-driven simulator.
+//! stragglers and dropouts — ported to the declarative scenario engine.
 //!
 //!   cargo run --release --example failure_study
 //!
-//! Sweeps lognormal jitter σ and per-round dropout probability and
-//! reports the makespan inflation / deflation relative to the
-//! deterministic closed form — quantifying how fragile the paper's
-//! deterministic delay model is to real-world noise.
+//! Each (σ, p) grid point is one [`ScenarioSpec`] batch fanned out over
+//! the parallel fleet runner: `trials` instances per point, every
+//! instance an independently sampled topology + noise stream with a
+//! seed derived from the shared batch seed (so every sweep point sees
+//! the *same* topologies and only the failure model varies). Reported
+//! makespans are batch means; the inflation baseline is the zero-noise
+//! closed form `⌈R⌉ · T(a*, b*)` from the same batch.
 
-use hfl::assoc;
-use hfl::delay::DelayInstance;
 use hfl::metrics::Recorder;
-use hfl::net::{Channel, SystemParams, Topology};
-use hfl::opt::{solve_integer, SolveOptions};
-use hfl::sim::{simulate, SimConfig};
+use hfl::scenario::{run_batch, ScenarioSpec};
+use hfl::util::stats;
+
+/// Batch-mean of one outcome metric.
+fn mean<F: Fn(&hfl::scenario::ScenarioOutcome) -> f64>(
+    batch: &hfl::scenario::BatchResult,
+    f: F,
+) -> f64 {
+    let xs: Vec<f64> = batch.outcomes.iter().map(f).collect();
+    stats::mean(&xs)
+}
 
 fn main() -> anyhow::Result<()> {
-    let params = SystemParams::default();
-    let topo = Topology::sample(&params, 5, 100, 42);
-    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
-    let association =
-        assoc::time_minimized(&channel, params.edge_capacity()).map_err(anyhow::Error::msg)?;
-    let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
-    let sol = solve_integer(&inst, &SolveOptions::default());
-    let base = inst.total_time_int(sol.a as f64, sol.b as f64);
-    println!("baseline: a*={} b*={} deterministic makespan {base:.2}s", sol.a, sol.b);
+    let trials = 10;
+    let base = ScenarioSpec::new()
+        .edges(5)
+        .ues(100)
+        .eps(0.25)
+        .seed(42)
+        .instances(trials);
+
+    // Zero-noise reference batch: simulated == closed form per instance.
+    let reference = run_batch(&base).map_err(anyhow::Error::msg)?;
+    let base_mean = mean(&reference, |o| o.closed_form_s);
+    println!(
+        "baseline: deterministic makespan {base_mean:.2}s (mean of {trials} topologies; \
+         instance 0 solved a*={} b*={})",
+        reference.outcomes[0].a, reference.outcomes[0].b
+    );
 
     let mut rec = Recorder::new();
     let js = rec.series("jitter_sweep", &["sigma", "makespan_s", "inflation", "ue_wait_s"]);
     for &sigma in &[0.0, 0.05, 0.1, 0.2, 0.4, 0.8] {
-        let mut acc = 0.0;
-        let mut wait = 0.0;
-        let trials = 10;
-        for t in 0..trials {
-            let cfg = SimConfig {
-                jitter_sigma: sigma,
-                seed: 1000 + t,
-                ..SimConfig::deterministic(sol.a, sol.b)
-            };
-            let r = simulate(&inst, &cfg);
-            acc += r.total_time_s;
-            wait += r.ue_barrier_wait_s;
-        }
-        let mk = acc / trials as f64;
-        js.push(vec![sigma, mk, mk / base, wait / trials as f64]);
+        let batch = run_batch(&base.clone().jitter(sigma)).map_err(anyhow::Error::msg)?;
+        let mk = mean(&batch, |o| o.makespan_s);
+        let wait = mean(&batch, |o| o.ue_barrier_wait_s);
+        js.push(vec![sigma, mk, mk / base_mean, wait]);
     }
-    js.print("makespan vs straggler jitter σ (mean of 10 seeds)");
+    js.print(&format!(
+        "makespan vs straggler jitter σ (mean of {trials} instances)"
+    ));
 
     let ds = rec.series("dropout_sweep", &["dropout", "makespan_s", "dropped", "speedup"]);
     for &p in &[0.0, 0.01, 0.05, 0.1, 0.2, 0.5] {
-        let mut acc = 0.0;
-        let mut dropped = 0.0;
-        let trials = 10;
-        for t in 0..trials {
-            let cfg = SimConfig {
-                dropout_prob: p,
-                seed: 2000 + t,
-                ..SimConfig::deterministic(sol.a, sol.b)
-            };
-            let r = simulate(&inst, &cfg);
-            acc += r.total_time_s;
-            dropped += r.dropped_uploads as f64;
-        }
-        let mk = acc / trials as f64;
-        ds.push(vec![p, mk, dropped / trials as f64, base / mk]);
+        let batch = run_batch(&base.clone().dropout(p)).map_err(anyhow::Error::msg)?;
+        let mk = mean(&batch, |o| o.makespan_s);
+        let dropped = mean(&batch, |o| o.dropped_uploads as f64);
+        ds.push(vec![p, mk, dropped, base_mean / mk]);
     }
-    ds.print("makespan vs UE dropout probability (mean of 10 seeds)");
+    ds.print(&format!(
+        "makespan vs UE dropout probability (mean of {trials} instances)"
+    ));
 
     rec.write_dir(std::path::Path::new("results"))?;
     println!("\nwrote results/jitter_sweep.csv, results/dropout_sweep.csv");

@@ -1,0 +1,119 @@
+//! Scenario-engine throughput: instances/second of the parallel fleet
+//! runner, for a static batch and a mobility+churn batch, across shard
+//! counts. This is the perf trajectory future PRs must beat.
+//!
+//!   cargo bench --bench scenario_throughput
+//!
+//! Emits the usual BENCH_JSON lines and rewrites BENCH_scenario.json in
+//! the current directory (run from the repo root to refresh the checked-in
+//! baseline).
+
+use hfl::scenario::{run_batch, shard_count, ScenarioSpec};
+use hfl::util::bench::section;
+use hfl::util::json::Json;
+
+struct Row {
+    name: String,
+    instances: usize,
+    shards: usize,
+    wall_s: f64,
+    instances_per_s: f64,
+}
+
+/// Run a batch `repeats` times, keep the best wall-clock.
+fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
+    let mut best_wall = f64::INFINITY;
+    let mut shards = 0;
+    for _ in 0..repeats {
+        let batch = run_batch(spec).expect("bench batch must run");
+        if batch.wall_s < best_wall {
+            best_wall = batch.wall_s;
+            shards = batch.shards;
+        }
+    }
+    let ips = spec.batch.instances as f64 / best_wall;
+    println!(
+        "{name:<44} {:>7} inst  {:>2} shards  {:>8.3}s  {:>10.1} inst/s",
+        spec.batch.instances, shards, best_wall, ips
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"{name}\",\"instances\":{},\"shards\":{shards},\"wall_s\":{best_wall:.4},\"instances_per_s\":{ips:.2}}}",
+        spec.batch.instances
+    );
+    Row {
+        name: name.to_string(),
+        instances: spec.batch.instances,
+        shards,
+        wall_s: best_wall,
+        instances_per_s: ips,
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let auto = shard_count(0);
+
+    section("scenario runner: static batches (closed-form regime)");
+    let static_spec = ScenarioSpec::new().edges(5).ues(100).eps(0.25).seed(42).instances(64);
+    rows.push(measure(
+        "static 5x100, 64 inst, 1 shard",
+        &static_spec.clone().shards(1),
+        3,
+    ));
+    rows.push(measure(
+        &format!("static 5x100, 64 inst, {auto} shards (auto)"),
+        &static_spec.clone().shards(0),
+        3,
+    ));
+
+    section("scenario runner: mobility + churn + failures");
+    let dynamic_spec = ScenarioSpec::new()
+        .edges(5)
+        .ues(100)
+        .eps(0.25)
+        .seed(42)
+        .mobility(0.5, 2.0)
+        .churn(1.0, 0.02)
+        .jitter(0.1)
+        .dropout(0.01)
+        .epoch_rounds(1)
+        .max_epochs(32)
+        .instances(32);
+    rows.push(measure(
+        "dynamic 5x100, 32 inst, 1 shard",
+        &dynamic_spec.clone().shards(1),
+        3,
+    ));
+    rows.push(measure(
+        &format!("dynamic 5x100, 32 inst, {auto} shards (auto)"),
+        &dynamic_spec.clone().shards(0),
+        3,
+    ));
+
+    // Refresh the checked-in baseline (repo root relative).
+    let json = Json::obj(vec![
+        ("bench", Json::str("scenario_throughput")),
+        ("generated", Json::Bool(true)),
+        (
+            "command",
+            Json::str("cargo bench --bench scenario_throughput"),
+        ),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("instances", Json::num(r.instances as f64)),
+                    ("shards", Json::num(r.shards as f64)),
+                    ("wall_s", Json::num(r.wall_s)),
+                    ("instances_per_s", Json::num(r.instances_per_s)),
+                ])
+            })),
+        ),
+    ]);
+    let path = "BENCH_scenario.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

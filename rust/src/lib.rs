@@ -8,8 +8,9 @@
 //!   wireless/delay model, the (a, b) iteration-count optimizer
 //!   (Algorithm 2 + exact reference solvers), the UE-to-edge association
 //!   strategies (Algorithm 3, greedy, random, exact MILP), an
-//!   event-driven latency simulator, and a threaded hierarchical-FedAvg
-//!   training runtime (Algorithm 1).
+//!   event-driven latency simulator, a threaded hierarchical-FedAvg
+//!   training runtime (Algorithm 1), and a declarative scenario engine
+//!   with time-varying dynamics + parallel fleet runner (`scenario/`).
 //! * **L2 (python/compile/model.py, build-time only)** — LeNet-5 fwd/bwd
 //!   in JAX over a flat parameter vector, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time only)** — the Pallas
@@ -34,6 +35,7 @@ pub mod metrics;
 pub mod net;
 pub mod opt;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 

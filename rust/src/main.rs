@@ -4,6 +4,8 @@
 //!   optimize   solve sub-problem I (a*, b*) for a scenario
 //!   associate  compare UE-to-edge association strategies (sub-problem II)
 //!   simulate   event-driven protocol latency simulation
+//!   scenario   declarative scenario batches (mobility/churn/failures)
+//!              over the parallel fleet runner, with a JSON report
 //!   train      run hierarchical FL training via the PJRT runtime
 //!   info       print scenario + artifact information
 //!
@@ -23,6 +25,7 @@ use hfl::metrics::Recorder;
 use hfl::net::{Channel, Topology};
 use hfl::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
 use hfl::runtime::{find_artifacts, Engine};
+use hfl::scenario::{self, BatchReport, ScenarioSpec};
 use hfl::sim::{simulate, SimConfig};
 use hfl::util::Rng;
 
@@ -40,6 +43,7 @@ fn real_main() -> Result<()> {
         "optimize" => cmd_optimize(&args),
         "associate" => cmd_associate(&args),
         "simulate" => cmd_simulate(&args),
+        "scenario" => cmd_scenario(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -61,6 +65,8 @@ SUBCOMMANDS
   associate  solve sub-problem II: compare proposed/greedy/random/exact
              UE-to-edge association latencies
   simulate   event-driven latency simulation (supports --jitter, --dropout)
+  scenario   run a declarative scenario batch (TOML spec; mobility, churn,
+             failures) on the parallel fleet runner; emits a JSON report
   train      hierarchical FL training (LeNet via PJRT artifacts)
   info       scenario + artifact summary
 
@@ -90,6 +96,22 @@ SIMULATE OPTIONS
   --jitter SIGMA       lognormal jitter on every delay (default 0)
   --dropout P          per-round UE dropout probability (default 0)
   --rounds N           override the ⌈R⌉ cloud-round count
+
+SCENARIO OPTIONS
+  --spec FILE          scenario TOML (adds [failure]/[dynamics]/[optimizer]/
+                       [batch] sections; see configs/scenario_mobility.toml)
+  --instances N        scenario instances in the batch     (default 1)
+  --shards N           worker threads (0 = one per core)   (default 0)
+  --jitter SIGMA       lognormal delay jitter              (default 0)
+  --dropout P          per-round UE dropout probability    (default 0)
+  --speed-min M        random-waypoint min speed (m/s)     (default 0)
+  --speed-max M        random-waypoint max speed (m/s)     (default 0)
+  --arrival-rate L     Poisson UE arrivals per epoch       (default 0)
+  --departure-prob P   per-UE departure prob per epoch     (default 0)
+  --epoch-rounds N     cloud rounds per epoch (default: auto)
+  --max-epochs N       epoch cap                           (default 256)
+  --mode NAME          integer|continuous|subgradient      (default integer)
+  --report FILE        JSON report path (default results/scenario_report.json)
 ";
 
 /// Build topology + channel + association for a scenario.
@@ -196,6 +218,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         jitter_sigma: args.get_or("jitter", 0.0).map_err(|e| anyhow!("{e}"))?,
         dropout_prob: args.get_or("dropout", 0.0).map_err(|e| anyhow!("{e}"))?,
         seed: sc.seed,
+        start_s: 0.0,
     };
     let res = simulate(&inst, &cfg);
     println!(
@@ -213,6 +236,54 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("  UE barrier wait     {:.4}s", res.ue_barrier_wait_s);
     println!("  edge barrier wait   {:.4}s", res.edge_barrier_wait_s);
     args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let spec_path = args.str("spec");
+    let spec = ScenarioSpec::load(spec_path.as_deref(), args).map_err(|e| anyhow!("{e}"))?;
+    let report_path_arg = args.str("report");
+    // Long-running command: surface typo'd flags *before* the batch runs,
+    // not after minutes of compute land wrong results on disk.
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    let instances = spec.batch.instances;
+    println!("scenario batch: {instances} instances of [{}]", spec.summary());
+
+    let progress_every = (instances / 10).max(1);
+    let mut completed = 0usize;
+    let batch = scenario::run_batch_with(&spec, |_, _| {
+        completed += 1;
+        if completed % progress_every == 0 || completed == instances {
+            println!("  {completed}/{instances} instances done");
+        }
+    })
+    .map_err(|e| anyhow!("{e}"))?;
+
+    let report = BatchReport::from_outcomes(&batch.outcomes);
+    report.print();
+    println!(
+        "  {} instances in {:.2}s on {} shards ({:.1} instances/s)",
+        instances,
+        batch.wall_s,
+        batch.shards,
+        batch.instances_per_s()
+    );
+
+    // Per-instance rows (CSV + combined JSON) through the Recorder...
+    let results_dir = std::path::PathBuf::from(&spec.base.results_dir);
+    let mut rec = Recorder::new();
+    scenario::record_batch(&batch.outcomes, &mut rec);
+    rec.write_dir(&results_dir)?;
+    // ...and the aggregate JSON report.
+    let report_path = report_path_arg
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| results_dir.join("scenario_report.json"));
+    report.write(&report_path, Some(&spec))?;
+    println!(
+        "wrote {}/scenario_instances.csv and {}",
+        results_dir.display(),
+        report_path.display()
+    );
     Ok(())
 }
 

@@ -46,6 +46,21 @@ pub fn shannon_rate(bandwidth_hz: f64, snr: f64) -> f64 {
     bandwidth_hz * (1.0 + snr).log2()
 }
 
+/// Large-scale (deterministic) gain of one UE→edge link.
+#[inline]
+fn large_scale_gain(params: &SystemParams, wavelength_m: f64, ue: &Ue, edge: &EdgeServer) -> f64 {
+    model_gain(params.path_loss, wavelength_m, ue.pos.dist(&edge.pos))
+}
+
+/// SNR + Shannon rate of a link with (possibly faded) gain `g`. Shared by
+/// [`Channel::compute`] and [`Channel::recompute_ue`] so the link physics
+/// cannot diverge between full and incremental table builds.
+#[inline]
+fn snr_and_rate(g: f64, tx_power_w: f64, noise_w: f64, bandwidth_hz: f64) -> (f64, f64) {
+    let s = g * tx_power_w / noise_w;
+    (s, shannon_rate(bandwidth_hz, s))
+}
+
 /// Precomputed N x M channel tables for one topology: gains, SNRs and
 /// uplink rates under the *fixed per-UE bandwidth* policy (the one the
 /// association sub-problem optimizes over; see `BandwidthPolicy` for the
@@ -77,15 +92,15 @@ impl Channel {
         };
         for ue in ues {
             for edge in edges {
-                let mut g = model_gain(params.path_loss, wl, ue.pos.dist(&edge.pos));
+                let mut g = large_scale_gain(params, wl, ue, edge);
                 if let Some(rng) = fade_rng.as_mut() {
                     // Rayleigh power: |h|^2 ~ Exp(1), unit mean.
                     g *= rng.exponential(1.0);
                 }
-                let s = g * ue.tx_power_w / noise;
+                let (s, r) = snr_and_rate(g, ue.tx_power_w, noise, bn);
                 gain.push(g);
                 snr_v.push(s);
-                rate.push(shannon_rate(bn, s));
+                rate.push(r);
             }
         }
         Channel {
@@ -110,6 +125,28 @@ impl Channel {
     #[inline]
     pub fn rate_of(&self, ue: usize, edge: usize) -> f64 {
         self.rate_bps[ue * self.num_edges + edge]
+    }
+
+    /// Recompute the table row of one UE in place — the mobility hot path:
+    /// when an epoch moves a UE, only its N-row of gains/SNRs/rates
+    /// changes. Uses the same expressions in the same order as
+    /// [`Channel::compute`], so for an unmoved UE the row is reproduced
+    /// bit-for-bit. Small-scale fading is *not* redrawn (a per-call redraw
+    /// would break the static-snapshot semantics of `FadingModel::Rayleigh`);
+    /// time-varying scenarios pair mobility with `FadingModel::None`.
+    pub fn recompute_ue(&mut self, params: &SystemParams, ue: &Ue, edges: &[EdgeServer]) {
+        debug_assert_eq!(edges.len(), self.num_edges);
+        let bn = params.ue_bandwidth_hz;
+        let noise = params.noise_w(bn);
+        let wl = params.wavelength_m();
+        let row = ue.id * self.num_edges;
+        for (j, edge) in edges.iter().enumerate() {
+            let g = large_scale_gain(params, wl, ue, edge);
+            let (s, r) = snr_and_rate(g, ue.tx_power_w, noise, bn);
+            self.gain[row + j] = g;
+            self.snr[row + j] = s;
+            self.rate_bps[row + j] = r;
+        }
     }
 
     /// Rate if the edge's bandwidth is equally shared among `k` UEs
@@ -234,6 +271,21 @@ mod tests {
         let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
         assert!((mean - 1.0).abs() < 0.1, "mean fading power {mean}");
         assert!(ratios.iter().any(|&r| r < 0.5) && ratios.iter().any(|&r| r > 1.5));
+    }
+
+    #[test]
+    fn recompute_ue_matches_full_compute() {
+        let t = topo();
+        let mut moved = t.clone();
+        moved.ues[4].pos = crate::net::Position { x: 77.0, y: 410.0 };
+        // Full recompute on the moved topology is the reference.
+        let reference = Channel::compute(&moved.params, &moved.ues, &moved.edges);
+        // Incremental: start from the original table, patch one row.
+        let mut incremental = Channel::compute(&t.params, &t.ues, &t.edges);
+        incremental.recompute_ue(&moved.params, &moved.ues[4], &moved.edges);
+        assert_eq!(incremental.gain, reference.gain);
+        assert_eq!(incremental.snr, reference.snr);
+        assert_eq!(incremental.rate_bps, reference.rate_bps);
     }
 
     #[test]

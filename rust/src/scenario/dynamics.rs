@@ -1,0 +1,514 @@
+//! Epoch-based time-varying dynamics engine.
+//!
+//! One scenario *instance* is a full protocol run over an evolving world:
+//!
+//! 1. sample a topology + channel from the instance seed;
+//! 2. associate the active UEs (any [`AssocStrategy`]) and build the
+//!    delay instance;
+//! 3. solve sub-problem I for (a, b) under the configured
+//!    [`OptimizerMode`] and ask the accuracy model how many cloud rounds
+//!    are still required;
+//! 4. simulate one epoch's chunk of rounds through `sim/` (with the
+//!    failure model), carrying the absolute clock via
+//!    `SimConfig::start_s`;
+//! 5. advance the world by the epoch's simulated duration — random-
+//!    waypoint mobility (recomputing the moved UEs' channel rows) and
+//!    Poisson churn — then loop from (2), counting handovers.
+//!
+//! A static spec collapses to a single epoch whose makespan equals the
+//! closed-form `⌈R⌉ · T(a, b)` (property-tested in `tests/scenario.rs`);
+//! everything an epoch does is driven by seeded sub-streams of the
+//! instance seed, so runs are bit-for-bit reproducible regardless of how
+//! the batch runner schedules them.
+
+use super::spec::{OptimizerMode, ScenarioSpec};
+use crate::assoc::{self, Association, LatencyTable};
+use crate::config::AssocStrategy;
+use crate::delay::{self, cloud_rounds_int, DelayInstance, EdgeDelays};
+use crate::net::{Channel, Position, Topology};
+use crate::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
+use crate::sim::{simulate, SimConfig};
+use crate::util::Rng;
+
+/// Everything one scenario instance produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Batch index (filled by the runner; 0 for direct runs).
+    pub instance: usize,
+    /// The instance seed the run derived everything from.
+    pub seed: u64,
+    /// Absolute protocol makespan across all epochs (seconds).
+    pub makespan_s: f64,
+    /// Deterministic closed-form reference: Σ_epochs chunk · T(a, b).
+    /// For a static, failure-free spec this equals `⌈R⌉ · T(a*, b*)` and
+    /// the simulated makespan reproduces it to f64 round-off.
+    pub closed_form_s: f64,
+    /// Cloud rounds executed.
+    pub rounds: u64,
+    /// Epochs executed (1 for static specs).
+    pub epochs: u64,
+    /// Whether the accuracy target was met within `max_epochs`.
+    pub converged: bool,
+    /// Last epoch's local-iteration count a.
+    pub a: u64,
+    /// Last epoch's edge-iteration count b.
+    pub b: u64,
+    /// Last epoch's one-cloud-round time T(a, b) (seconds).
+    pub round_time_s: f64,
+    /// Last epoch's max one-edge-round latency max_m τ_m(a) (seconds) —
+    /// the Fig. 5 association objective.
+    pub tau_max_s: f64,
+    /// UEs whose serving edge changed at an epoch boundary.
+    pub handovers: u64,
+    /// Churn arrivals over the run.
+    pub arrivals: u64,
+    /// Churn departures over the run.
+    pub departures: u64,
+    /// Uploads lost to the dropout failure model.
+    pub dropped_uploads: u64,
+    /// Discrete events processed by the simulator.
+    pub events: u64,
+    /// Cumulative straggler wait at the per-edge aggregation barrier.
+    pub ue_barrier_wait_s: f64,
+    /// Cumulative edge idle time at the cloud barrier.
+    pub edge_barrier_wait_s: f64,
+}
+
+/// Random-waypoint state: one target + speed per UE.
+struct MobilityState {
+    target: Vec<Position>,
+    speed: Vec<f64>,
+    rng: Rng,
+    area_m: f64,
+    speed_range: (f64, f64),
+}
+
+impl MobilityState {
+    fn init(topo: &Topology, speed_range: (f64, f64), mut rng: Rng) -> MobilityState {
+        let area = topo.params.area_m;
+        let target = topo
+            .ues
+            .iter()
+            .map(|_| Position {
+                x: rng.range(0.0, area),
+                y: rng.range(0.0, area),
+            })
+            .collect();
+        let speed = topo
+            .ues
+            .iter()
+            .map(|_| rng.range(speed_range.0, speed_range.1))
+            .collect();
+        MobilityState {
+            target,
+            speed,
+            rng,
+            area_m: area,
+            speed_range,
+        }
+    }
+
+    /// Fresh waypoint + speed for a (re-)arriving UE.
+    fn respawn(&mut self, n: usize) {
+        self.target[n] = Position {
+            x: self.rng.range(0.0, self.area_m),
+            y: self.rng.range(0.0, self.area_m),
+        };
+        self.speed[n] = self.rng.range(self.speed_range.0, self.speed_range.1);
+    }
+
+    /// Advance every active UE by `dt` seconds of travel, updating its
+    /// position and recomputing its channel row.
+    fn step(&mut self, dt: f64, active: &[bool], topo: &mut Topology, channel: &mut Channel) {
+        if dt <= 0.0 {
+            return;
+        }
+        for n in 0..topo.ues.len() {
+            if !active[n] {
+                continue;
+            }
+            let mut travel = self.speed[n] * dt;
+            if travel <= 0.0 {
+                continue;
+            }
+            let mut pos = topo.ues[n].pos;
+            // Walk waypoint legs until the travel budget is spent (long
+            // epochs at high speed legitimately cross many waypoints).
+            // The leg cap only guards degenerate worlds (area ≈ 0) whose
+            // legs have zero length and would never drain the budget.
+            let mut legs = 0u32;
+            loop {
+                let d = pos.dist(&self.target[n]);
+                if d <= travel {
+                    pos = self.target[n];
+                    travel -= d;
+                    self.target[n] = Position {
+                        x: self.rng.range(0.0, self.area_m),
+                        y: self.rng.range(0.0, self.area_m),
+                    };
+                    legs += 1;
+                    if travel <= 0.0 || legs > 10_000 {
+                        break;
+                    }
+                } else {
+                    pos.x += (self.target[n].x - pos.x) / d * travel;
+                    pos.y += (self.target[n].y - pos.y) / d * travel;
+                    break;
+                }
+            }
+            topo.ues[n].pos = pos;
+            channel.recompute_ue(&topo.params, &topo.ues[n], &topo.edges);
+        }
+    }
+}
+
+/// One churn transition. Departures are Bernoulli per active UE; arrivals
+/// re-activate departed UEs (Poisson count) at fresh uniform positions,
+/// capped by total edge capacity so the association stays feasible.
+fn churn_step(
+    rng: &mut Rng,
+    active: &mut [bool],
+    topo: &mut Topology,
+    channel: &mut Channel,
+    arrival_rate: f64,
+    departure_prob: f64,
+    capacity_total: usize,
+) -> (Vec<usize>, u64) {
+    let mut departures = 0u64;
+    if departure_prob > 0.0 {
+        for flag in active.iter_mut() {
+            if *flag && rng.f64() < departure_prob {
+                *flag = false;
+                departures += 1;
+            }
+        }
+    }
+    let mut arrived = Vec::new();
+    let want = rng.poisson(arrival_rate) as usize;
+    for _ in 0..want {
+        let active_count = active.iter().filter(|&&a| a).count();
+        if active_count >= capacity_total {
+            break;
+        }
+        let inactive: Vec<usize> = (0..active.len()).filter(|&n| !active[n]).collect();
+        let Some(&pick) = inactive.get(rng.below(inactive.len().max(1) as u64) as usize) else {
+            break;
+        };
+        active[pick] = true;
+        let area = topo.params.area_m;
+        topo.ues[pick].pos = Position {
+            x: rng.range(0.0, area),
+            y: rng.range(0.0, area),
+        };
+        channel.recompute_ue(&topo.params, &topo.ues[pick], &topo.edges);
+        arrived.push(pick);
+    }
+    (arrived, departures)
+}
+
+/// Channel table restricted to the active UEs (rows copied; subset index
+/// `i` maps to global id `ids[i]`).
+fn sub_channel(channel: &Channel, ids: &[usize]) -> Channel {
+    let m = channel.num_edges;
+    let mut gain = Vec::with_capacity(ids.len() * m);
+    let mut snr = Vec::with_capacity(ids.len() * m);
+    let mut rate = Vec::with_capacity(ids.len() * m);
+    for &id in ids {
+        gain.extend_from_slice(&channel.gain[id * m..(id + 1) * m]);
+        snr.extend_from_slice(&channel.snr[id * m..(id + 1) * m]);
+        rate.extend_from_slice(&channel.rate_bps[id * m..(id + 1) * m]);
+    }
+    Channel {
+        num_ues: ids.len(),
+        num_edges: m,
+        gain,
+        snr,
+        rate_bps: rate,
+    }
+}
+
+/// Associate the active UEs under the spec's strategy. Returns the
+/// serving edge per *global* UE id (`None` = inactive).
+fn associate_active(
+    strategy: AssocStrategy,
+    topo: &Topology,
+    channel: &Channel,
+    active: &[bool],
+    cap: usize,
+    provisional_a: f64,
+    rng: &mut Rng,
+) -> Result<Vec<Option<usize>>, String> {
+    let n = topo.num_ues();
+    let m = topo.num_edges();
+    let ids: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+    let mut edge_of_global = vec![None; n];
+    if ids.is_empty() {
+        return Ok(edge_of_global);
+    }
+    let association: Association = match strategy {
+        AssocStrategy::Proposed => assoc::time_minimized(&sub_channel(channel, &ids), cap)?,
+        AssocStrategy::Greedy => assoc::greedy(&sub_channel(channel, &ids), cap)?,
+        AssocStrategy::Random => assoc::random(ids.len(), m, cap, rng)?,
+        AssocStrategy::Exact => {
+            // The canonical Fig. 5 objective, restricted to the active
+            // rows (mirrors `sub_channel` — build the full table with the
+            // shared formula, then slice).
+            let full = LatencyTable::build(topo, channel, provisional_a);
+            let mut lat = Vec::with_capacity(ids.len() * m);
+            for &id in &ids {
+                lat.extend_from_slice(&full.latency_s[id * m..(id + 1) * m]);
+            }
+            let table = LatencyTable {
+                num_ues: ids.len(),
+                num_edges: m,
+                latency_s: lat,
+            };
+            assoc::solve_exact_matching(&table, cap)?
+        }
+    };
+    for (i, &id) in ids.iter().enumerate() {
+        edge_of_global[id] = Some(association.edge_of[i]);
+    }
+    Ok(edge_of_global)
+}
+
+/// Build the delay instance for the current association (global-id
+/// member lists; inactive UEs excluded, empty edges contribute only their
+/// backhaul, matching the closed form).
+fn build_instance(
+    topo: &Topology,
+    channel: &Channel,
+    edge_of: &[Option<usize>],
+    eps: f64,
+) -> DelayInstance {
+    let m = topo.num_edges();
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (n, e) in edge_of.iter().enumerate() {
+        if let Some(e) = e {
+            members[*e].push(n);
+        }
+    }
+    let per_edge = topo
+        .edges
+        .iter()
+        .map(|edge| EdgeDelays {
+            ue: members[edge.id]
+                .iter()
+                .map(|&n| {
+                    let ue = &topo.ues[n];
+                    (
+                        delay::ue_compute_time(ue),
+                        delay::upload_time(ue.model_bits, channel.rate_of(n, edge.id)),
+                    )
+                })
+                .collect(),
+            backhaul_s: delay::upload_time(edge.model_bits, edge.cloud_rate_bps),
+        })
+        .collect();
+    DelayInstance {
+        per_edge,
+        gamma: topo.params.gamma,
+        zeta: topo.params.zeta,
+        c_const: topo.params.c_const,
+        eps,
+    }
+}
+
+/// Solve sub-problem I under the spec's optimizer mode (honoring fixed
+/// a/b overrides from the base scenario).
+fn solve_ab(spec: &ScenarioSpec, inst: &DelayInstance) -> (u64, u64) {
+    if let (Some(a), Some(b)) = (spec.base.train.a, spec.base.train.b) {
+        return (a.max(1), b.max(1));
+    }
+    let (mut a, mut b) = match spec.optimizer {
+        OptimizerMode::Integer => {
+            let s = solve_integer(inst, &SolveOptions::default());
+            (s.a, s.b)
+        }
+        OptimizerMode::Continuous => {
+            let s = solve_continuous(inst, &SolveOptions::default());
+            (s.a.round().max(1.0) as u64, s.b.round().max(1.0) as u64)
+        }
+        OptimizerMode::Subgradient => {
+            let s = SubgradientSolver::default().solve(inst);
+            (s.a.round().max(1.0) as u64, s.b.round().max(1.0) as u64)
+        }
+    };
+    if let Some(fixed_a) = spec.base.train.a {
+        a = fixed_a.max(1);
+    }
+    if let Some(fixed_b) = spec.base.train.b {
+        b = fixed_b.max(1);
+    }
+    (a, b)
+}
+
+/// Run one scenario instance end to end. Pure function of
+/// `(spec, seed)` — the batch runner relies on that for shard-count
+/// independence.
+pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, String> {
+    // Direct builder users get the same guardrails as the batch runner
+    // (notably the Rayleigh-fading × dynamics rejection).
+    spec.validate()?;
+    let base = &spec.base;
+    let mut topo = Topology::sample(&base.system, base.num_edges, base.num_ues, seed);
+    let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let cap = base.system.edge_capacity();
+    let capacity_total = cap.saturating_mul(base.num_edges);
+    let n = base.num_ues;
+
+    // Independent seeded sub-streams: association tie-breaking, simulator
+    // noise, churn, mobility. Forked from the instance seed only.
+    let mut master = Rng::new(seed ^ 0x5CE2_A210_D15C_0FEE);
+    let mut assoc_rng = master.fork(0xA550);
+    let mut sim_rng = master.fork(0x51ED);
+    let mut churn_rng = master.fork(0xC42B);
+    let mobility_rng = master.fork(0x30B1);
+    let mut mobility = MobilityState::init(&topo, spec.dynamics.speed_mps, mobility_rng);
+
+    let mut active = vec![true; n];
+    let mut prev_edge: Vec<Option<usize>> = vec![None; n];
+
+    let mut out = ScenarioOutcome {
+        instance: 0,
+        seed,
+        makespan_s: 0.0,
+        closed_form_s: 0.0,
+        rounds: 0,
+        epochs: 0,
+        converged: false,
+        a: 0,
+        b: 0,
+        round_time_s: 0.0,
+        tau_max_s: 0.0,
+        handovers: 0,
+        arrivals: 0,
+        departures: 0,
+        dropped_uploads: 0,
+        events: 0,
+        ue_barrier_wait_s: 0.0,
+        edge_barrier_wait_s: 0.0,
+    };
+
+    let mut now = 0.0f64;
+    let mut provisional_a = 20.0f64;
+    if base.assoc == AssocStrategy::Exact {
+        // The matching objective weighs compute vs upload by a, so seed it
+        // with a solved a* under a greedy provisional association (the
+        // paper's flow, same as `hfl associate`) instead of a magic
+        // constant. Later epochs reuse the previous epoch's solved a.
+        let greedy_edge_of = associate_active(
+            AssocStrategy::Greedy,
+            &topo,
+            &channel,
+            &active,
+            cap,
+            provisional_a,
+            &mut assoc_rng,
+        )?;
+        let greedy_inst = build_instance(&topo, &channel, &greedy_edge_of, base.eps);
+        provisional_a = solve_ab(spec, &greedy_inst).0 as f64;
+    }
+    loop {
+        // (1) Association for the current world.
+        let edge_of = associate_active(
+            base.assoc,
+            &topo,
+            &channel,
+            &active,
+            cap,
+            provisional_a,
+            &mut assoc_rng,
+        )?;
+
+        // (2) Delay instance + iteration counts + remaining rounds.
+        let inst = build_instance(&topo, &channel, &edge_of, base.eps);
+        let (a, b) = solve_ab(spec, &inst);
+        let target = cloud_rounds_int(
+            a as f64,
+            b as f64,
+            inst.eps,
+            inst.c_const,
+            inst.gamma,
+            inst.zeta,
+        );
+        if out.rounds >= target {
+            out.converged = true;
+            break;
+        }
+        if out.epochs as usize >= spec.dynamics.max_epochs {
+            break;
+        }
+
+        // The epoch definitely runs: account handovers against the last
+        // epoch's association.
+        for (prev, cur) in prev_edge.iter().zip(edge_of.iter()) {
+            if let (Some(p), Some(c)) = (prev, cur) {
+                if p != c {
+                    out.handovers += 1;
+                }
+            }
+        }
+        prev_edge.clone_from(&edge_of);
+        provisional_a = a as f64;
+
+        // (3) Simulate this epoch's chunk of rounds.
+        let chunk = spec.dynamics.chunk(target - out.rounds);
+        let cfg = SimConfig {
+            a,
+            b,
+            rounds: Some(chunk),
+            jitter_sigma: spec.failure.jitter_sigma,
+            dropout_prob: spec.failure.dropout_prob,
+            seed: sim_rng.next_u64(),
+            start_s: now,
+        };
+        let res = simulate(&inst, &cfg);
+        let dt = res.total_time_s - now;
+        now = res.total_time_s;
+
+        out.rounds += res.rounds;
+        out.epochs += 1;
+        out.closed_form_s += chunk as f64 * inst.round_time(a as f64, b as f64);
+        out.dropped_uploads += res.dropped_uploads;
+        out.events += res.events;
+        out.ue_barrier_wait_s += res.ue_barrier_wait_s;
+        out.edge_barrier_wait_s += res.edge_barrier_wait_s;
+        out.a = a;
+        out.b = b;
+        out.round_time_s = inst.round_time(a as f64, b as f64);
+        out.tau_max_s = inst.taus(a as f64).into_iter().fold(0.0, f64::max);
+
+        // A world without dynamics cannot change the accuracy target, so
+        // convergence is decidable now — skip the redundant re-associate +
+        // re-solve a full extra loop iteration would spend discovering it.
+        if !spec.dynamics.any_dynamics() && out.rounds >= target {
+            out.converged = true;
+            break;
+        }
+
+        // (4) Advance the world for the next epoch.
+        if spec.dynamics.mobility_enabled() {
+            mobility.step(dt, &active, &mut topo, &mut channel);
+        }
+        if spec.dynamics.churn_enabled() {
+            let (arrived, departures) = churn_step(
+                &mut churn_rng,
+                &mut active,
+                &mut topo,
+                &mut channel,
+                spec.dynamics.arrival_rate,
+                spec.dynamics.departure_prob,
+                capacity_total,
+            );
+            out.departures += departures;
+            out.arrivals += arrived.len() as u64;
+            for id in arrived {
+                mobility.respawn(id);
+                prev_edge[id] = None; // re-joining is not a handover
+            }
+        }
+    }
+    out.makespan_s = now;
+    Ok(out)
+}

@@ -1,0 +1,33 @@
+//! Declarative scenario engine + parallel fleet runner.
+//!
+//! The paper evaluates one static snapshot: fixed UEs, fixed channels,
+//! one association, one (a*, b*). This subsystem turns that snapshot into
+//! a *workload substrate*:
+//!
+//! * [`spec`] — a declarative [`ScenarioSpec`] (TOML-loadable, fluent
+//!   builder) composing topology sampling, channel model, association
+//!   policy, optimizer mode, the jitter/dropout failure model and a
+//!   **dynamics** block;
+//! * [`dynamics`] — the epoch engine: random-waypoint mobility (position
+//!   updates → incremental channel recompute), Poisson churn, per-epoch
+//!   handover re-association and (a, b) re-solve, with the makespan
+//!   accruing bit-exactly across epochs through `sim/`;
+//! * [`runner`] — a sharded work-stealing batch executor that runs
+//!   hundreds of instances concurrently with bit-for-bit shard-count
+//!   independence;
+//! * [`report`] — percentile/CI aggregates, `metrics::Recorder` series
+//!   and JSON emission.
+//!
+//! Entry points: `hfl scenario --spec <toml>` on the CLI,
+//! [`run_batch`]/[`run_instance`] from code (see
+//! `examples/failure_study.rs` and `examples/association_study.rs`).
+
+pub mod dynamics;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use dynamics::{run_instance, ScenarioOutcome};
+pub use report::{record_batch, BatchReport, SummaryStat};
+pub use runner::{instance_seeds, run_batch, run_batch_with, shard_count, BatchResult};
+pub use spec::{BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, ScenarioSpec};

@@ -1,0 +1,286 @@
+//! Aggregate reporting for scenario batches: percentile / CI summaries
+//! over the fleet's outcomes (via `util/stats.rs`), per-instance series
+//! for `metrics::Recorder`, and machine-readable JSON emission.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::dynamics::ScenarioOutcome;
+use super::spec::ScenarioSpec;
+use crate::metrics::Recorder;
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile, std};
+
+/// Distribution summary of one metric across a batch.
+#[derive(Debug, Clone, Copy)]
+pub struct SummaryStat {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    /// Normal-approximation 95% confidence interval on the mean.
+    pub ci95: (f64, f64),
+}
+
+impl SummaryStat {
+    pub fn from_samples(xs: &[f64]) -> SummaryStat {
+        if xs.is_empty() {
+            return SummaryStat {
+                count: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+                ci95: (0.0, 0.0),
+            };
+        }
+        let m = mean(xs);
+        let s = std(xs);
+        let half = 1.96 * s / (xs.len() as f64).sqrt();
+        SummaryStat {
+            count: xs.len(),
+            mean: m,
+            std: s,
+            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            p50: percentile(xs, 50.0),
+            p90: percentile(xs, 90.0),
+            p99: percentile(xs, 99.0),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            ci95: (m - half, m + half),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean)),
+            ("std", Json::num(self.std)),
+            ("min", Json::num(self.min)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+            ("ci95_lo", Json::num(self.ci95.0)),
+            ("ci95_hi", Json::num(self.ci95.1)),
+        ])
+    }
+}
+
+/// Aggregated view of one batch.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub instances: usize,
+    pub converged_frac: f64,
+    pub makespan_s: SummaryStat,
+    pub closed_form_s: SummaryStat,
+    pub rounds: SummaryStat,
+    pub epochs: SummaryStat,
+    pub handovers: SummaryStat,
+    pub arrivals: SummaryStat,
+    pub departures: SummaryStat,
+    pub dropped_uploads: SummaryStat,
+    pub tau_max_s: SummaryStat,
+    pub ue_barrier_wait_s: SummaryStat,
+}
+
+fn column<F: Fn(&ScenarioOutcome) -> f64>(outcomes: &[ScenarioOutcome], f: F) -> SummaryStat {
+    let xs: Vec<f64> = outcomes.iter().map(f).collect();
+    SummaryStat::from_samples(&xs)
+}
+
+impl BatchReport {
+    pub fn from_outcomes(outcomes: &[ScenarioOutcome]) -> BatchReport {
+        let converged = outcomes.iter().filter(|o| o.converged).count();
+        BatchReport {
+            instances: outcomes.len(),
+            converged_frac: if outcomes.is_empty() {
+                0.0
+            } else {
+                converged as f64 / outcomes.len() as f64
+            },
+            makespan_s: column(outcomes, |o| o.makespan_s),
+            closed_form_s: column(outcomes, |o| o.closed_form_s),
+            rounds: column(outcomes, |o| o.rounds as f64),
+            epochs: column(outcomes, |o| o.epochs as f64),
+            handovers: column(outcomes, |o| o.handovers as f64),
+            arrivals: column(outcomes, |o| o.arrivals as f64),
+            departures: column(outcomes, |o| o.departures as f64),
+            dropped_uploads: column(outcomes, |o| o.dropped_uploads as f64),
+            tau_max_s: column(outcomes, |o| o.tau_max_s),
+            ue_barrier_wait_s: column(outcomes, |o| o.ue_barrier_wait_s),
+        }
+    }
+
+    /// JSON document, with the spec summary attached for provenance.
+    pub fn to_json(&self, spec: Option<&ScenarioSpec>) -> Json {
+        let mut fields = vec![
+            ("instances", Json::num(self.instances as f64)),
+            ("converged_frac", Json::num(self.converged_frac)),
+            ("makespan_s", self.makespan_s.to_json()),
+            ("closed_form_s", self.closed_form_s.to_json()),
+            ("rounds", self.rounds.to_json()),
+            ("epochs", self.epochs.to_json()),
+            ("handovers", self.handovers.to_json()),
+            ("arrivals", self.arrivals.to_json()),
+            ("departures", self.departures.to_json()),
+            ("dropped_uploads", self.dropped_uploads.to_json()),
+            ("tau_max_s", self.tau_max_s.to_json()),
+            ("ue_barrier_wait_s", self.ue_barrier_wait_s.to_json()),
+        ];
+        if let Some(spec) = spec {
+            fields.insert(0, ("spec", Json::str(&spec.summary())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Write the JSON report to `path` (creating parent dirs).
+    pub fn write(&self, path: &Path, spec: Option<&ScenarioSpec>) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json(spec).to_string().as_bytes())
+    }
+
+    /// Human summary on stdout.
+    pub fn print(&self) {
+        println!(
+            "batch: {} instances, {:.1}% converged",
+            self.instances,
+            self.converged_frac * 100.0
+        );
+        let row = |name: &str, s: &SummaryStat| {
+            println!(
+                "  {name:<18} mean {:>10.4}  ±{:>9.4}  p50 {:>10.4}  p90 {:>10.4}  p99 {:>10.4}  max {:>10.4}",
+                s.mean, s.std, s.p50, s.p90, s.p99, s.max
+            );
+        };
+        row("makespan_s", &self.makespan_s);
+        row("rounds", &self.rounds);
+        row("epochs", &self.epochs);
+        row("handovers", &self.handovers);
+        row("dropped_uploads", &self.dropped_uploads);
+        row("ue_wait_s", &self.ue_barrier_wait_s);
+    }
+}
+
+/// Stream per-instance rows into a [`Recorder`] series named
+/// `scenario_instances` (one row per instance, instance order).
+pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
+    let series = rec.series(
+        "scenario_instances",
+        &[
+            "instance",
+            "makespan_s",
+            "closed_form_s",
+            "rounds",
+            "epochs",
+            "a",
+            "b",
+            "handovers",
+            "arrivals",
+            "departures",
+            "dropped_uploads",
+            "events",
+            "converged",
+        ],
+    );
+    for o in outcomes {
+        series.push(vec![
+            o.instance as f64,
+            o.makespan_s,
+            o.closed_form_s,
+            o.rounds as f64,
+            o.epochs as f64,
+            o.a as f64,
+            o.b as f64,
+            o.handovers as f64,
+            o.arrivals as f64,
+            o.departures as f64,
+            o.dropped_uploads as f64,
+            o.events as f64,
+            if o.converged { 1.0 } else { 0.0 },
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(makespan: f64, rounds: u64, converged: bool) -> ScenarioOutcome {
+        ScenarioOutcome {
+            instance: 0,
+            seed: 0,
+            makespan_s: makespan,
+            closed_form_s: makespan,
+            rounds,
+            epochs: 1,
+            converged,
+            a: 10,
+            b: 3,
+            round_time_s: makespan / rounds.max(1) as f64,
+            tau_max_s: 0.1,
+            handovers: 0,
+            arrivals: 0,
+            departures: 0,
+            dropped_uploads: 0,
+            events: rounds * 10,
+            ue_barrier_wait_s: 0.0,
+            edge_barrier_wait_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn summary_stat_matches_hand_computation() {
+        let s = SummaryStat::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert!(s.ci95.0 < s.mean && s.mean < s.ci95.1);
+        let empty = SummaryStat::from_samples(&[]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.mean, 0.0);
+    }
+
+    #[test]
+    fn report_aggregates_and_serializes() {
+        let outcomes = vec![
+            outcome(10.0, 5, true),
+            outcome(12.0, 5, true),
+            outcome(20.0, 6, false),
+        ];
+        let report = BatchReport::from_outcomes(&outcomes);
+        assert_eq!(report.instances, 3);
+        assert!((report.converged_frac - 2.0 / 3.0).abs() < 1e-12);
+        assert!((report.makespan_s.mean - 14.0).abs() < 1e-12);
+        let json = report.to_json(None).to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("instances").and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert!(parsed.get("makespan_s").and_then(|m| m.get("p90")).is_some());
+    }
+
+    #[test]
+    fn recorder_rows_match_instances() {
+        let outcomes = vec![outcome(1.0, 1, true), outcome(2.0, 2, true)];
+        let mut rec = Recorder::new();
+        record_batch(&outcomes, &mut rec);
+        let series = &rec.series["scenario_instances"];
+        assert_eq!(series.rows.len(), 2);
+        assert_eq!(series.columns.len(), series.rows[0].len());
+    }
+}

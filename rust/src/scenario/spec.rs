@@ -1,0 +1,576 @@
+//! Declarative scenario specification.
+//!
+//! A [`ScenarioSpec`] fully describes a *batch* of scenario instances —
+//! topology sampling + channel model (via the base [`Scenario`]),
+//! association policy, optimizer mode, the failure model
+//! (jitter/dropout), the time-varying **dynamics** block (random-waypoint
+//! mobility + Poisson churn) and the batch shape (instances × shards).
+//! Specs load from TOML (`util/toml.rs` subset) with CLI overrides, or
+//! build fluently in code:
+//!
+//! ```no_run
+//! use hfl::scenario::ScenarioSpec;
+//! let spec = ScenarioSpec::new()
+//!     .edges(5)
+//!     .ues(100)
+//!     .eps(0.25)
+//!     .mobility(0.5, 2.0)
+//!     .churn(0.5, 0.01)
+//!     .jitter(0.1)
+//!     .instances(256)
+//!     .shards(8);
+//! # let _ = spec;
+//! ```
+
+use crate::config::cli::CliError;
+use crate::config::{Args, AssocStrategy, Scenario};
+use crate::util::toml::TomlDoc;
+
+/// Which sub-problem-I solver the engine (re-)runs every epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptimizerMode {
+    /// Exhaustive integer scan under ⌈R⌉ (the production path).
+    #[default]
+    Integer,
+    /// Continuous relaxation (golden-section), rounded to the grid.
+    Continuous,
+    /// The paper's Algorithm 2 (subgradient on the Lagrange dual).
+    Subgradient,
+}
+
+impl OptimizerMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "integer" | "exact" => Ok(OptimizerMode::Integer),
+            "continuous" | "relaxed" => Ok(OptimizerMode::Continuous),
+            "subgradient" | "alg2" => Ok(OptimizerMode::Subgradient),
+            other => Err(format!(
+                "unknown optimizer mode '{other}' (integer|continuous|subgradient)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerMode::Integer => "integer",
+            OptimizerMode::Continuous => "continuous",
+            OptimizerMode::Subgradient => "subgradient",
+        }
+    }
+}
+
+/// Failure injection applied to every simulated epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FailureSpec {
+    /// Lognormal jitter σ on every compute/upload duration (0 = none).
+    pub jitter_sigma: f64,
+    /// Per-round UE dropout probability (0 = none).
+    pub dropout_prob: f64,
+}
+
+/// Time-varying dynamics: epoch-based mobility and churn.
+///
+/// An *epoch* is a chunk of cloud rounds simulated under frozen world
+/// state; between epochs the engine moves UEs (random waypoint), applies
+/// churn (Poisson arrivals, Bernoulli departures), recomputes the affected
+/// channel rows, re-associates (counting handovers) and re-solves (a, b).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynamicsSpec {
+    /// Cloud rounds simulated per epoch. `None` = auto: all remaining
+    /// rounds in one epoch when the world is static, one round per epoch
+    /// when mobility or churn is on.
+    pub epoch_rounds: Option<u64>,
+    /// Hard cap on epochs (guards non-convergence under heavy churn).
+    pub max_epochs: usize,
+    /// Random-waypoint speed range (m/s); `(0, 0)` disables mobility.
+    pub speed_mps: (f64, f64),
+    /// Poisson mean of UE arrivals per epoch (from the departed pool).
+    pub arrival_rate: f64,
+    /// Per-active-UE departure probability per epoch.
+    pub departure_prob: f64,
+}
+
+impl Default for DynamicsSpec {
+    fn default() -> Self {
+        DynamicsSpec {
+            epoch_rounds: None,
+            max_epochs: 256,
+            speed_mps: (0.0, 0.0),
+            arrival_rate: 0.0,
+            departure_prob: 0.0,
+        }
+    }
+}
+
+impl DynamicsSpec {
+    pub fn mobility_enabled(&self) -> bool {
+        self.speed_mps.1 > 0.0
+    }
+
+    pub fn churn_enabled(&self) -> bool {
+        self.arrival_rate > 0.0 || self.departure_prob > 0.0
+    }
+
+    pub fn any_dynamics(&self) -> bool {
+        self.mobility_enabled() || self.churn_enabled()
+    }
+
+    /// Rounds to simulate this epoch, given how many the accuracy model
+    /// still requires.
+    pub fn chunk(&self, remaining: u64) -> u64 {
+        match self.epoch_rounds {
+            Some(k) => k.max(1).min(remaining),
+            None if self.any_dynamics() => remaining.min(1),
+            None => remaining,
+        }
+    }
+}
+
+/// Batch shape for the parallel fleet runner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchSpec {
+    /// Scenario instances to run (each gets an independent derived seed).
+    pub instances: usize,
+    /// Worker shards; 0 = one per available core.
+    pub shards: usize,
+}
+
+impl Default for BatchSpec {
+    fn default() -> Self {
+        BatchSpec {
+            instances: 1,
+            shards: 0,
+        }
+    }
+}
+
+/// A complete declarative scenario: what to run, how it evolves over
+/// time, what can fail, and how wide to fan out.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioSpec {
+    /// Topology/channel/learning constants + association + eps + seed
+    /// (the batch *base* seed; instances derive their own).
+    pub base: Scenario,
+    pub optimizer: OptimizerMode,
+    pub failure: FailureSpec,
+    pub dynamics: DynamicsSpec,
+    pub batch: BatchSpec,
+}
+
+impl ScenarioSpec {
+    pub fn new() -> ScenarioSpec {
+        ScenarioSpec::default()
+    }
+
+    // -- builder -----------------------------------------------------------
+
+    pub fn edges(mut self, n: usize) -> Self {
+        self.base.num_edges = n;
+        self
+    }
+
+    pub fn ues(mut self, n: usize) -> Self {
+        self.base.num_ues = n;
+        self
+    }
+
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.base.eps = eps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base.seed = seed;
+        self
+    }
+
+    pub fn assoc(mut self, strategy: AssocStrategy) -> Self {
+        self.base.assoc = strategy;
+        self
+    }
+
+    pub fn optimizer(mut self, mode: OptimizerMode) -> Self {
+        self.optimizer = mode;
+        self
+    }
+
+    /// Fix (a, b) instead of re-solving each epoch.
+    pub fn fixed_iters(mut self, a: u64, b: u64) -> Self {
+        self.base.train.a = Some(a);
+        self.base.train.b = Some(b);
+        self
+    }
+
+    pub fn jitter(mut self, sigma: f64) -> Self {
+        self.failure.jitter_sigma = sigma;
+        self
+    }
+
+    pub fn dropout(mut self, prob: f64) -> Self {
+        self.failure.dropout_prob = prob;
+        self
+    }
+
+    /// Random-waypoint mobility with speeds uniform in `[lo, hi]` m/s.
+    pub fn mobility(mut self, lo_mps: f64, hi_mps: f64) -> Self {
+        self.dynamics.speed_mps = (lo_mps, hi_mps);
+        self
+    }
+
+    /// Poisson churn: `arrival_rate` arrivals/epoch, per-UE
+    /// `departure_prob` per epoch.
+    pub fn churn(mut self, arrival_rate: f64, departure_prob: f64) -> Self {
+        self.dynamics.arrival_rate = arrival_rate;
+        self.dynamics.departure_prob = departure_prob;
+        self
+    }
+
+    pub fn epoch_rounds(mut self, rounds: u64) -> Self {
+        self.dynamics.epoch_rounds = Some(rounds);
+        self
+    }
+
+    pub fn max_epochs(mut self, cap: usize) -> Self {
+        self.dynamics.max_epochs = cap;
+        self
+    }
+
+    pub fn instances(mut self, n: usize) -> Self {
+        self.batch.instances = n;
+        self
+    }
+
+    pub fn shards(mut self, n: usize) -> Self {
+        self.batch.shards = n;
+        self
+    }
+
+    // -- loading -----------------------------------------------------------
+
+    /// Load from a TOML file (if given) then apply CLI overrides, exactly
+    /// like [`Scenario::load`] but for the full spec.
+    pub fn load(path: Option<&str>, args: &Args) -> Result<ScenarioSpec, String> {
+        let mut spec = ScenarioSpec::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+            let doc = TomlDoc::parse(&text).map_err(|e| e.to_string())?;
+            spec.apply_toml(&doc)?;
+        }
+        spec.apply_args(args).map_err(|e| e.to_string())?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a TOML document (no file, no CLI) — the programmatic entry.
+    pub fn parse_toml(text: &str) -> Result<ScenarioSpec, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut spec = ScenarioSpec::default();
+        spec.apply_toml(&doc)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        // [scenario] / [system] / [train] / [paths] — the base schema.
+        self.base.apply_toml(doc)?;
+        // [failure]
+        if let Some(v) = doc.f64("failure", "jitter_sigma") {
+            self.failure.jitter_sigma = v;
+        }
+        if let Some(v) = doc.f64("failure", "dropout_prob") {
+            self.failure.dropout_prob = v;
+        }
+        // [dynamics]
+        if let Some(v) = doc.i64("dynamics", "epoch_rounds") {
+            self.dynamics.epoch_rounds = Some(v.max(1) as u64);
+        }
+        if let Some(v) = doc.i64("dynamics", "max_epochs") {
+            self.dynamics.max_epochs = v.max(1) as usize;
+        }
+        let lo = doc.f64("dynamics", "speed_min_mps");
+        let hi = doc.f64("dynamics", "speed_max_mps");
+        if lo.is_some() || hi.is_some() {
+            let hi = hi.or(lo).unwrap_or(0.0);
+            self.dynamics.speed_mps = (lo.unwrap_or(0.0), hi);
+        }
+        if let Some(v) = doc.f64("dynamics", "arrival_rate") {
+            self.dynamics.arrival_rate = v;
+        }
+        if let Some(v) = doc.f64("dynamics", "departure_prob") {
+            self.dynamics.departure_prob = v;
+        }
+        // [optimizer]
+        if let Some(s) = doc.str("optimizer", "mode") {
+            self.optimizer = OptimizerMode::parse(s)?;
+        }
+        // [batch]
+        if let Some(v) = doc.i64("batch", "instances") {
+            self.batch.instances = v.max(1) as usize;
+        }
+        if let Some(v) = doc.i64("batch", "shards") {
+            self.batch.shards = v.max(0) as usize;
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
+        self.base.apply_args(args)?;
+        if let Some(v) = args.get::<f64>("jitter")? {
+            self.failure.jitter_sigma = v;
+        }
+        if let Some(v) = args.get::<f64>("dropout")? {
+            self.failure.dropout_prob = v;
+        }
+        if let Some(v) = args.get::<u64>("epoch-rounds")? {
+            self.dynamics.epoch_rounds = Some(v.max(1));
+        }
+        if let Some(v) = args.get::<usize>("max-epochs")? {
+            self.dynamics.max_epochs = v.max(1);
+        }
+        if let Some(v) = args.get::<f64>("speed-min")? {
+            self.dynamics.speed_mps.0 = v;
+        }
+        if let Some(v) = args.get::<f64>("speed-max")? {
+            self.dynamics.speed_mps.1 = v;
+        }
+        if let Some(v) = args.get::<f64>("arrival-rate")? {
+            self.dynamics.arrival_rate = v;
+        }
+        if let Some(v) = args.get::<f64>("departure-prob")? {
+            self.dynamics.departure_prob = v;
+        }
+        if let Some(s) = args.str("mode") {
+            self.optimizer = OptimizerMode::parse(&s).map_err(CliError)?;
+        }
+        if let Some(v) = args.get::<usize>("instances")? {
+            self.batch.instances = v.max(1);
+        }
+        if let Some(v) = args.get::<usize>("shards")? {
+            self.batch.shards = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.base.validate()?;
+        let d = &self.dynamics;
+        // Rayleigh fading is a *static snapshot* draw; the dynamics
+        // engine's incremental row recompute does not redraw it, so a
+        // dynamic world would silently mix faded and unfaded links.
+        if d.any_dynamics() {
+            if let crate::net::topology::FadingModel::Rayleigh { .. } = self.base.system.fading {
+                return Err(
+                    "time-varying dynamics require fading = \"none\": mobility/churn \
+                     recompute channel rows without redrawing Rayleigh fading"
+                        .into(),
+                );
+            }
+        }
+        if d.speed_mps.0 < 0.0 || d.speed_mps.1 < d.speed_mps.0 {
+            return Err(format!(
+                "mobility speed range ({}, {}) must satisfy 0 <= lo <= hi",
+                d.speed_mps.0, d.speed_mps.1
+            ));
+        }
+        if d.arrival_rate < 0.0 {
+            return Err(format!("arrival_rate must be >= 0, got {}", d.arrival_rate));
+        }
+        if !(0.0..=1.0).contains(&d.departure_prob) {
+            return Err(format!(
+                "departure_prob must be in [0,1], got {}",
+                d.departure_prob
+            ));
+        }
+        if d.max_epochs == 0 {
+            return Err("max_epochs must be >= 1".into());
+        }
+        let f = &self.failure;
+        if f.jitter_sigma < 0.0 {
+            return Err(format!("jitter_sigma must be >= 0, got {}", f.jitter_sigma));
+        }
+        if !(0.0..=1.0).contains(&f.dropout_prob) {
+            return Err(format!(
+                "dropout_prob must be in [0,1], got {}",
+                f.dropout_prob
+            ));
+        }
+        if self.batch.instances == 0 {
+            return Err("batch.instances must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// One-line human summary for CLI/report headers.
+    pub fn summary(&self) -> String {
+        let d = &self.dynamics;
+        let dynamics = if d.any_dynamics() {
+            format!(
+                "mobility {:.1}-{:.1} m/s, churn +{:.2}/-{:.3}",
+                d.speed_mps.0, d.speed_mps.1, d.arrival_rate, d.departure_prob
+            )
+        } else {
+            "static".to_string()
+        };
+        format!(
+            "{} edges, {} UEs, eps={}, assoc={}, opt={}, jitter={}, dropout={}, {}",
+            self.base.num_edges,
+            self.base.num_ues,
+            self.base.eps,
+            self.base.assoc.name(),
+            self.optimizer.name(),
+            self.failure.jitter_sigma,
+            self.failure.dropout_prob,
+            dynamics
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn builder_chain_sets_everything() {
+        let spec = ScenarioSpec::new()
+            .edges(7)
+            .ues(60)
+            .eps(0.1)
+            .seed(9)
+            .assoc(AssocStrategy::Greedy)
+            .optimizer(OptimizerMode::Subgradient)
+            .jitter(0.2)
+            .dropout(0.05)
+            .mobility(1.0, 3.0)
+            .churn(0.5, 0.02)
+            .epoch_rounds(2)
+            .max_epochs(32)
+            .instances(10)
+            .shards(4);
+        assert_eq!(spec.base.num_edges, 7);
+        assert_eq!(spec.base.num_ues, 60);
+        assert_eq!(spec.base.assoc, AssocStrategy::Greedy);
+        assert_eq!(spec.optimizer, OptimizerMode::Subgradient);
+        assert_eq!(spec.failure.jitter_sigma, 0.2);
+        assert_eq!(spec.dynamics.speed_mps, (1.0, 3.0));
+        assert_eq!(spec.dynamics.epoch_rounds, Some(2));
+        assert_eq!(spec.batch.instances, 10);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_all_sections() {
+        let spec = ScenarioSpec::parse_toml(
+            r#"
+[scenario]
+num_edges = 4
+num_ues = 40
+eps = 0.2
+assoc = "greedy"
+[failure]
+jitter_sigma = 0.15
+dropout_prob = 0.02
+[dynamics]
+epoch_rounds = 3
+max_epochs = 12
+speed_min_mps = 0.5
+speed_max_mps = 2.5
+arrival_rate = 1.5
+departure_prob = 0.05
+[optimizer]
+mode = "subgradient"
+[batch]
+instances = 64
+shards = 8
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.base.num_edges, 4);
+        assert_eq!(spec.base.assoc, AssocStrategy::Greedy);
+        assert_eq!(spec.failure.jitter_sigma, 0.15);
+        assert_eq!(spec.dynamics.epoch_rounds, Some(3));
+        assert_eq!(spec.dynamics.max_epochs, 12);
+        assert_eq!(spec.dynamics.speed_mps, (0.5, 2.5));
+        assert_eq!(spec.dynamics.arrival_rate, 1.5);
+        assert_eq!(spec.optimizer, OptimizerMode::Subgradient);
+        assert_eq!(spec.batch.instances, 64);
+        assert_eq!(spec.batch.shards, 8);
+        assert!(spec.dynamics.any_dynamics());
+    }
+
+    #[test]
+    fn cli_overrides_spec() {
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args(
+            "scenario --ues 50 --jitter 0.3 --speed-max 4.0 --instances 20 --mode continuous",
+        ))
+        .unwrap();
+        assert_eq!(spec.base.num_ues, 50);
+        assert_eq!(spec.failure.jitter_sigma, 0.3);
+        assert_eq!(spec.dynamics.speed_mps.1, 4.0);
+        assert_eq!(spec.batch.instances, 20);
+        assert_eq!(spec.optimizer, OptimizerMode::Continuous);
+    }
+
+    #[test]
+    fn validation_rejects_bad_dynamics() {
+        assert!(ScenarioSpec::new().mobility(3.0, 1.0).validate().is_err());
+        assert!(ScenarioSpec::new().churn(-1.0, 0.0).validate().is_err());
+        assert!(ScenarioSpec::new().churn(0.0, 1.5).validate().is_err());
+        assert!(ScenarioSpec::new().dropout(2.0).validate().is_err());
+        let mut s = ScenarioSpec::new();
+        s.dynamics.max_epochs = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn rayleigh_fading_incompatible_with_dynamics() {
+        use crate::net::topology::FadingModel;
+        // Dynamic world + static-snapshot fading: rejected (the row
+        // recompute would silently drop the fading multiplier).
+        let mut moving = ScenarioSpec::new().mobility(0.5, 1.0);
+        moving.base.system.fading = FadingModel::Rayleigh { seed: 1 };
+        assert!(moving.validate().is_err());
+        let mut churning = ScenarioSpec::new().churn(0.5, 0.0);
+        churning.base.system.fading = FadingModel::Rayleigh { seed: 1 };
+        assert!(churning.validate().is_err());
+        // A static Rayleigh snapshot remains valid.
+        let mut still = ScenarioSpec::new();
+        still.base.system.fading = FadingModel::Rayleigh { seed: 1 };
+        assert!(still.validate().is_ok());
+    }
+
+    #[test]
+    fn chunking_policy() {
+        let stat = DynamicsSpec::default();
+        assert_eq!(stat.chunk(17), 17);
+        let dynamic = DynamicsSpec {
+            speed_mps: (0.5, 1.0),
+            ..Default::default()
+        };
+        assert_eq!(dynamic.chunk(17), 1);
+        let explicit = DynamicsSpec {
+            epoch_rounds: Some(4),
+            ..Default::default()
+        };
+        assert_eq!(explicit.chunk(17), 4);
+        assert_eq!(explicit.chunk(3), 3);
+        assert_eq!(explicit.chunk(0), 0);
+    }
+
+    #[test]
+    fn optimizer_mode_parse() {
+        assert_eq!(
+            OptimizerMode::parse("alg2").unwrap(),
+            OptimizerMode::Subgradient
+        );
+        assert_eq!(
+            OptimizerMode::parse("integer").unwrap(),
+            OptimizerMode::Integer
+        );
+        assert!(OptimizerMode::parse("magic").is_err());
+    }
+}

@@ -7,8 +7,22 @@ use crate::delay::{cloud_rounds_int, DelayInstance};
 use crate::util::Rng;
 
 /// Total-order wrapper for event timestamps.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// `Ord` is the single source of truth: it uses IEEE-754 `total_cmp`, which
+/// is total and panic-free (a NaN timestamp — impossible from the delay
+/// model, but conceivable from a hostile spec — sorts last instead of
+/// aborting mid-heap-operation). `PartialOrd`/`PartialEq` delegate *to*
+/// `cmp`, never the other way around, so the four trait impls can't
+/// disagree (the seed had `cmp` → inner `partial_cmp` → panic on NaN, with
+/// derived `PartialEq` that ordered -0.0/+0.0 differently than `cmp`).
+#[derive(Debug, Clone, Copy)]
 struct OrdF64(f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
 
 impl Eq for OrdF64 {}
 
@@ -20,7 +34,7 @@ impl PartialOrd for OrdF64 {
 
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN timestamp")
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -40,6 +54,10 @@ pub struct SimConfig {
     pub dropout_prob: f64,
     /// RNG seed for jitter/dropout.
     pub seed: u64,
+    /// Absolute time the first round starts at. The scenario engine chains
+    /// epochs by carrying one epoch's end time into the next epoch's
+    /// `start_s`, so makespans accrue bit-exactly across re-solves.
+    pub start_s: f64,
 }
 
 impl SimConfig {
@@ -51,6 +69,7 @@ impl SimConfig {
             jitter_sigma: 0.0,
             dropout_prob: 0.0,
             seed: 0,
+            start_s: 0.0,
         }
     }
 }
@@ -58,7 +77,9 @@ impl SimConfig {
 /// Simulation output.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    /// Protocol makespan (seconds).
+    /// Absolute completion time (seconds): `start_s` + the makespan of the
+    /// simulated rounds. With the default `start_s = 0` this is the plain
+    /// protocol makespan.
     pub total_time_s: f64,
     /// Completion time of each cloud round.
     pub round_end_s: Vec<f64>,
@@ -117,7 +138,7 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
         }
     };
 
-    let mut now = 0.0f64;
+    let mut now = cfg.start_s;
     for _round in 0..rounds {
         let mut heap: BinaryHeap<Reverse<(OrdF64, Event)>> = BinaryHeap::new();
 
@@ -337,6 +358,65 @@ mod tests {
         assert!(res.edge_barrier_wait_s >= 0.0);
         assert!(res.ue_barrier_wait_s >= 0.0);
         assert!(res.events > 0);
+    }
+
+    #[test]
+    fn ordf64_total_order_on_equal_timestamps() {
+        use std::cmp::Ordering;
+        // Equal timestamps — the case two UEs finishing simultaneously
+        // produces — must compare Equal through every trait consistently.
+        let (x, y) = (OrdF64(1.25), OrdF64(1.25));
+        assert_eq!(x.cmp(&y), Ordering::Equal);
+        assert_eq!(x.partial_cmp(&y), Some(Ordering::Equal));
+        assert!(x == y);
+        // Ordering is total and panic-free, NaN included (sorts after
+        // every finite value instead of aborting the heap operation).
+        assert_eq!(OrdF64(1.0).cmp(&OrdF64(2.0)), Ordering::Less);
+        assert_eq!(OrdF64(f64::NAN).cmp(&OrdF64(f64::INFINITY)), Ordering::Greater);
+        assert_eq!(OrdF64(f64::NAN).cmp(&OrdF64(f64::NAN)), Ordering::Equal);
+        // A heap of duplicated timestamps drains without panicking and in
+        // nondecreasing order.
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<OrdF64>> =
+            [2.0, 1.0, 1.0, 3.0, 1.0]
+                .into_iter()
+                .map(|t| std::cmp::Reverse(OrdF64(t)))
+                .collect();
+        let mut prev = f64::NEG_INFINITY;
+        while let Some(std::cmp::Reverse(OrdF64(t))) = heap.pop() {
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn start_offset_chains_epochs_bit_exactly() {
+        // Running R rounds in one call must equal running them in two
+        // chained calls whose second starts where the first ended — the
+        // identity the scenario engine's epoch accrual rests on.
+        let i = inst();
+        let whole = simulate(
+            &i,
+            &SimConfig {
+                rounds: Some(6),
+                ..SimConfig::deterministic(10, 4)
+            },
+        );
+        let first = simulate(
+            &i,
+            &SimConfig {
+                rounds: Some(2),
+                ..SimConfig::deterministic(10, 4)
+            },
+        );
+        let second = simulate(
+            &i,
+            &SimConfig {
+                rounds: Some(4),
+                start_s: first.total_time_s,
+                ..SimConfig::deterministic(10, 4)
+            },
+        );
+        assert_eq!(whole.total_time_s.to_bits(), second.total_time_s.to_bits());
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! * per-round UE dropout (`dropout_prob`) — failure injection (the edge
 //!   aggregates whoever arrived, like partial-participation FedAvg);
 //! * per-round timelines and barrier-wait accounting (who is the
-//!   bottleneck, how much time edges idle at the cloud barrier).
+//!   bottleneck, how much time edges idle at the cloud barrier);
+//! * an absolute start offset (`SimConfig::start_s`) so the scenario
+//!   engine (`scenario/`) can chain epoch simulations — re-associating and
+//!   re-solving (a, b) between chunks of rounds — while the makespan
+//!   accrues bit-exactly across the whole run.
 
 pub mod events;
 

@@ -111,6 +111,28 @@ impl Rng {
         -(1.0 - self.f64()).ln() / lambda
     }
 
+    /// Poisson with mean `lambda` (used by the scenario engine's churn
+    /// model). Knuth's product method for small means; for large means a
+    /// rounded-normal approximation keeps the cost O(1).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            return self.normal_ms(lambda, lambda.sqrt()).round().max(0.0) as u64;
+        }
+        let limit = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
     /// Gamma(shape, 1) via Marsaglia–Tsang (used by the Dirichlet
     /// non-IID partitioner).
     pub fn gamma(&mut self, shape: f64) -> f64 {
@@ -240,6 +262,21 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn poisson_mean_close_and_degenerate_cases() {
+        let mut r = Rng::new(17);
+        for &lambda in &[0.3, 2.0, 8.0, 50.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.poisson(lambda)).sum::<u64>() as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda {lambda}: mean {mean}"
+            );
+        }
+        assert_eq!(r.poisson(0.0), 0);
+        assert_eq!(r.poisson(-1.0), 0);
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Scenario-engine tests: the closed-form identity on static specs, the
+//! bitwise shard-count independence of the fleet runner, chunked-epoch
+//! exactness, churn/mobility bookkeeping and TOML end-to-end.
+
+use hfl::assoc;
+use hfl::config::AssocStrategy;
+use hfl::delay::DelayInstance;
+use hfl::net::{Channel, SystemParams, Topology};
+use hfl::opt::{solve_integer, SolveOptions};
+use hfl::scenario::{run_batch, run_instance, BatchReport, ScenarioOutcome, ScenarioSpec};
+use hfl::util::proptest::check;
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1.0)
+}
+
+/// Independently rebuild the paper pipeline for a static spec and return
+/// the closed-form makespan `⌈R⌉ · T(a*, b*)` plus (a*, b*).
+fn closed_form_reference(spec: &ScenarioSpec, seed: u64) -> (f64, u64, u64) {
+    let base = &spec.base;
+    let topo = Topology::sample(&base.system, base.num_edges, base.num_ues, seed);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let cap = base.system.edge_capacity();
+    let association = match base.assoc {
+        AssocStrategy::Proposed => assoc::time_minimized(&channel, cap).unwrap(),
+        AssocStrategy::Greedy => assoc::greedy(&channel, cap).unwrap(),
+        other => panic!("reference pipeline does not cover {other:?}"),
+    };
+    let inst = DelayInstance::build(&topo, &channel, &association, base.eps);
+    let sol = solve_integer(&inst, &SolveOptions::default());
+    (
+        inst.total_time_int(sol.a as f64, sol.b as f64),
+        sol.a,
+        sol.b,
+    )
+}
+
+#[test]
+fn static_spec_reproduces_closed_form() {
+    let spec = ScenarioSpec::new().edges(3).ues(30).eps(0.25).seed(7);
+    let out = run_instance(&spec, 1234).unwrap();
+    let (expect, a, b) = closed_form_reference(&spec, 1234);
+    assert_eq!((out.a, out.b), (a, b), "same optimizer solution");
+    assert_eq!(out.epochs, 1, "static spec runs in one epoch");
+    assert!(out.converged);
+    assert_eq!(
+        out.closed_form_s.to_bits(),
+        expect.to_bits(),
+        "engine's closed form must be the paper's R_int * T"
+    );
+    assert!(
+        rel_close(out.makespan_s, expect, 1e-9),
+        "simulated {} vs closed form {expect}",
+        out.makespan_s
+    );
+}
+
+#[test]
+fn prop_static_specs_match_closed_form() {
+    check("scenario static == R_int * T", 24, |rng| {
+        let edges = rng.int_range(2, 5) as usize;
+        let cap_each = rng.int_range(5, 20) as usize;
+        let max_ues = (edges * cap_each) as i64;
+        let ues = rng.int_range(edges as i64, (max_ues * 4 / 5).max(edges as i64)) as usize;
+        let mut params = SystemParams::default();
+        params.ue_bandwidth_hz = params.edge_bandwidth_hz / cap_each as f64;
+        let strategy = if rng.f64() < 0.5 {
+            AssocStrategy::Proposed
+        } else {
+            AssocStrategy::Greedy
+        };
+        let mut spec = ScenarioSpec::new()
+            .edges(edges)
+            .ues(ues)
+            .eps(rng.range(0.05, 0.5))
+            .assoc(strategy);
+        spec.base.system = params;
+        let seed = rng.next_u64();
+        let out = run_instance(&spec, seed).unwrap();
+        let (expect, a, b) = closed_form_reference(&spec, seed);
+        assert_eq!((out.a, out.b), (a, b));
+        assert_eq!(out.closed_form_s.to_bits(), expect.to_bits());
+        assert!(
+            rel_close(out.makespan_s, expect, 1e-9),
+            "sim {} vs closed {expect}",
+            out.makespan_s
+        );
+    });
+}
+
+#[test]
+fn chunked_epochs_accrue_bit_exactly() {
+    // Zero-dynamics + zero-failure: splitting the run into 1-round epochs
+    // (re-associating and re-solving between every round) must reproduce
+    // the single-epoch makespan bit for bit.
+    let whole_spec = ScenarioSpec::new().edges(2).ues(20).eps(0.1).seed(3);
+    let chunked_spec = whole_spec.clone().epoch_rounds(1).max_epochs(100_000);
+    let whole = run_instance(&whole_spec, 99).unwrap();
+    let chunked = run_instance(&chunked_spec, 99).unwrap();
+    assert_eq!(whole.rounds, chunked.rounds);
+    assert_eq!(chunked.epochs, whole.rounds, "one epoch per round");
+    assert!(whole.converged && chunked.converged);
+    // The simulated clock advances through the identical per-round addition
+    // sequence either way — bitwise equal. The closed-form bookkeeping is
+    // R·T in one multiply vs a per-epoch sum of T, so only near-equal.
+    assert_eq!(whole.makespan_s.to_bits(), chunked.makespan_s.to_bits());
+    assert!(rel_close(whole.closed_form_s, chunked.closed_form_s, 1e-12));
+}
+
+fn dynamic_spec() -> ScenarioSpec {
+    ScenarioSpec::new()
+        .edges(3)
+        .ues(40)
+        .eps(0.1)
+        .seed(11)
+        .mobility(1.0, 5.0)
+        .churn(1.0, 0.1)
+        .jitter(0.1)
+        .dropout(0.05)
+        .epoch_rounds(1)
+        .max_epochs(64)
+}
+
+fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.instance, y.instance);
+        assert_eq!(x.seed, y.seed);
+        assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+        assert_eq!(x.closed_form_s.to_bits(), y.closed_form_s.to_bits());
+        assert_eq!(x.rounds, y.rounds);
+        assert_eq!(x.epochs, y.epochs);
+        assert_eq!(x.converged, y.converged);
+        assert_eq!((x.a, x.b), (y.a, y.b));
+        assert_eq!(x.handovers, y.handovers);
+        assert_eq!(x.arrivals, y.arrivals);
+        assert_eq!(x.departures, y.departures);
+        assert_eq!(x.dropped_uploads, y.dropped_uploads);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.ue_barrier_wait_s.to_bits(), y.ue_barrier_wait_s.to_bits());
+        assert_eq!(
+            x.edge_barrier_wait_s.to_bits(),
+            y.edge_barrier_wait_s.to_bits()
+        );
+    }
+}
+
+#[test]
+fn runner_is_bitwise_deterministic_across_shard_counts() {
+    let spec = dynamic_spec().instances(12);
+    let one = run_batch(&spec.clone().shards(1)).unwrap();
+    let eight = run_batch(&spec.clone().shards(8)).unwrap();
+    assert_eq!(one.shards, 1);
+    assert_outcomes_bitwise_equal(&one.outcomes, &eight.outcomes);
+    // And re-running the same sharded batch reproduces itself.
+    let eight_again = run_batch(&spec.clone().shards(8)).unwrap();
+    assert_outcomes_bitwise_equal(&eight.outcomes, &eight_again.outcomes);
+}
+
+#[test]
+fn dynamic_instance_is_deterministic_and_does_dynamics() {
+    let spec = dynamic_spec();
+    let a = run_instance(&spec, 77).unwrap();
+    let b = run_instance(&spec, 77).unwrap();
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert_eq!(a.handovers, b.handovers);
+    assert!(a.epochs > 1, "dynamic run must span multiple epochs");
+    assert!(a.rounds >= 1);
+    assert!(a.events > 0);
+    assert!(a.makespan_s > 0.0);
+    // 40 UEs at 10% departure across several epochs: a departure-free run
+    // is astronomically unlikely for any seed.
+    assert!(a.departures > 0, "churn must fire");
+    // Dropout at 5% across hundreds of UE-round uploads.
+    assert!(a.dropped_uploads > 0, "dropout must fire");
+}
+
+#[test]
+fn total_departure_drains_to_backhaul_only_rounds() {
+    // Every UE leaves after the first epoch and nobody returns: the run
+    // must still converge (backhaul-only rounds), not hang or crash.
+    let spec = ScenarioSpec::new()
+        .edges(2)
+        .ues(10)
+        .eps(0.25)
+        .seed(5)
+        .churn(0.0, 1.0)
+        .epoch_rounds(1)
+        .max_epochs(200);
+    let out = run_instance(&spec, 21).unwrap();
+    assert_eq!(out.departures, 10);
+    assert!(out.converged, "backhaul-only protocol still terminates");
+    assert!(out.makespan_s.is_finite());
+}
+
+#[test]
+fn toml_spec_end_to_end() {
+    let spec = ScenarioSpec::parse_toml(
+        r#"
+[scenario]
+num_edges = 2
+num_ues = 12
+eps = 0.25
+seed = 4
+assoc = "greedy"
+[failure]
+jitter_sigma = 0.05
+[dynamics]
+epoch_rounds = 1
+max_epochs = 32
+speed_min_mps = 0.5
+speed_max_mps = 2.0
+arrival_rate = 0.5
+departure_prob = 0.02
+[batch]
+instances = 6
+shards = 2
+"#,
+    )
+    .unwrap();
+    let batch = run_batch(&spec).unwrap();
+    assert_eq!(batch.outcomes.len(), 6);
+    let report = BatchReport::from_outcomes(&batch.outcomes);
+    assert_eq!(report.instances, 6);
+    assert!(report.makespan_s.mean > 0.0);
+    assert!(report.makespan_s.p99 >= report.makespan_s.p50);
+    // JSON report must round-trip through the in-tree parser.
+    let text = report.to_json(Some(&spec)).to_string();
+    assert!(hfl::util::json::Json::parse(&text).is_ok());
+}
+
+#[test]
+fn fixed_iters_override_optimizer() {
+    let spec = ScenarioSpec::new()
+        .edges(2)
+        .ues(10)
+        .eps(0.25)
+        .fixed_iters(13, 4);
+    let out = run_instance(&spec, 8).unwrap();
+    assert_eq!((out.a, out.b), (13, 4));
+}
+
+#[test]
+fn instance_seeds_vary_topology_but_share_spec() {
+    let spec = ScenarioSpec::new().edges(2).ues(15).instances(4).shards(1);
+    let batch = run_batch(&spec).unwrap();
+    let mut makespans: Vec<u64> = batch
+        .outcomes
+        .iter()
+        .map(|o| o.makespan_s.to_bits())
+        .collect();
+    makespans.sort_unstable();
+    makespans.dedup();
+    assert!(
+        makespans.len() > 1,
+        "different instance seeds must sample different topologies"
+    );
+}

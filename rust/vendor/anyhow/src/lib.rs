@@ -1,0 +1,147 @@
+//! Offline substitute for the `anyhow` crate.
+//!
+//! The repo builds with no network access, so the handful of external
+//! crates the code depends on by *name* are vendored as path crates (see
+//! rust/Cargo.toml). This one covers the `anyhow` API surface the crate
+//! actually uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros
+//! and the [`Context`] extension trait. Errors are rendered to a flat
+//! message eagerly — no backtraces and no source chain, which is all the
+//! CLI/report paths here need.
+
+use std::fmt;
+
+/// A rendered error message. Unlike the real `anyhow::Error` there is no
+/// source chain: context is prepended textually at attach time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context line (mirrors `Error::context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (the chain format) and `{}` coincide: the chain was
+        // flattened into the message when the error was built.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does not
+// implement `std::error::Error`, exactly like the real crate — that is
+// what keeps this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+/// Implemented for any displayable error type (a superset of the real
+/// crate's `E: StdError` bound, harmless for in-tree use).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let x = 7;
+        let captured = anyhow!("x = {x}");
+        assert_eq!(captured.to_string(), "x = 7");
+        let formatted = anyhow!("{} and {}", 1, 2);
+        assert_eq!(formatted.to_string(), "1 and 2");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope {}", 3);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: disk on fire");
+        let e2 = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e2:#}"), "outer: inner");
+    }
+}
