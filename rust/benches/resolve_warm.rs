@@ -1,0 +1,209 @@
+//! Per-epoch (a, b) re-solve latency: cold vs warm-started, on the
+//! `configs/scenario_mobility.toml` workload shape.
+//!
+//!   cargo bench --bench resolve_warm
+//!
+//! Two measurements:
+//!
+//! * **engine**: the scenario engine's own re-solve accounting
+//!   (`ScenarioOutcome::resolve_time_s / resolves`) under
+//!   `resolve = "cold"` (from-scratch rebuild + unseeded solve, the
+//!   pre-incremental baseline) vs `"warm"` (maintained instance + warm
+//!   seed). Before timing, the bench asserts the two modes produce
+//!   identical (a*, b*) trajectories and bitwise-identical makespans.
+//! * **solver**: the same cold-vs-warm pipeline isolated from the engine
+//!   — one drifting world, per-step `DelayInstance` rebuild + cold
+//!   `solve_integer` vs `MaintainedInstance::sync` + warm
+//!   `solve_integer_maintained` — asserting cell-identical optima.
+//!
+//! Emits BENCH_JSON lines and rewrites `BENCH_resolve.json` in the
+//! current directory (run from the repo root to refresh the checked-in
+//! baseline; the acceptance target is a ≥3x engine speedup).
+
+use std::time::Instant;
+
+use hfl::assoc::Association;
+use hfl::delay::{DelayInstance, MaintainedInstance};
+use hfl::net::{Channel, Position, SystemParams, Topology};
+use hfl::opt::{solve_integer, solve_integer_maintained, SolveOptions};
+use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
+use hfl::util::bench::{black_box, section};
+use hfl::util::json::Json;
+use hfl::util::Rng;
+
+/// The configs/scenario_mobility.toml workload, shrunk to bench size and
+/// pinned to one shard so the timing is not scheduler-dependent.
+fn mobility_spec(resolve: ResolveMode) -> ScenarioSpec {
+    ScenarioSpec::new()
+        .edges(5)
+        .ues(100)
+        .eps(0.25)
+        .seed(42)
+        .mobility(0.5, 2.0)
+        .churn(1.0, 0.02)
+        .jitter(0.1)
+        .dropout(0.01)
+        .epoch_rounds(1)
+        .max_epochs(64)
+        .instances(16)
+        .shards(1)
+        .resolve(resolve)
+}
+
+/// Mean per-epoch re-solve time (µs) and total re-solves of a batch.
+fn engine_us(spec: &ScenarioSpec) -> (f64, u64) {
+    let batch = run_batch(spec).expect("bench batch must run");
+    let (mut time_s, mut n) = (0.0f64, 0u64);
+    for o in &batch.outcomes {
+        time_s += o.resolve_time_s;
+        n += o.resolves;
+    }
+    (time_s / n.max(1) as f64 * 1e6, n)
+}
+
+fn main() {
+    section("engine: per-epoch (a,b) re-solve, mobility + churn batch");
+    let cold_spec = mobility_spec(ResolveMode::Cold);
+    let warm_spec = mobility_spec(ResolveMode::Warm);
+
+    // Correctness cross-check before any timing: identical trajectories.
+    let cold_batch = run_batch(&cold_spec).expect("cold batch");
+    let warm_batch = run_batch(&warm_spec).expect("warm batch");
+    for (c, w) in cold_batch.outcomes.iter().zip(&warm_batch.outcomes) {
+        assert_eq!(c.ab_per_epoch, w.ab_per_epoch, "warm diverged from cold");
+        assert_eq!(c.makespan_s.to_bits(), w.makespan_s.to_bits());
+    }
+    println!(
+        "cross-check: warm == cold on all {} instances",
+        cold_batch.outcomes.len()
+    );
+
+    let (cold_us, cold_n) = engine_us(&cold_spec);
+    let (warm_us, warm_n) = engine_us(&warm_spec);
+    let engine_speedup = cold_us / warm_us;
+    println!(
+        "engine re-solve: cold {cold_us:.1} µs/epoch ({cold_n} resolves)  warm {warm_us:.1} µs/epoch ({warm_n} resolves)  speedup {engine_speedup:.2}x"
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"engine resolve cold\",\"per_epoch_us\":{cold_us:.2},\"resolves\":{cold_n}}}"
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"engine resolve warm\",\"per_epoch_us\":{warm_us:.2},\"resolves\":{warm_n}}}"
+    );
+    println!("BENCH_JSON {{\"name\":\"engine resolve speedup\",\"value\":{engine_speedup:.3}}}");
+
+    section("solver: rebuild+cold vs sync+warm over one drifting world");
+    let steps = 200usize;
+    let topo0 = Topology::sample(&SystemParams::default(), 5, 100, 42);
+    let edge_of_plain: Vec<usize> = (0..100).map(|i| i % 5).collect();
+    let edge_of: Vec<Option<usize>> = edge_of_plain.iter().map(|&e| Some(e)).collect();
+    let assoc = Association::new(edge_of_plain, 5);
+    let opts = SolveOptions::default();
+    let mut rng = Rng::new(0xD21F);
+    let area = topo0.params.area_m;
+
+    // Cold lap: per step, move one UE, rebuild the instance, solve.
+    let mut topo = topo0.clone();
+    let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let mut cold_cells = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let n = step % 100;
+        topo.ues[n].pos = Position {
+            x: rng.range(0.0, area),
+            y: rng.range(0.0, area),
+        };
+        channel.recompute_ue(&topo.params, &topo.ues[n], &topo.edges);
+        let inst = DelayInstance::build(&topo, &channel, &assoc, 0.25);
+        let sol = black_box(solve_integer(&inst, &opts));
+        cold_cells.push((sol.a, sol.b));
+    }
+    let solver_cold_us = t0.elapsed().as_secs_f64() / steps as f64 * 1e6;
+
+    // Warm lap: identical drift (fresh rng with the same seed), but the
+    // maintained instance absorbs each delta and the solver is seeded.
+    let mut rng = Rng::new(0xD21F);
+    let mut topo = topo0.clone();
+    let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let mut maintained = MaintainedInstance::build(&topo, &channel, &edge_of, 0.25);
+    let mut warm_cells = Vec::with_capacity(steps);
+    let mut prev = None;
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let n = step % 100;
+        topo.ues[n].pos = Position {
+            x: rng.range(0.0, area),
+            y: rng.range(0.0, area),
+        };
+        channel.recompute_ue(&topo.params, &topo.ues[n], &topo.edges);
+        maintained.sync(&topo, &channel, &edge_of);
+        let sol = black_box(solve_integer_maintained(&mut maintained, &opts, prev));
+        prev = Some((sol.a, sol.b));
+        warm_cells.push((sol.a, sol.b));
+    }
+    let solver_warm_us = t0.elapsed().as_secs_f64() / steps as f64 * 1e6;
+    assert_eq!(cold_cells, warm_cells, "solver warm diverged from cold");
+
+    let solver_speedup = solver_cold_us / solver_warm_us;
+    println!(
+        "solver pipeline: cold {solver_cold_us:.1} µs  warm {solver_warm_us:.1} µs  speedup {solver_speedup:.2}x"
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"solver resolve cold\",\"per_solve_us\":{solver_cold_us:.2}}}"
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"solver resolve warm\",\"per_solve_us\":{solver_warm_us:.2}}}"
+    );
+    println!("BENCH_JSON {{\"name\":\"solver resolve speedup\",\"value\":{solver_speedup:.3}}}");
+
+    // Refresh the checked-in baseline (repo root relative).
+    let json = Json::obj(vec![
+        ("bench", Json::str("resolve_warm")),
+        ("generated", Json::Bool(true)),
+        ("command", Json::str("cargo bench --bench resolve_warm")),
+        (
+            "workload",
+            Json::str(
+                "configs/scenario_mobility.toml shape: 5 edges x 100 UEs, mobility 0.5-2.0 m/s, \
+                 churn +1.0/-0.02, 16 instances x <=64 epochs, 1 shard",
+            ),
+        ),
+        (
+            "rows",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("engine resolve cold")),
+                    ("per_epoch_us", Json::num(cold_us)),
+                    ("resolves", Json::num(cold_n as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("engine resolve warm")),
+                    ("per_epoch_us", Json::num(warm_us)),
+                    ("resolves", Json::num(warm_n as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("engine resolve speedup")),
+                    ("value", Json::num(engine_speedup)),
+                    ("target", Json::num(3.0)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("solver resolve cold")),
+                    ("per_solve_us", Json::num(solver_cold_us)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("solver resolve warm")),
+                    ("per_solve_us", Json::num(solver_warm_us)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("solver resolve speedup")),
+                    ("value", Json::num(solver_speedup)),
+                ]),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_resolve.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

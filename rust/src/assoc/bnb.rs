@@ -35,13 +35,13 @@ pub fn solve_exact_bnb(
             .map(|e| table.of(ue, e))
             .fold(f64::INFINITY, f64::min)
     };
-    order.sort_by(|&a, &b| best_lat(b).partial_cmp(&best_lat(a)).unwrap());
+    order.sort_by(|&a, &b| best_lat(b).total_cmp(&best_lat(a)));
 
     // Per-UE edge preference (ascending latency).
     let prefs: Vec<Vec<usize>> = (0..n)
         .map(|ue| {
             let mut es: Vec<usize> = (0..m).collect();
-            es.sort_by(|&a, &b| table.of(ue, a).partial_cmp(&table.of(ue, b)).unwrap());
+            es.sort_by(|&a, &b| table.of(ue, a).total_cmp(&table.of(ue, b)));
             es
         })
         .collect();
@@ -130,7 +130,10 @@ pub fn solve_exact_matching(table: &LatencyTable, cap: usize) -> Result<Associat
         return Err(format!("infeasible: {n} UEs > {m} edges x capacity {cap}"));
     }
     let mut thresholds: Vec<f64> = table.latency_s.clone();
-    thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN latencies (degenerate channels) sort last instead of
+    // panicking; they can never satisfy `of(ue, e) <= z`, so the solver
+    // reports infeasibility rather than aborting.
+    thresholds.sort_by(|a, b| a.total_cmp(b));
     thresholds.dedup();
 
     // Binary search the smallest feasible threshold.

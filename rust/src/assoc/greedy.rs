@@ -14,12 +14,7 @@ pub fn greedy(channel: &Channel, cap: usize) -> Result<Association, String> {
     let mut edge_of = vec![usize::MAX; n_ues];
     let mut available: Vec<usize> = (0..n_ues).collect();
     for m in 0..n_edges {
-        available.sort_by(|&a, &b| {
-            channel
-                .snr_of(b, m)
-                .partial_cmp(&channel.snr_of(a, m))
-                .unwrap()
-        });
+        available.sort_by(|&a, &b| channel.snr_of(b, m).total_cmp(&channel.snr_of(a, m)));
         let take = available.len().min(cap);
         for &n in available.iter().take(take) {
             edge_of[n] = m;

@@ -164,6 +164,35 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_channel_never_panics() {
+        // A UE parked on top of its edge server under a zero-bandwidth
+        // allocation: noise_w(0) = 0 makes every SNR `g·p/0 = +inf`, and
+        // the Shannon rate `0·log2(1+inf)` evaluates to NaN, so every
+        // link latency is NaN too. Before the total_cmp hardening the
+        // SNR/latency sorts panicked on these values.
+        let mut params = SystemParams::default();
+        params.ue_bandwidth_hz = 0.0;
+        let mut topo = Topology::sample(&params, 2, 8, 3);
+        topo.ues[0].pos = topo.edges[0].pos; // co-located: maximal gain
+        let ch = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+        assert!(ch.snr_of(0, 0).is_infinite());
+        assert!(ch.rate_of(0, 0).is_nan());
+
+        // SNR-order strategies stay deterministic and feasible.
+        time_minimized(&ch, 4).unwrap().validate(4).unwrap();
+        time_minimized_claims(&ch, 4).unwrap().validate(4).unwrap();
+        greedy(&ch, 4).unwrap().validate(4).unwrap();
+
+        // Latency-based exact solvers see all-NaN latencies: they must
+        // fail gracefully (NaN satisfies no threshold) or terminate —
+        // never abort mid-sort.
+        let table = LatencyTable::build(&topo, &ch, 20.0);
+        assert!(table.of(0, 0).is_nan());
+        assert!(solve_exact_matching(&table, 4).is_err());
+        let _ = solve_exact_bnb(&table, 4, None);
+    }
+
+    #[test]
     fn max_latency_is_max() {
         let (t, ch) = setup();
         let lt = LatencyTable::build(&t, &ch, 5.0);

@@ -39,10 +39,9 @@ pub fn time_minimized(channel: &Channel, cap: usize) -> Result<Association, Stri
     pairs.sort_by(|&p, &q| {
         let (pn, pm) = ((p as usize) / n_edges, (p as usize) % n_edges);
         let (qn, qm) = ((q as usize) / n_edges, (q as usize) % n_edges);
-        channel
-            .snr_of(qn, qm)
-            .partial_cmp(&channel.snr_of(pn, pm))
-            .unwrap()
+        // total_cmp: degenerate channels (NaN/∞ SNR) sort deterministically
+        // instead of panicking mid-sort.
+        channel.snr_of(qn, qm).total_cmp(&channel.snr_of(pn, pm))
     });
     let mut edge_of = vec![usize::MAX; n_ues];
     let mut load = vec![0usize; n_edges];
@@ -83,12 +82,7 @@ pub fn time_minimized_claims(channel: &Channel, cap: usize) -> Result<Associatio
     let claim = n_ues.div_ceil(n_edges).min(cap);
     for m in 0..n_edges {
         let mut order: Vec<usize> = (0..n_ues).collect();
-        order.sort_by(|&a, &b| {
-            channel
-                .snr_of(b, m)
-                .partial_cmp(&channel.snr_of(a, m))
-                .unwrap()
-        });
+        order.sort_by(|&a, &b| channel.snr_of(b, m).total_cmp(&channel.snr_of(a, m)));
         for &n in order.iter().take(claim) {
             sets[m].push(n);
             claimed_by[n].push(m);
@@ -149,12 +143,7 @@ pub fn time_minimized_claims(channel: &Channel, cap: usize) -> Result<Associatio
         }
         let m = (0..n_edges)
             .filter(|&m| load[m] < cap)
-            .max_by(|&a, &b| {
-                channel
-                    .snr_of(n, a)
-                    .partial_cmp(&channel.snr_of(n, b))
-                    .unwrap()
-            })
+            .max_by(|&a, &b| channel.snr_of(n, a).total_cmp(&channel.snr_of(n, b)))
             .ok_or_else(|| "no edge with spare capacity".to_string())?;
         edge_of[n] = m;
         load[m] += 1;
@@ -184,18 +173,13 @@ pub fn refine_swaps(
             .iter()
             .enumerate()
             .map(|(n, &m)| (n, table.of(n, m)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         // Try moving it to its best edge among those with spare capacity.
         let from = cur.edge_of[bott_ue];
         let best = (0..cur.num_edges)
             .filter(|&m| m != from && load[m] < cap)
-            .min_by(|&a, &b| {
-                table
-                    .of(bott_ue, a)
-                    .partial_cmp(&table.of(bott_ue, b))
-                    .unwrap()
-            });
+            .min_by(|&a, &b| table.of(bott_ue, a).total_cmp(&table.of(bott_ue, b)));
         match best {
             Some(m) if table.of(bott_ue, m) < bott_lat => {
                 cur.edge_of[bott_ue] = m;

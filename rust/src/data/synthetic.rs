@@ -171,7 +171,7 @@ mod tests {
                             .map(|(&p, &q)| (p as f64 - q).powi(2))
                             .sum()
                     };
-                    d(a).partial_cmp(&d(b)).unwrap()
+                    d(a).total_cmp(&d(b))
                 })
                 .unwrap();
             if best as i32 == test.y[i] {
@@ -213,7 +213,7 @@ mod tests {
                         .zip(&protos[b])
                         .map(|(&p, &q)| (p as f64 - q).powi(2))
                         .sum();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap();
             if best as i32 == d.y[i] {

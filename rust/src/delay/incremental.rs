@@ -1,0 +1,388 @@
+//! Incrementally-maintained delay instance — the re-solve hot path.
+//!
+//! The scenario engine re-minimizes `R(a,b,ε)·T(a,b)` every epoch, but an
+//! epoch's dynamics touch only a few rows of the world: mobility moves
+//! some UEs (changing their upload times), churn removes/re-adds a few,
+//! handovers move a few between edges. [`MaintainedInstance`] applies
+//! exactly those deltas to a [`DelayInstance`] kept alive across epochs,
+//! instead of reallocating the whole member structure per epoch, and
+//! caches a per-edge *Pareto frontier* of `(t^cmp, t^com)` lines so that
+//! `τ_m(a) = max_n (a·t_n^cmp + t_n^com)` evaluates over the few
+//! non-dominated members instead of re-scanning every UE — the operation
+//! the integer solver performs thousands of times per re-solve.
+//!
+//! Bitwise discipline (what the scenario tests rely on):
+//!
+//! * member lists are kept sorted by global UE id, and every `(cmp, com)`
+//!   pair is computed with the same expressions as the from-scratch
+//!   build, so [`MaintainedInstance::instance`] is indistinguishable —
+//!   bit for bit — from rebuilding via `DelayInstance`-style construction;
+//! * a line dominated by another (`cmp` and `com` both ≤) can never
+//!   exceed the dominator under IEEE-754 round-to-nearest (rounding is
+//!   monotone), so folding the max over the frontier returns the *same
+//!   bits* as folding over all members. Warm and cold solvers therefore
+//!   see identical objective values.
+//!
+//! Memberless edges hold an empty frontier and contribute nothing to
+//! `round_time`/`tau_max`, matching the post-churn semantics of
+//! [`DelayInstance::round_time`].
+
+use super::{cloud_rounds_int, ue_compute_time, upload_time, DelayInstance, EdgeDelays};
+use crate::net::{Channel, Topology};
+
+/// `max_n (a·cmp_n + com_n)` over a set of delay lines (0 when empty).
+#[inline]
+fn tau_lines(lines: &[(f64, f64)], a: f64) -> f64 {
+    lines.iter().map(|&(cmp, com)| a * cmp + com).fold(0.0, f64::max)
+}
+
+/// Non-dominated subset of delay lines: a line survives unless some other
+/// line has both a larger-or-equal slope (compute time) and a
+/// larger-or-equal intercept (upload time). The max over the survivors
+/// equals the max over the full set for every `a ≥ 0`, bit for bit.
+fn pareto_frontier(lines: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<(f64, f64)> = lines.to_vec();
+    // Descending slope, then descending intercept among equal slopes.
+    sorted.sort_by(|x, y| y.0.total_cmp(&x.0).then(y.1.total_cmp(&x.1)));
+    let mut keep = Vec::new();
+    let mut best_com = f64::NEG_INFINITY;
+    for (cmp, com) in sorted {
+        if com > best_com {
+            keep.push((cmp, com));
+            best_com = com;
+        }
+    }
+    keep
+}
+
+/// A [`DelayInstance`] that accepts per-UE deltas (mobility row updates,
+/// churn arrivals/departures, handovers) and caches per-edge τ-evaluation
+/// frontiers for the optimizer. See the module docs for the invariants.
+#[derive(Debug, Clone)]
+pub struct MaintainedInstance {
+    inst: DelayInstance,
+    /// `(edge, slot)` of each global UE id; `None` = not associated.
+    slot: Vec<Option<(usize, usize)>>,
+    /// Global UE id held at `inst.per_edge[e].ue[s]` (sorted ascending).
+    member: Vec<Vec<usize>>,
+    /// Cached Pareto frontier per edge (valid when not dirty).
+    frontier: Vec<Vec<(f64, f64)>>,
+    dirty: Vec<bool>,
+}
+
+impl MaintainedInstance {
+    /// Build from a world snapshot and a per-global-UE serving edge
+    /// (`None` = inactive), mirroring the scenario engine's association
+    /// output. Members land in ascending global-id order.
+    pub fn build(
+        topo: &Topology,
+        channel: &Channel,
+        edge_of: &[Option<usize>],
+        eps: f64,
+    ) -> MaintainedInstance {
+        debug_assert_eq!(edge_of.len(), topo.num_ues());
+        let m = topo.num_edges();
+        let inst = DelayInstance {
+            per_edge: topo
+                .edges
+                .iter()
+                .map(|edge| EdgeDelays {
+                    ue: Vec::new(),
+                    backhaul_s: upload_time(edge.model_bits, edge.cloud_rate_bps),
+                })
+                .collect(),
+            gamma: topo.params.gamma,
+            zeta: topo.params.zeta,
+            c_const: topo.params.c_const,
+            eps,
+        };
+        let mut maintained = MaintainedInstance {
+            inst,
+            slot: vec![None; edge_of.len()],
+            member: vec![Vec::new(); m],
+            frontier: vec![Vec::new(); m],
+            dirty: vec![true; m],
+        };
+        for (n, e) in edge_of.iter().enumerate() {
+            if let Some(e) = e {
+                maintained.insert(n, *e, topo, channel);
+            }
+        }
+        maintained
+    }
+
+    /// The live instance (always structurally up to date; `refresh` is
+    /// only needed before the frontier-backed evaluation methods).
+    pub fn instance(&self) -> &DelayInstance {
+        &self.inst
+    }
+
+    /// Diff the maintained state against the current world: re-derives
+    /// every active UE's `(t^cmp, t^com)` from the (possibly moved)
+    /// channel row, applies churn departures/arrivals and handovers, and
+    /// marks only the touched edges' frontiers dirty. O(N) float work,
+    /// zero allocation when membership is unchanged.
+    pub fn sync(&mut self, topo: &Topology, channel: &Channel, edge_of: &[Option<usize>]) {
+        debug_assert_eq!(edge_of.len(), self.slot.len());
+        for (n, desired) in edge_of.iter().enumerate() {
+            match (self.slot[n], desired) {
+                (Some((e, s)), Some(d)) if e == *d => {
+                    let ue = &topo.ues[n];
+                    let delays = (
+                        ue_compute_time(ue),
+                        upload_time(ue.model_bits, channel.rate_of(n, e)),
+                    );
+                    if self.inst.per_edge[e].ue[s] != delays {
+                        self.inst.per_edge[e].ue[s] = delays;
+                        self.dirty[e] = true;
+                    }
+                }
+                (Some(_), _) => {
+                    self.remove(n);
+                    if let Some(d) = desired {
+                        self.insert(n, *d, topo, channel);
+                    }
+                }
+                (None, Some(d)) => self.insert(n, *d, topo, channel),
+                (None, None) => {}
+            }
+        }
+    }
+
+    fn insert(&mut self, n: usize, e: usize, topo: &Topology, channel: &Channel) {
+        debug_assert!(self.slot[n].is_none(), "UE {n} already assigned");
+        let ue = &topo.ues[n];
+        let delays = (
+            ue_compute_time(ue),
+            upload_time(ue.model_bits, channel.rate_of(n, e)),
+        );
+        let pos = self.member[e].partition_point(|&id| id < n);
+        self.member[e].insert(pos, n);
+        self.inst.per_edge[e].ue.insert(pos, delays);
+        for (s, &id) in self.member[e].iter().enumerate().skip(pos) {
+            self.slot[id] = Some((e, s));
+        }
+        self.dirty[e] = true;
+    }
+
+    fn remove(&mut self, n: usize) {
+        let (e, s) = self.slot[n].take().expect("UE not assigned");
+        self.member[e].remove(s);
+        self.inst.per_edge[e].ue.remove(s);
+        for (s2, &id) in self.member[e].iter().enumerate().skip(s) {
+            self.slot[id] = Some((e, s2));
+        }
+        self.dirty[e] = true;
+    }
+
+    /// Rebuild the frontiers of edges whose membership or delays changed
+    /// since the last refresh. Call once before a batch of evaluations.
+    pub fn refresh(&mut self) {
+        for (e, dirty) in self.dirty.iter_mut().enumerate() {
+            if *dirty {
+                self.frontier[e] = pareto_frontier(&self.inst.per_edge[e].ue);
+                *dirty = false;
+            }
+        }
+    }
+
+    #[inline]
+    fn assert_fresh(&self) {
+        debug_assert!(
+            !self.dirty.iter().any(|&d| d),
+            "MaintainedInstance: refresh() before frontier evaluation"
+        );
+    }
+
+    /// `max_m τ_m(a)` via the cached frontiers (memberless edges give 0).
+    pub fn tau_max(&self, a: f64) -> f64 {
+        self.assert_fresh();
+        self.frontier
+            .iter()
+            .map(|f| tau_lines(f, a))
+            .fold(0.0, f64::max)
+    }
+
+    /// `T(a,b) = max_m (b·τ_m(a) + t_{m→c}^com)` over edges with members,
+    /// bitwise equal to [`DelayInstance::round_time`].
+    pub fn round_time(&self, a: f64, b: f64) -> f64 {
+        self.assert_fresh();
+        self.frontier
+            .iter()
+            .zip(&self.inst.per_edge)
+            .filter(|(f, _)| !f.is_empty())
+            .map(|(f, e)| b * tau_lines(f, a) + e.backhaul_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// `⌈R(a,b,ε)⌉ · T(a,b)`, bitwise equal to
+    /// [`DelayInstance::total_time_int`].
+    pub fn total_time_int(&self, a: f64, b: f64) -> f64 {
+        let i = &self.inst;
+        cloud_rounds_int(a, b, i.eps, i.c_const, i.gamma, i.zeta) as f64 * self.round_time(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Position, SystemParams};
+
+    fn world(seed: u64) -> (Topology, Channel) {
+        let t = Topology::sample(&SystemParams::default(), 3, 18, seed);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        (t, ch)
+    }
+
+    /// From-scratch reference build (the scenario engine's original
+    /// per-epoch construction): members in ascending global-id order.
+    fn rebuild(
+        topo: &Topology,
+        channel: &Channel,
+        edge_of: &[Option<usize>],
+        eps: f64,
+    ) -> DelayInstance {
+        let m = topo.num_edges();
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (n, e) in edge_of.iter().enumerate() {
+            if let Some(e) = e {
+                members[*e].push(n);
+            }
+        }
+        DelayInstance {
+            per_edge: topo
+                .edges
+                .iter()
+                .map(|edge| EdgeDelays {
+                    ue: members[edge.id]
+                        .iter()
+                        .map(|&n| {
+                            let ue = &topo.ues[n];
+                            (
+                                ue_compute_time(ue),
+                                upload_time(ue.model_bits, channel.rate_of(n, edge.id)),
+                            )
+                        })
+                        .collect(),
+                    backhaul_s: upload_time(edge.model_bits, edge.cloud_rate_bps),
+                })
+                .collect(),
+            gamma: topo.params.gamma,
+            zeta: topo.params.zeta,
+            c_const: topo.params.c_const,
+            eps,
+        }
+    }
+
+    fn check_equal(maintained: &MaintainedInstance, expect: &DelayInstance) {
+        let got = maintained.instance();
+        assert_eq!(got.per_edge.len(), expect.per_edge.len());
+        for (g, e) in got.per_edge.iter().zip(&expect.per_edge) {
+            assert_eq!(g.ue, e.ue, "member delays must match bitwise");
+            assert_eq!(g.backhaul_s.to_bits(), e.backhaul_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn build_then_sync_matches_rebuild_bitwise() {
+        let (mut topo, mut ch) = world(9);
+        let eps = 0.25;
+        // Some UEs start inactive (None), like a churned world.
+        let mut edge_of: Vec<Option<usize>> = (0..18)
+            .map(|i| if i % 5 == 4 { None } else { Some(i % 3) })
+            .collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, eps);
+        check_equal(&m, &rebuild(&topo, &ch, &edge_of, eps));
+
+        // Mobility: two UEs move, their channel rows are recomputed.
+        topo.ues[2].pos = Position { x: 10.0, y: 20.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[2], &topo.edges);
+        topo.ues[7].pos = Position { x: 400.0, y: 90.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[7], &topo.edges);
+        // Churn departure, churn re-arrival, handover.
+        edge_of[6] = None;
+        edge_of[4] = Some(2);
+        edge_of[0] = Some(1);
+        m.sync(&topo, &ch, &edge_of);
+        check_equal(&m, &rebuild(&topo, &ch, &edge_of, eps));
+
+        // A no-op sync stays identical.
+        m.sync(&topo, &ch, &edge_of);
+        check_equal(&m, &rebuild(&topo, &ch, &edge_of, eps));
+    }
+
+    #[test]
+    fn frontier_eval_matches_full_scan_bitwise() {
+        let (topo, ch) = world(4);
+        let edge_of: Vec<Option<usize>> = (0..18).map(|i| Some(i % 3)).collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        m.refresh();
+        let inst = rebuild(&topo, &ch, &edge_of, 0.25);
+        for a in [1.0, 3.0, 17.0, 60.5, 200.0] {
+            assert_eq!(m.tau_max(a).to_bits(), inst.tau_max(a).to_bits());
+            for b in [1.0, 2.0, 9.0, 40.0] {
+                assert_eq!(m.round_time(a, b).to_bits(), inst.round_time(a, b).to_bits());
+                assert_eq!(
+                    m.total_time_int(a, b).to_bits(),
+                    inst.total_time_int(a, b).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_prunes_dominated_members() {
+        let (topo, ch) = world(7);
+        // Pile everyone on edge 0: plenty of dominated lines.
+        let edge_of: Vec<Option<usize>> = (0..18).map(|_| Some(0)).collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        m.refresh();
+        assert!(!m.frontier[0].is_empty());
+        assert!(
+            m.frontier[0].len() <= m.inst.per_edge[0].ue.len(),
+            "frontier cannot exceed the member count"
+        );
+        // Frontier intercepts strictly increase as slopes decrease.
+        for w in m.frontier[0].windows(2) {
+            assert!(w[0].0 >= w[1].0 && w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn memberless_edge_excluded_from_eval() {
+        let (topo, ch) = world(2);
+        // Edge 1 gets nobody.
+        let edge_of: Vec<Option<usize>> = (0..18)
+            .map(|i| Some(if i % 2 == 0 { 0 } else { 2 }))
+            .collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        m.refresh();
+        assert!(m.frontier[1].is_empty());
+        let inst = rebuild(&topo, &ch, &edge_of, 0.25);
+        assert_eq!(m.round_time(10.0, 4.0).to_bits(), inst.round_time(10.0, 4.0).to_bits());
+    }
+
+    #[test]
+    fn maintained_solver_matches_plain_under_drift() {
+        use crate::opt::{solve_integer, solve_integer_maintained, SolveOptions};
+        let (mut topo, mut ch) = world(11);
+        let edge_of: Vec<Option<usize>> = (0..18).map(|i| Some(i % 3)).collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        let opts = SolveOptions::default();
+        let mut prev = None;
+        for step in 0..6usize {
+            let n = step * 3 % 18;
+            topo.ues[n].pos = Position {
+                x: 30.0 * (step as f64 + 1.0),
+                y: 250.0,
+            };
+            ch.recompute_ue(&topo.params, &topo.ues[n], &topo.edges);
+            m.sync(&topo, &ch, &edge_of);
+            let reference = solve_integer(&rebuild(&topo, &ch, &edge_of, 0.25), &opts);
+            let warm = solve_integer_maintained(&mut m, &opts, prev);
+            assert_eq!((warm.a, warm.b), (reference.a, reference.b), "step {step}");
+            assert_eq!(warm.objective.to_bits(), reference.objective.to_bits());
+            prev = Some((warm.a, warm.b));
+        }
+    }
+}

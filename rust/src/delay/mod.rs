@@ -15,6 +15,9 @@
 //! Fig. 2 experiment uses; it restores the ε-dependence the paper reports.
 
 pub mod energy;
+pub mod incremental;
+
+pub use incremental::MaintainedInstance;
 
 use crate::assoc::Association;
 use crate::net::{Channel, Topology, Ue};
@@ -168,16 +171,34 @@ impl DelayInstance {
         }
     }
 
-    /// `τ_m(a)` for every edge (Eq. (33) inner max).
+    /// `τ_m(a)` for every edge (Eq. (33) inner max), indexed by edge —
+    /// Algorithm 2's dual update relies on the per-edge alignment, so
+    /// memberless edges report `τ = 0` here. They are *excluded* from
+    /// [`round_time`](Self::round_time): see that method.
     pub fn taus(&self, a: f64) -> Vec<f64> {
         self.per_edge.iter().map(|e| e.tau(a)).collect()
     }
 
+    /// `max_m τ_m(a)` without the per-edge allocation (the solver's
+    /// pruning bound; memberless edges contribute nothing since τ = 0).
+    pub fn tau_max(&self, a: f64) -> f64 {
+        self.per_edge.iter().map(|e| e.tau(a)).fold(0.0, f64::max)
+    }
+
     /// One cloud-round time (Eq. (34) inner expression):
     /// `T(a,b) = max_m (b τ_m(a) + t_{m→c}^com)`.
+    ///
+    /// Only edges with members participate: an edge emptied by churn or
+    /// handovers hosts no round and uploads no aggregate, so its backhaul
+    /// term must not gate the cloud barrier. (The seed erroneously kept
+    /// `b·0 + t_{m→c}^com` for memberless edges, inflating `T(a,b)` and
+    /// corrupting every post-churn (a, b) re-solve.) The event simulator
+    /// excludes the same edges, keeping the closed form and the simulated
+    /// makespan in lockstep.
     pub fn round_time(&self, a: f64, b: f64) -> f64 {
         self.per_edge
             .iter()
+            .filter(|e| !e.ue.is_empty())
             .map(|e| b * e.tau(a) + e.backhaul_s)
             .fold(0.0, f64::max)
     }
@@ -276,6 +297,48 @@ mod tests {
         // Small a: first UE dominates via upload; large a: second via compute.
         assert!((e.tau(1.0) - 0.501).abs() < 1e-12);
         assert!((e.tau(100.0) - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memberless_edge_excluded_from_round_time() {
+        // Regression: an edge emptied by churn kept injecting its
+        // backhaul into T(a,b) (`b·0 + 50`), dwarfing the live edge.
+        let inst = DelayInstance {
+            per_edge: vec![
+                EdgeDelays {
+                    ue: vec![(0.001, 0.1)],
+                    backhaul_s: 0.02,
+                },
+                EdgeDelays {
+                    ue: vec![],
+                    backhaul_s: 50.0,
+                },
+            ],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        // Only the live edge: 2·(10·0.001 + 0.1) + 0.02.
+        assert!((inst.round_time(10.0, 2.0) - 0.24).abs() < 1e-12);
+        // taus keeps per-edge indexing (Algorithm 2 needs it): τ = 0 there.
+        let taus = inst.taus(10.0);
+        assert!((taus[0] - 0.11).abs() < 1e-12);
+        assert_eq!(taus[1], 0.0);
+        assert!((inst.tau_max(10.0) - 0.11).abs() < 1e-12);
+        // Fully-drained world: a round takes no time at all.
+        let ghost = DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![],
+                backhaul_s: 3.0,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        assert_eq!(ghost.round_time(5.0, 5.0), 0.0);
+        assert_eq!(ghost.total_time_int(5.0, 5.0), 0.0);
     }
 
     #[test]

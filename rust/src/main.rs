@@ -111,6 +111,7 @@ SCENARIO OPTIONS
   --epoch-rounds N     cloud rounds per epoch (default: auto)
   --max-epochs N       epoch cap                           (default 256)
   --mode NAME          integer|continuous|subgradient      (default integer)
+  --resolve NAME       per-epoch (a,b) re-solve: warm|cold (default warm)
   --report FILE        JSON report path (default results/scenario_report.json)
 ";
 

@@ -1,6 +1,9 @@
-//! Reference solvers for sub-problem I.
+//! Reference solvers for sub-problem I, plus the warm-started variants
+//! the scenario engine re-runs every epoch (consecutive optima of a
+//! slowly-drifting world are close, so the previous `(a*, b*)` is an
+//! excellent incumbent).
 
-use crate::delay::DelayInstance;
+use crate::delay::{DelayInstance, MaintainedInstance};
 
 /// Options shared by the solvers.
 #[derive(Debug, Clone)]
@@ -13,6 +16,9 @@ pub struct SolveOptions {
     pub tol: f64,
     /// Coarse grid resolution used to seed the golden-section search.
     pub grid: usize,
+    /// Half-width of the neighborhood the warm integer solve scans around
+    /// the previous optimum before the (pruned) exactness sweep.
+    pub warm_window: u64,
 }
 
 impl Default for SolveOptions {
@@ -22,6 +28,7 @@ impl Default for SolveOptions {
             b_max: 100.0,
             tol: 1e-4,
             grid: 32,
+            warm_window: 8,
         }
     }
 }
@@ -81,10 +88,22 @@ pub(crate) fn golden_min<F: Fn(f64) -> f64>(
 /// non-unimodality the paper's Lemma-2 proof glosses over (the τ_m max
 /// makes T piecewise, so R·T can have shallow secondary dips).
 pub(crate) fn line_min<F: Fn(f64) -> f64>(f: &F, lo: f64, hi: f64, tol: f64) -> (f64, f64) {
-    const SCAN: usize = 64;
+    line_min_scanned(f, lo, hi, tol, 64)
+}
+
+/// [`line_min`] with a configurable scan density — the warm path uses a
+/// sparse scan over a shrunken bracket.
+pub(crate) fn line_min_scanned<F: Fn(f64) -> f64>(
+    f: &F,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+    scan: usize,
+) -> (f64, f64) {
+    let scan = scan.max(2);
     let ratio = (hi / lo).max(1.0 + 1e-12);
-    let xs: Vec<f64> = (0..SCAN)
-        .map(|i| lo * ratio.powf(i as f64 / (SCAN - 1) as f64))
+    let xs: Vec<f64> = (0..scan)
+        .map(|i| lo * ratio.powf(i as f64 / (scan - 1) as f64))
         .collect();
     let mut best_i = 0;
     let mut best_v = f64::INFINITY;
@@ -96,7 +115,7 @@ pub(crate) fn line_min<F: Fn(f64) -> f64>(f: &F, lo: f64, hi: f64, tol: f64) -> 
         }
     }
     let blo = xs[best_i.saturating_sub(1)];
-    let bhi = xs[(best_i + 1).min(SCAN - 1)];
+    let bhi = xs[(best_i + 1).min(scan - 1)];
     let (x, v) = golden_min(f, blo, bhi, tol);
     if v <= best_v {
         (x, v)
@@ -153,43 +172,229 @@ pub fn solve_continuous(inst: &DelayInstance, opts: &SolveOptions) -> Solution {
     }
 }
 
-/// Exhaustive integer solve under the protocol-real objective
-/// `⌈R(a,b,ε)⌉ · T(a,b)` (see `delay` module docs for why the ceiling is
-/// what makes the Fig. 2 ε-sweep meaningful).
-pub fn solve_integer(inst: &DelayInstance, opts: &SolveOptions) -> IntSolution {
-    let a_max = opts.a_max as u64;
-    let b_max = opts.b_max as u64;
+/// Shared core of the exact integer solvers: a canonical-order scan with
+/// exactness-preserving pruning, optionally preceded by a warm
+/// neighborhood pass around a previous optimum.
+///
+/// Pruning rests on `J(a,b) = ⌈R⌉·T ≥ T ≥ b·τ_max(a) + w ≥ τ_max(a)`,
+/// with `τ_max` nondecreasing in `a`:
+///
+/// * inner loop: once `b·τ_max(a) ≥ best`, no larger `b` can win;
+/// * outer loop: once `τ_max(a) ≥ best`, no larger `a` can win.
+///
+/// Both bounds only skip cells provably no better than the incumbent and
+/// the incumbent updates on strict improvement, so the returned optimum
+/// is the global one regardless of the warm seed — warm starting changes
+/// how much gets pruned, never the answer (up to exact f64 objective
+/// ties, where the warm pass may return a different cell of equal value).
+pub(crate) fn integer_scan<J, T>(
+    j: J,
+    tau_max: T,
+    a_max: u64,
+    b_max: u64,
+    warm: Option<(u64, u64, u64)>,
+) -> (u64, u64, f64)
+where
+    J: Fn(u64, u64) -> f64,
+    T: Fn(u64) -> f64,
+{
+    // Memberless instance (a fully-churned world): T ≡ 0, so J ≡ 0 and
+    // every cell ties. Return the canonical corner so warm and cold
+    // trajectories agree.
+    let corner = j(1, 1);
+    if corner <= 0.0 {
+        return (1, 1, corner);
+    }
     let (mut best_a, mut best_b, mut best_j) = (1u64, 1u64, f64::INFINITY);
+    if let Some((a0, b0, w)) = warm {
+        let (a_lo, a_hi) = (a0.saturating_sub(w).max(1), (a0 + w).min(a_max));
+        let (b_lo, b_hi) = (b0.saturating_sub(w).max(1), (b0 + w).min(b_max));
+        for a in a_lo..=a_hi {
+            let tm = tau_max(a);
+            for b in b_lo..=b_hi {
+                if (b as f64) * tm >= best_j {
+                    break;
+                }
+                let v = j(a, b);
+                if v < best_j {
+                    (best_a, best_b, best_j) = (a, b, v);
+                }
+            }
+        }
+    }
     for a in 1..=a_max {
-        // T(a,b) = max_m (b τ_m + w_m) is affine-increasing in b and
-        // ⌈R⌉ is non-increasing in b, so scan b with early exit: once
-        // b τ_min exceeds the incumbent objective no larger b can win.
-        let taus = inst.taus(a as f64);
-        let min_tau = taus.iter().cloned().fold(f64::INFINITY, f64::min);
+        let tm = tau_max(a);
+        if tm >= best_j {
+            break;
+        }
         for b in 1..=b_max {
-            if (b as f64) * min_tau >= best_j {
+            if (b as f64) * tm >= best_j {
                 break;
             }
-            let v = inst.total_time_int(a as f64, b as f64);
+            let v = j(a, b);
             if v < best_j {
                 (best_a, best_b, best_j) = (a, b, v);
             }
         }
     }
+    (best_a, best_b, best_j)
+}
+
+fn int_solution(inst: &DelayInstance, a: u64, b: u64, objective: f64) -> IntSolution {
     IntSolution {
-        a: best_a,
-        b: best_b,
-        objective: best_j,
+        a,
+        b,
+        objective,
         rounds: crate::delay::cloud_rounds_int(
-            best_a as f64,
-            best_b as f64,
+            a as f64,
+            b as f64,
             inst.eps,
             inst.c_const,
             inst.gamma,
             inst.zeta,
         ),
-        round_time: inst.round_time(best_a as f64, best_b as f64),
+        round_time: inst.round_time(a as f64, b as f64),
     }
+}
+
+/// Exhaustive integer solve under the protocol-real objective
+/// `⌈R(a,b,ε)⌉ · T(a,b)` (see `delay` module docs for why the ceiling is
+/// what makes the Fig. 2 ε-sweep meaningful).
+pub fn solve_integer(inst: &DelayInstance, opts: &SolveOptions) -> IntSolution {
+    let (a, b, objective) = integer_scan(
+        |a, b| inst.total_time_int(a as f64, b as f64),
+        |a| inst.tau_max(a as f64),
+        (opts.a_max as u64).max(1),
+        (opts.b_max as u64).max(1),
+        None,
+    );
+    int_solution(inst, a, b, objective)
+}
+
+/// Warm-started exact integer solve: a bounded neighborhood scan around
+/// the previous epoch's optimum seeds the incumbent, then the pruned
+/// exactness sweep confirms (or escapes) it. Guaranteed to return the
+/// same optimum as [`solve_integer`] — warm starting is a pure speedup.
+pub fn solve_integer_warm(
+    inst: &DelayInstance,
+    opts: &SolveOptions,
+    prev: &IntSolution,
+) -> IntSolution {
+    let a_max = (opts.a_max as u64).max(1);
+    let b_max = (opts.b_max as u64).max(1);
+    let (a, b, objective) = integer_scan(
+        |a, b| inst.total_time_int(a as f64, b as f64),
+        |a| inst.tau_max(a as f64),
+        a_max,
+        b_max,
+        Some((
+            prev.a.clamp(1, a_max),
+            prev.b.clamp(1, b_max),
+            opts.warm_window.max(1),
+        )),
+    );
+    int_solution(inst, a, b, objective)
+}
+
+/// Exact integer solve over a [`MaintainedInstance`]: evaluates the
+/// objective through the cached per-edge Pareto frontiers (bitwise equal
+/// to the full-scan objective) and optionally warm-starts from the
+/// previous epoch's `(a*, b*)`. This is the scenario engine's per-epoch
+/// re-solve path.
+pub fn solve_integer_maintained(
+    maintained: &mut MaintainedInstance,
+    opts: &SolveOptions,
+    warm: Option<(u64, u64)>,
+) -> IntSolution {
+    maintained.refresh();
+    let m: &MaintainedInstance = maintained;
+    let a_max = (opts.a_max as u64).max(1);
+    let b_max = (opts.b_max as u64).max(1);
+    let (a, b, objective) = integer_scan(
+        |a, b| m.total_time_int(a as f64, b as f64),
+        |a| m.tau_max(a as f64),
+        a_max,
+        b_max,
+        warm.map(|(a0, b0)| (a0.clamp(1, a_max), b0.clamp(1, b_max), opts.warm_window.max(1))),
+    );
+    int_solution(m.instance(), a, b, objective)
+}
+
+/// Warm-started continuous solve with a cold-fallback check; see
+/// [`solve_warm`]. Returns the solution and whether the cold grid solve
+/// ran (the "warm objective regressed" fallback).
+pub fn solve_warm_checked(
+    inst: &DelayInstance,
+    opts: &SolveOptions,
+    prev: &Solution,
+) -> (Solution, bool) {
+    let j = |a: f64, b: f64| inst.total_time(a, b);
+    // Coordinate descent seeded at the previous optimum, with shrunken
+    // log-brackets and a sparse scan (the optimum of a drifted world is
+    // close, so a wide bracket and dense scan are wasted work).
+    const BRACKET: f64 = 4.0;
+    const SCAN: usize = 16;
+    let (mut a, mut b) = (prev.a.clamp(1.0, opts.a_max), prev.b.clamp(1.0, opts.b_max));
+    let mut obj = j(a, b);
+    for _ in 0..32 {
+        let (na, _) = line_min_scanned(
+            &|x| j(x, b),
+            (a / BRACKET).max(1.0),
+            (a * BRACKET).min(opts.a_max),
+            opts.tol,
+            SCAN,
+        );
+        let (nb, nv) = line_min_scanned(
+            &|x| j(na, x),
+            (b / BRACKET).max(1.0),
+            (b * BRACKET).min(opts.b_max),
+            opts.tol,
+            SCAN,
+        );
+        let improved = obj - nv;
+        if nv < obj {
+            (a, b, obj) = (na, nb, nv);
+        }
+        if improved < 1e-10 {
+            break;
+        }
+    }
+    // Drift detector: a sparse log-spaced probe grid. Any probe beating
+    // the warm optimum beyond round-off means the optimum jumped basins —
+    // regress to the cold grid solve.
+    let probes = (opts.grid / 4).max(4);
+    let gp = |i: usize, n: usize, hi: f64| {
+        let t = i as f64 / (n - 1) as f64;
+        (hi.ln() * t).exp()
+    };
+    for i in 0..probes {
+        for k in 0..probes {
+            if j(gp(i, probes, opts.a_max), gp(k, probes, opts.b_max)) < obj * (1.0 - 1e-9) {
+                return (solve_continuous(inst, opts), true);
+            }
+        }
+    }
+    (
+        Solution {
+            a,
+            b,
+            objective: obj,
+            rounds: crate::delay::cloud_rounds(a, b, inst.eps, inst.c_const, inst.gamma, inst.zeta),
+            round_time: inst.round_time(a, b),
+        },
+        false,
+    )
+}
+
+/// Warm-started continuous solve: coordinate descent seeded from the
+/// previous epoch's `(a*, b*)` with a shrunken bracket, falling back to
+/// the cold grid ([`solve_continuous`]) only when a sparse probe grid
+/// shows the warm objective regressed (the optimum left the local basin).
+/// Unlike the integer warm path this is tolerance-bounded, not exact: the
+/// sparse bracket may land within `opts.tol`/probe-grid resolution of the
+/// cold answer rather than on it.
+pub fn solve_warm(inst: &DelayInstance, opts: &SolveOptions, prev: &Solution) -> Solution {
+    solve_warm_checked(inst, opts, prev).0
 }
 
 #[cfg(test)]
@@ -282,6 +487,116 @@ mod tests {
         let tight = solve_integer(&synthetic(0.05), &opts);
         assert!(tight.objective > loose.objective);
         assert!(tight.rounds >= loose.rounds);
+    }
+
+    #[test]
+    fn warm_integer_tracks_cold_under_drift() {
+        // The warm path is exact by construction: over a drifting
+        // instance it must reproduce the cold optimum cell-for-cell.
+        let mut inst = synthetic(0.25);
+        let opts = SolveOptions::default();
+        let mut prev = solve_integer(&inst, &opts);
+        for step in 0..12usize {
+            let wobble = if step % 2 == 0 { 1.02 } else { 0.985 };
+            for e in &mut inst.per_edge {
+                for ue in &mut e.ue {
+                    ue.1 *= wobble;
+                }
+            }
+            let cold = solve_integer(&inst, &opts);
+            let warm = solve_integer_warm(&inst, &opts, &prev);
+            assert_eq!((warm.a, warm.b), (cold.a, cold.b), "step {step}");
+            assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+            prev = warm;
+        }
+    }
+
+    #[test]
+    fn warm_integer_escapes_a_bad_seed() {
+        // A garbage incumbent must not trap the warm solver: the
+        // exactness sweep recovers the global optimum.
+        let inst = synthetic(0.25);
+        let opts = SolveOptions::default();
+        let cold = solve_integer(&inst, &opts);
+        let junk = IntSolution {
+            a: 200,
+            b: 100,
+            objective: f64::INFINITY,
+            rounds: 1,
+            round_time: 0.0,
+        };
+        let warm = solve_integer_warm(&inst, &opts, &junk);
+        assert_eq!((warm.a, warm.b), (cold.a, cold.b));
+        assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+    }
+
+    #[test]
+    fn memberless_instance_solves_to_canonical_corner() {
+        // A fully-churned world has J ≡ 0; warm and cold must agree on
+        // the canonical (1, 1) so re-solve trajectories stay identical.
+        let inst = DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![],
+                backhaul_s: 4.0,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        let opts = SolveOptions::default();
+        let cold = solve_integer(&inst, &opts);
+        assert_eq!((cold.a, cold.b, cold.objective), (1, 1, 0.0));
+        let warm = solve_integer_warm(&inst, &opts, &cold);
+        assert_eq!((warm.a, warm.b, warm.objective), (1, 1, 0.0));
+        let seeded = solve_integer_warm(
+            &inst,
+            &opts,
+            &IntSolution {
+                a: 40,
+                b: 20,
+                objective: 0.0,
+                rounds: 1,
+                round_time: 0.0,
+            },
+        );
+        assert_eq!((seeded.a, seeded.b), (1, 1));
+    }
+
+    #[test]
+    fn warm_continuous_close_to_cold_and_falls_back() {
+        let mut inst = synthetic(0.25);
+        let opts = SolveOptions::default();
+        let mut prev = solve_continuous(&inst, &opts);
+        // Gentle drift: warm stays within a whisker of cold.
+        for _ in 0..6 {
+            for e in &mut inst.per_edge {
+                for ue in &mut e.ue {
+                    ue.1 *= 1.015;
+                }
+            }
+            let cold = solve_continuous(&inst, &opts);
+            let (warm, _fell_back) = solve_warm_checked(&inst, &opts, &prev);
+            assert!(
+                warm.objective <= cold.objective * (1.0 + 1e-6) + 1e-12,
+                "warm {} vs cold {}",
+                warm.objective,
+                cold.objective
+            );
+            prev = warm;
+        }
+        // A hopeless seed triggers the probe-grid fallback and still
+        // lands on (essentially) the cold answer.
+        let junk = Solution {
+            a: opts.a_max,
+            b: opts.b_max,
+            objective: f64::INFINITY,
+            rounds: 1.0,
+            round_time: 0.0,
+        };
+        let cold = solve_continuous(&inst, &opts);
+        let warm = solve_warm(&inst, &opts, &junk);
+        assert!(warm.objective <= cold.objective * (1.0 + 1e-6) + 1e-12);
     }
 
     #[test]

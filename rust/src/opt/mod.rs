@@ -14,9 +14,21 @@
 //! * [`lagrangian::SubgradientSolver`] — the paper's Algorithm 2: KKT
 //!   closed forms (31)/(32) for (a*, b*) inside a subgradient-projection
 //!   loop on the Lagrange dual variables (36)/(37).
+//!
+//! **Warm starts** (the scenario engine's per-epoch re-solve path): a
+//! slowly-drifting world keeps consecutive optima close, so
+//! [`exact::solve_integer_warm`] / [`exact::solve_integer_maintained`]
+//! seed the exact scan's incumbent from the previous `(a*, b*)` (a pure
+//! speedup — the pruned sweep still certifies global optimality), and
+//! [`exact::solve_warm`] seeds the continuous coordinate descent with a
+//! shrunken bracket, regressing to the cold grid when a probe grid shows
+//! the optimum jumped basins.
 
 pub mod exact;
 pub mod lagrangian;
 
-pub use exact::{solve_continuous, solve_integer, IntSolution, Solution, SolveOptions};
+pub use exact::{
+    solve_continuous, solve_integer, solve_integer_maintained, solve_integer_warm, solve_warm,
+    solve_warm_checked, IntSolution, Solution, SolveOptions,
+};
 pub use lagrangian::{SubgradientSolver, SubgradientTrace};

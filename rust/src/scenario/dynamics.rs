@@ -21,12 +21,17 @@
 //! instance seed, so runs are bit-for-bit reproducible regardless of how
 //! the batch runner schedules them.
 
-use super::spec::{OptimizerMode, ScenarioSpec};
+use std::time::Instant;
+
+use super::spec::{OptimizerMode, ResolveMode, ScenarioSpec};
 use crate::assoc::{self, Association, LatencyTable};
 use crate::config::AssocStrategy;
-use crate::delay::{self, cloud_rounds_int, DelayInstance, EdgeDelays};
+use crate::delay::{self, cloud_rounds_int, DelayInstance, EdgeDelays, MaintainedInstance};
 use crate::net::{Channel, Position, Topology};
-use crate::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
+use crate::opt::{
+    solve_continuous, solve_integer, solve_integer_maintained, solve_warm_checked, IntSolution,
+    Solution, SolveOptions, SubgradientSolver,
+};
 use crate::sim::{simulate, SimConfig};
 use crate::util::Rng;
 
@@ -72,6 +77,22 @@ pub struct ScenarioOutcome {
     pub ue_barrier_wait_s: f64,
     /// Cumulative edge idle time at the cloud barrier.
     pub edge_barrier_wait_s: f64,
+    /// Wall-clock spent in per-epoch (a, b) re-solves (instance
+    /// maintenance + solver), cumulative. Measured, so *not* part of the
+    /// bitwise-determinism contract.
+    pub resolve_time_s: f64,
+    /// (a, b) re-solves performed (epochs executed + the final solve that
+    /// discovers convergence).
+    pub resolves: u64,
+    /// Re-solves that ran the cold path: all of them under
+    /// `resolve = "cold"` or the subgradient optimizer (which has no warm
+    /// variant); under `"warm"` with the integer/continuous optimizers,
+    /// only the seedless first solve (plus any continuous-mode
+    /// basin-escape fallbacks).
+    pub cold_resolves: u64,
+    /// The (a, b) used by each executed epoch — the re-solve trajectory
+    /// the warm/cold cross-check compares.
+    pub ab_per_epoch: Vec<(u64, u64)>,
 }
 
 /// Random-waypoint state: one target + speed per UE.
@@ -272,9 +293,12 @@ fn associate_active(
     Ok(edge_of_global)
 }
 
-/// Build the delay instance for the current association (global-id
-/// member lists; inactive UEs excluded, empty edges contribute only their
-/// backhaul, matching the closed form).
+/// Build the delay instance for the current association from scratch
+/// (global-id member lists, ascending; inactive UEs excluded; memberless
+/// edges keep an empty member list and are excluded from `round_time` by
+/// the delay model). The epoch loop itself uses [`MaintainedInstance`]
+/// and only diffs per-epoch deltas; this builder remains for one-shot
+/// uses (the provisional-a bootstrap, tests).
 fn build_instance(
     topo: &Topology,
     channel: &Channel,
@@ -314,13 +338,37 @@ fn build_instance(
     }
 }
 
-/// Solve sub-problem I under the spec's optimizer mode (honoring fixed
-/// a/b overrides from the base scenario).
-fn solve_ab(spec: &ScenarioSpec, inst: &DelayInstance) -> (u64, u64) {
-    if let (Some(a), Some(b)) = (spec.base.train.a, spec.base.train.b) {
-        return (a.max(1), b.max(1));
+/// Fixed-iteration overrides from the base scenario, applied to a solver
+/// result. Shared by [`solve_ab`] and [`solve_ab_epoch`] so the warm and
+/// cold paths cannot drift apart on the override semantics (the
+/// bitwise-trajectory contract depends on them staying identical).
+fn apply_fixed_iters(spec: &ScenarioSpec, mut a: u64, mut b: u64) -> (u64, u64) {
+    if let Some(fixed_a) = spec.base.train.a {
+        a = fixed_a.max(1);
     }
-    let (mut a, mut b) = match spec.optimizer {
+    if let Some(fixed_b) = spec.base.train.b {
+        b = fixed_b.max(1);
+    }
+    (a, b)
+}
+
+/// Both iteration counts pinned by the spec (no solve needed at all)?
+fn fully_fixed_iters(spec: &ScenarioSpec) -> Option<(u64, u64)> {
+    match (spec.base.train.a, spec.base.train.b) {
+        (Some(a), Some(b)) => Some((a.max(1), b.max(1))),
+        _ => None,
+    }
+}
+
+/// One-shot cold solve of sub-problem I under the spec's optimizer mode
+/// (honoring fixed a/b overrides) — used for the provisional-a bootstrap
+/// and the `resolve = "cold"` baseline. The warm epoch loop goes through
+/// [`solve_ab_epoch`] instead.
+fn solve_ab(spec: &ScenarioSpec, inst: &DelayInstance) -> (u64, u64) {
+    if let Some(fixed) = fully_fixed_iters(spec) {
+        return fixed;
+    }
+    let (a, b) = match spec.optimizer {
         OptimizerMode::Integer => {
             let s = solve_integer(inst, &SolveOptions::default());
             (s.a, s.b)
@@ -334,13 +382,61 @@ fn solve_ab(spec: &ScenarioSpec, inst: &DelayInstance) -> (u64, u64) {
             (s.a.round().max(1.0) as u64, s.b.round().max(1.0) as u64)
         }
     };
-    if let Some(fixed_a) = spec.base.train.a {
-        a = fixed_a.max(1);
+    apply_fixed_iters(spec, a, b)
+}
+
+/// Per-epoch (a, b) re-solve over the maintained instance — the
+/// `resolve = "warm"` path (`"cold"` rebuilds from scratch and goes
+/// through [`solve_ab`] instead). Returns `(a, b, cold)` where `cold`
+/// marks an unseeded solve (the first epoch, or a continuous-mode
+/// basin-escape fallback). The integer warm path is exact, so warm and
+/// cold runs of the same scenario produce identical (a, b) trajectories.
+fn solve_ab_epoch(
+    spec: &ScenarioSpec,
+    maintained: &mut MaintainedInstance,
+    opts: &SolveOptions,
+    prev_int: &mut Option<IntSolution>,
+    prev_cont: &mut Option<Solution>,
+) -> (u64, u64, bool) {
+    if let Some((a, b)) = fully_fixed_iters(spec) {
+        return (a, b, false);
     }
-    if let Some(fixed_b) = spec.base.train.b {
-        b = fixed_b.max(1);
-    }
-    (a, b)
+    let warm_ok = spec.resolve == ResolveMode::Warm;
+    let (a, b, cold) = match spec.optimizer {
+        OptimizerMode::Integer => {
+            let seed = if warm_ok {
+                prev_int.as_ref().map(|s| (s.a, s.b))
+            } else {
+                None
+            };
+            let cold = seed.is_none();
+            let s = solve_integer_maintained(maintained, opts, seed);
+            let ab = (s.a, s.b);
+            *prev_int = Some(s);
+            (ab.0, ab.1, cold)
+        }
+        OptimizerMode::Continuous => {
+            let (s, cold) = match prev_cont.as_ref() {
+                Some(p) if warm_ok => solve_warm_checked(maintained.instance(), opts, p),
+                _ => (solve_continuous(maintained.instance(), opts), true),
+            };
+            let ab = (s.a.round().max(1.0) as u64, s.b.round().max(1.0) as u64);
+            *prev_cont = Some(s);
+            (ab.0, ab.1, cold)
+        }
+        // Algorithm 2 has no warm variant (the dual iteration is its own
+        // warm start); always a cold solve.
+        OptimizerMode::Subgradient => {
+            let s = SubgradientSolver::default().solve(maintained.instance());
+            (
+                s.a.round().max(1.0) as u64,
+                s.b.round().max(1.0) as u64,
+                true,
+            )
+        }
+    };
+    let (a, b) = apply_fixed_iters(spec, a, b);
+    (a, b, cold)
 }
 
 /// Run one scenario instance end to end. Pure function of
@@ -388,6 +484,10 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         events: 0,
         ue_barrier_wait_s: 0.0,
         edge_barrier_wait_s: 0.0,
+        resolve_time_s: 0.0,
+        resolves: 0,
+        cold_resolves: 0,
+        ab_per_epoch: Vec::new(),
     };
 
     let mut now = 0.0f64;
@@ -409,6 +509,10 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         let greedy_inst = build_instance(&topo, &channel, &greedy_edge_of, base.eps);
         provisional_a = solve_ab(spec, &greedy_inst).0 as f64;
     }
+    let opts = SolveOptions::default();
+    let mut maint: Option<MaintainedInstance> = None;
+    let mut prev_int: Option<IntSolution> = None;
+    let mut prev_cont: Option<Solution> = None;
     loop {
         // (1) Association for the current world.
         let edge_of = associate_active(
@@ -421,9 +525,38 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             &mut assoc_rng,
         )?;
 
-        // (2) Delay instance + iteration counts + remaining rounds.
-        let inst = build_instance(&topo, &channel, &edge_of, base.eps);
-        let (a, b) = solve_ab(spec, &inst);
+        // (2) Re-solve (a, b) for this epoch's world. Warm mode maintains
+        // the delay instance in place (dirty-row deltas + cached τ
+        // frontiers) and seeds the solver from the previous optimum; cold
+        // mode is the from-scratch baseline (full rebuild + unseeded
+        // solve — what every epoch cost before the incremental pipeline),
+        // kept bit-compatible so the two modes produce identical
+        // trajectories.
+        let t_resolve = Instant::now();
+        let mut cold_inst: Option<DelayInstance> = None;
+        let (a, b, cold) = if spec.resolve == ResolveMode::Cold {
+            let built = build_instance(&topo, &channel, &edge_of, base.eps);
+            let (a, b) = solve_ab(spec, &built);
+            cold_inst = Some(built);
+            (a, b, true)
+        } else {
+            if let Some(m) = maint.as_mut() {
+                m.sync(&topo, &channel, &edge_of);
+            } else {
+                maint = Some(MaintainedInstance::build(&topo, &channel, &edge_of, base.eps));
+            }
+            let m = maint.as_mut().expect("maintained instance initialized above");
+            solve_ab_epoch(spec, m, &opts, &mut prev_int, &mut prev_cont)
+        };
+        out.resolve_time_s += t_resolve.elapsed().as_secs_f64();
+        out.resolves += 1;
+        if cold {
+            out.cold_resolves += 1;
+        }
+        let inst: &DelayInstance = match cold_inst.as_ref() {
+            Some(built) => built,
+            None => maint.as_ref().expect("warm mode keeps it").instance(),
+        };
         let target = cloud_rounds_int(
             a as f64,
             b as f64,
@@ -451,6 +584,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         }
         prev_edge.clone_from(&edge_of);
         provisional_a = a as f64;
+        out.ab_per_epoch.push((a, b));
 
         // (3) Simulate this epoch's chunk of rounds.
         let chunk = spec.dynamics.chunk(target - out.rounds);
@@ -463,7 +597,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             seed: sim_rng.next_u64(),
             start_s: now,
         };
-        let res = simulate(&inst, &cfg);
+        let res = simulate(inst, &cfg);
         let dt = res.total_time_s - now;
         now = res.total_time_s;
 
@@ -477,7 +611,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         out.a = a;
         out.b = b;
         out.round_time_s = inst.round_time(a as f64, b as f64);
-        out.tau_max_s = inst.taus(a as f64).into_iter().fold(0.0, f64::max);
+        out.tau_max_s = inst.tau_max(a as f64);
 
         // A world without dynamics cannot change the accuracy target, so
         // convergence is decidable now — skip the redundant re-associate +

@@ -10,8 +10,10 @@
 //!   **dynamics** block;
 //! * [`dynamics`] — the epoch engine: random-waypoint mobility (position
 //!   updates → incremental channel recompute), Poisson churn, per-epoch
-//!   handover re-association and (a, b) re-solve, with the makespan
-//!   accruing bit-exactly across epochs through `sim/`;
+//!   handover re-association and an **incremental (a, b) re-solve** (the
+//!   delay instance is maintained in place across epochs and the solver
+//!   warm-starts from the previous optimum; `resolve = "warm" | "cold"`),
+//!   with the makespan accruing bit-exactly across epochs through `sim/`;
 //! * [`runner`] — a sharded work-stealing batch executor that runs
 //!   hundreds of instances concurrently with bit-for-bit shard-count
 //!   independence;
@@ -30,4 +32,4 @@ pub mod spec;
 pub use dynamics::{run_instance, ScenarioOutcome};
 pub use report::{record_batch, BatchReport, SummaryStat};
 pub use runner::{instance_seeds, run_batch, run_batch_with, shard_count, BatchResult};
-pub use spec::{BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, ScenarioSpec};
+pub use spec::{BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, ResolveMode, ScenarioSpec};

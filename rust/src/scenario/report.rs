@@ -88,6 +88,8 @@ pub struct BatchReport {
     pub dropped_uploads: SummaryStat,
     pub tau_max_s: SummaryStat,
     pub ue_barrier_wait_s: SummaryStat,
+    /// Per-instance cumulative (a, b) re-solve wall time (seconds).
+    pub resolve_time_s: SummaryStat,
 }
 
 fn column<F: Fn(&ScenarioOutcome) -> f64>(outcomes: &[ScenarioOutcome], f: F) -> SummaryStat {
@@ -115,6 +117,7 @@ impl BatchReport {
             dropped_uploads: column(outcomes, |o| o.dropped_uploads as f64),
             tau_max_s: column(outcomes, |o| o.tau_max_s),
             ue_barrier_wait_s: column(outcomes, |o| o.ue_barrier_wait_s),
+            resolve_time_s: column(outcomes, |o| o.resolve_time_s),
         }
     }
 
@@ -133,6 +136,7 @@ impl BatchReport {
             ("dropped_uploads", self.dropped_uploads.to_json()),
             ("tau_max_s", self.tau_max_s.to_json()),
             ("ue_barrier_wait_s", self.ue_barrier_wait_s.to_json()),
+            ("resolve_time_s", self.resolve_time_s.to_json()),
         ];
         if let Some(spec) = spec {
             fields.insert(0, ("spec", Json::str(&spec.summary())));
@@ -170,6 +174,7 @@ impl BatchReport {
         row("handovers", &self.handovers);
         row("dropped_uploads", &self.dropped_uploads);
         row("ue_wait_s", &self.ue_barrier_wait_s);
+        row("resolve_s", &self.resolve_time_s);
     }
 }
 
@@ -192,6 +197,9 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             "dropped_uploads",
             "events",
             "converged",
+            "resolve_time_s",
+            "resolves",
+            "cold_resolves",
         ],
     );
     for o in outcomes {
@@ -209,6 +217,9 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             o.dropped_uploads as f64,
             o.events as f64,
             if o.converged { 1.0 } else { 0.0 },
+            o.resolve_time_s,
+            o.resolves as f64,
+            o.cold_resolves as f64,
         ]);
     }
 }
@@ -237,6 +248,10 @@ mod tests {
             events: rounds * 10,
             ue_barrier_wait_s: 0.0,
             edge_barrier_wait_s: 0.0,
+            resolve_time_s: 0.0,
+            resolves: 1,
+            cold_resolves: 1,
+            ab_per_epoch: vec![(10, 3)],
         }
     }
 
@@ -252,6 +267,27 @@ mod tests {
         let empty = SummaryStat::from_samples(&[]);
         assert_eq!(empty.count, 0);
         assert_eq!(empty.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_stat_single_sample() {
+        // n = 1: no spread information — zero-width CI, all percentiles
+        // collapse onto the sample.
+        let s = SummaryStat::from_samples(&[2.5]);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95, (2.5, 2.5));
+        assert_eq!((s.p50, s.p90, s.p99), (2.5, 2.5, 2.5));
+        assert_eq!((s.min, s.max), (2.5, 2.5));
+    }
+
+    #[test]
+    fn summary_stat_accepts_unsorted_samples() {
+        let s = SummaryStat::from_samples(&[9.0, 1.0, 5.0]);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 9.0);
     }
 
     #[test]

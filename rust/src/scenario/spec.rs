@@ -59,6 +59,37 @@ impl OptimizerMode {
     }
 }
 
+/// Per-epoch (a, b) re-solve strategy for dynamic scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResolveMode {
+    /// Seed each epoch's solve from the previous epoch's optimum
+    /// (exactness-preserving for the integer solver, tolerance-bounded
+    /// for the continuous one). The default: dynamic worlds drift slowly,
+    /// so the incumbent prunes most of the search.
+    #[default]
+    Warm,
+    /// Solve every epoch from scratch — the pre-warm-start baseline the
+    /// `resolve_warm` bench compares against.
+    Cold,
+}
+
+impl ResolveMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "warm" | "incremental" => Ok(ResolveMode::Warm),
+            "cold" | "scratch" => Ok(ResolveMode::Cold),
+            other => Err(format!("unknown resolve mode '{other}' (warm|cold)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResolveMode::Warm => "warm",
+            ResolveMode::Cold => "cold",
+        }
+    }
+}
+
 /// Failure injection applied to every simulated epoch.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FailureSpec {
@@ -152,6 +183,8 @@ pub struct ScenarioSpec {
     /// (the batch *base* seed; instances derive their own).
     pub base: Scenario,
     pub optimizer: OptimizerMode,
+    /// Per-epoch (a, b) re-solve strategy (warm-started vs from-scratch).
+    pub resolve: ResolveMode,
     pub failure: FailureSpec,
     pub dynamics: DynamicsSpec,
     pub batch: BatchSpec,
@@ -191,6 +224,12 @@ impl ScenarioSpec {
 
     pub fn optimizer(mut self, mode: OptimizerMode) -> Self {
         self.optimizer = mode;
+        self
+    }
+
+    /// Per-epoch re-solve strategy (warm = seed from previous optimum).
+    pub fn resolve(mut self, mode: ResolveMode) -> Self {
+        self.resolve = mode;
         self
     }
 
@@ -303,6 +342,9 @@ impl ScenarioSpec {
         if let Some(s) = doc.str("optimizer", "mode") {
             self.optimizer = OptimizerMode::parse(s)?;
         }
+        if let Some(s) = doc.str("optimizer", "resolve") {
+            self.resolve = ResolveMode::parse(s)?;
+        }
         // [batch]
         if let Some(v) = doc.i64("batch", "instances") {
             self.batch.instances = v.max(1) as usize;
@@ -341,6 +383,9 @@ impl ScenarioSpec {
         }
         if let Some(s) = args.str("mode") {
             self.optimizer = OptimizerMode::parse(&s).map_err(CliError)?;
+        }
+        if let Some(s) = args.str("resolve") {
+            self.resolve = ResolveMode::parse(&s).map_err(CliError)?;
         }
         if let Some(v) = args.get::<usize>("instances")? {
             self.batch.instances = v.max(1);
@@ -412,12 +457,13 @@ impl ScenarioSpec {
             "static".to_string()
         };
         format!(
-            "{} edges, {} UEs, eps={}, assoc={}, opt={}, jitter={}, dropout={}, {}",
+            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, jitter={}, dropout={}, {}",
             self.base.num_edges,
             self.base.num_ues,
             self.base.eps,
             self.base.assoc.name(),
             self.optimizer.name(),
+            self.resolve.name(),
             self.failure.jitter_sigma,
             self.failure.dropout_prob,
             dynamics
@@ -442,6 +488,7 @@ mod tests {
             .seed(9)
             .assoc(AssocStrategy::Greedy)
             .optimizer(OptimizerMode::Subgradient)
+            .resolve(ResolveMode::Cold)
             .jitter(0.2)
             .dropout(0.05)
             .mobility(1.0, 3.0)
@@ -454,6 +501,7 @@ mod tests {
         assert_eq!(spec.base.num_ues, 60);
         assert_eq!(spec.base.assoc, AssocStrategy::Greedy);
         assert_eq!(spec.optimizer, OptimizerMode::Subgradient);
+        assert_eq!(spec.resolve, ResolveMode::Cold);
         assert_eq!(spec.failure.jitter_sigma, 0.2);
         assert_eq!(spec.dynamics.speed_mps, (1.0, 3.0));
         assert_eq!(spec.dynamics.epoch_rounds, Some(2));
@@ -482,6 +530,7 @@ arrival_rate = 1.5
 departure_prob = 0.05
 [optimizer]
 mode = "subgradient"
+resolve = "cold"
 [batch]
 instances = 64
 shards = 8
@@ -496,6 +545,7 @@ shards = 8
         assert_eq!(spec.dynamics.speed_mps, (0.5, 2.5));
         assert_eq!(spec.dynamics.arrival_rate, 1.5);
         assert_eq!(spec.optimizer, OptimizerMode::Subgradient);
+        assert_eq!(spec.resolve, ResolveMode::Cold);
         assert_eq!(spec.batch.instances, 64);
         assert_eq!(spec.batch.shards, 8);
         assert!(spec.dynamics.any_dynamics());
@@ -572,5 +622,18 @@ shards = 8
             OptimizerMode::Integer
         );
         assert!(OptimizerMode::parse("magic").is_err());
+    }
+
+    #[test]
+    fn resolve_mode_parse_and_default() {
+        assert_eq!(ResolveMode::default(), ResolveMode::Warm);
+        assert_eq!(ResolveMode::parse("warm").unwrap(), ResolveMode::Warm);
+        assert_eq!(ResolveMode::parse("cold").unwrap(), ResolveMode::Cold);
+        assert!(ResolveMode::parse("lukewarm").is_err());
+        // CLI override path.
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args("scenario --resolve cold")).unwrap();
+        assert_eq!(spec.resolve, ResolveMode::Cold);
+        assert!(spec.summary().contains("resolve=cold"));
     }
 }

@@ -138,6 +138,13 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
         }
     };
 
+    // Edges without members do not take part in a round at all: nothing
+    // to aggregate, nothing to upload (matching `DelayInstance::round_time`,
+    // which excludes memberless edges from T(a,b)). Edges whose members
+    // all *drop out* in a given round still forward their stale aggregate
+    // — that is the partial-participation path below, not this one.
+    let participating = inst.per_edge.iter().filter(|e| !e.ue.is_empty()).count();
+
     let mut now = cfg.start_s;
     for _round in 0..rounds {
         let mut heap: BinaryHeap<Reverse<(OrdF64, Event)>> = BinaryHeap::new();
@@ -146,11 +153,14 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
         let mut edge_round: Vec<u64> = vec![0; m_edges]; // current k
         let mut pending: Vec<usize> = vec![0; m_edges]; // uploads still awaited
         let mut first_arrival: Vec<f64> = vec![f64::INFINITY; m_edges];
-        let mut edges_pending = m_edges;
-        let mut edge_done_at: Vec<f64> = vec![0.0; m_edges];
+        let mut edges_pending = participating;
+        let mut edge_done_at: Vec<f64> = vec![f64::NAN; m_edges];
 
-        // Kick off edge round 0 at `now` for every edge.
+        // Kick off edge round 0 at `now` for every participating edge.
         for (m, e) in inst.per_edge.iter().enumerate() {
+            if e.ue.is_empty() {
+                continue;
+            }
             let mut live = 0;
             for (slot, &(cmp, com)) in e.ue.iter().enumerate() {
                 if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
@@ -169,8 +179,8 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
                 )));
             }
             pending[m] = live;
-            // Edge with zero live members (all dropped / no members):
-            // proceeds through its b rounds instantly.
+            // Every member dropped out this round: the edge skips its b
+            // edge rounds and forwards the stale aggregate.
             if live == 0 {
                 let t = now + dur(e.backhaul_s, &mut rng);
                 heap.push(Reverse((OrdF64(t), Event::EdgeUploadDone { edge: m })));
@@ -237,9 +247,12 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
                 }
             }
         }
-        // Cloud barrier wait accounting.
+        // Cloud barrier wait accounting (participating edges only; the
+        // excluded ones kept their NaN sentinel).
         for &done in &edge_done_at {
-            result.edge_barrier_wait_s += cloud_round_end - done;
+            if done.is_finite() {
+                result.edge_barrier_wait_s += cloud_round_end - done;
+            }
         }
         now = cloud_round_end;
         result.round_end_s.push(now);
@@ -349,6 +362,51 @@ mod tests {
             .map(|e| e.backhaul_s)
             .fold(0.0, f64::max);
         assert!((res.total_time_s - res.rounds as f64 * expect_round).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memberless_edge_does_not_gate_the_round() {
+        // Regression: a churn-emptied edge used to inject its backhaul
+        // into every cloud round (here 9 s/round vs the live edge's
+        // ~1.06 s), in both the simulator and the closed form.
+        let i = DelayInstance {
+            per_edge: vec![
+                EdgeDelays {
+                    ue: vec![(0.005, 0.3)],
+                    backhaul_s: 0.01,
+                },
+                EdgeDelays {
+                    ue: vec![],
+                    backhaul_s: 9.0,
+                },
+            ],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        let res = simulate(&i, &SimConfig::deterministic(10, 3));
+        let expect = res.rounds as f64 * i.round_time(10.0, 3.0);
+        assert!((res.total_time_s - expect).abs() < 1e-9);
+        assert!(
+            res.total_time_s < 5.0,
+            "empty edge's 9s backhaul leaked into the makespan: {}",
+            res.total_time_s
+        );
+        // A fully-drained instance terminates with zero-time rounds.
+        let ghost = DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![],
+                backhaul_s: 3.0,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        let res = simulate(&ghost, &SimConfig::deterministic(5, 2));
+        assert_eq!(res.total_time_s, 0.0);
+        assert_eq!(res.events, 0);
     }
 
     #[test]

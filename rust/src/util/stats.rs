@@ -59,11 +59,14 @@ impl OnlineStats {
     }
 }
 
-/// Percentile of a sample (linear interpolation); `q` in [0, 100].
+/// Percentile of a sample (linear interpolation); `q` is clamped to
+/// [0, 100] (out-of-range ranks used to index out of bounds). Input may
+/// be unsorted; NaN samples sort last (total_cmp) instead of panicking.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
+    let q = q.clamp(0.0, 100.0);
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -121,5 +124,51 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_q() {
+        // q beyond [0, 100] used to compute an out-of-bounds rank.
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, 150.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_and_unsorted() {
+        assert_eq!(percentile(&[5.0], 0.0), 5.0);
+        assert_eq!(percentile(&[5.0], 73.0), 5.0);
+        assert_eq!(percentile(&[5.0], 100.0), 5.0);
+        // Unsorted input is sorted internally.
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 50.0), 5.0);
+        assert!((percentile(&[40.0, 10.0, 20.0, 30.0], 25.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nan_sorts_last_without_panicking() {
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn online_stats_small_n() {
+        let mut s = OnlineStats::new();
+        // n = 0: no spread, no samples.
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        // n = 1: mean is the sample, variance still undefined → 0.
+        s.push(4.5);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.mean(), 4.5);
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!((s.min(), s.max()), (4.5, 4.5));
+        // n = 2: Bessel-corrected variance kicks in.
+        s.push(6.5);
+        assert!((s.variance() - 2.0).abs() < 1e-12);
+        assert_eq!(std(&[4.5]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
     }
 }

@@ -7,7 +7,9 @@ use hfl::config::AssocStrategy;
 use hfl::delay::DelayInstance;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_integer, SolveOptions};
-use hfl::scenario::{run_batch, run_instance, BatchReport, ScenarioOutcome, ScenarioSpec};
+use hfl::scenario::{
+    run_batch, run_instance, BatchReport, ResolveMode, ScenarioOutcome, ScenarioSpec,
+};
 use hfl::util::proptest::check;
 
 fn rel_close(a: f64, b: f64, tol: f64) -> bool {
@@ -142,6 +144,11 @@ fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
             x.edge_barrier_wait_s.to_bits(),
             y.edge_barrier_wait_s.to_bits()
         );
+        // Re-solve bookkeeping is deterministic too — all but the
+        // measured wall time (resolve_time_s).
+        assert_eq!(x.ab_per_epoch, y.ab_per_epoch);
+        assert_eq!(x.resolves, y.resolves);
+        assert_eq!(x.cold_resolves, y.cold_resolves);
     }
 }
 
@@ -176,9 +183,10 @@ fn dynamic_instance_is_deterministic_and_does_dynamics() {
 }
 
 #[test]
-fn total_departure_drains_to_backhaul_only_rounds() {
+fn total_departure_drains_to_zero_time_rounds() {
     // Every UE leaves after the first epoch and nobody returns: the run
-    // must still converge (backhaul-only rounds), not hang or crash.
+    // must still converge, and the memberless rounds take no time (the
+    // emptied edges have nothing to aggregate or upload).
     let spec = ScenarioSpec::new()
         .edges(2)
         .ues(10)
@@ -189,8 +197,64 @@ fn total_departure_drains_to_backhaul_only_rounds() {
         .max_epochs(200);
     let out = run_instance(&spec, 21).unwrap();
     assert_eq!(out.departures, 10);
-    assert!(out.converged, "backhaul-only protocol still terminates");
+    assert!(out.converged, "drained protocol still terminates");
     assert!(out.makespan_s.is_finite());
+}
+
+#[test]
+fn emptied_edges_stop_contributing_backhaul() {
+    // Regression for the post-churn delay-model bug: an edge emptied by
+    // departures kept injecting `b·0 + backhaul_s` into T(a,b). Here the
+    // whole fleet departs after epoch 1, so the fixed makespan is exactly
+    // the single live round; pre-fix every remaining round added the max
+    // backhaul, inflating the makespan ~rounds-fold.
+    let spec = ScenarioSpec::new()
+        .edges(2)
+        .ues(10)
+        .eps(0.25)
+        .seed(5)
+        .assoc(AssocStrategy::Greedy)
+        .churn(0.0, 1.0)
+        .epoch_rounds(1)
+        .max_epochs(200);
+    let out = run_instance(&spec, 21).unwrap();
+    assert_eq!(out.departures, 10);
+    assert!(out.converged);
+    // Reference: epoch 1's world (everyone active) solved independently.
+    let topo = Topology::sample(&spec.base.system, 2, 10, 21);
+    let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let assoc = assoc::greedy(&channel, spec.base.system.edge_capacity()).unwrap();
+    let inst = DelayInstance::build(&topo, &channel, &assoc, 0.25);
+    let sol = solve_integer(&inst, &SolveOptions::default());
+    let first_epoch_s = inst.round_time(sol.a as f64, sol.b as f64);
+    assert!(
+        rel_close(out.makespan_s, first_epoch_s, 1e-9),
+        "makespan {} vs the one live round {first_epoch_s}",
+        out.makespan_s
+    );
+}
+
+#[test]
+fn warm_resolve_reproduces_cold_trajectory() {
+    // The acceptance cross-check: on a mobility+churn batch the warm
+    // re-solve path must produce the same per-epoch (a*, b*) trajectory
+    // and bitwise-identical makespans as solving cold every epoch (the
+    // integer warm path is exactness-preserving by construction).
+    for seed in [7u64, 21, 99] {
+        let warm = run_instance(&dynamic_spec().resolve(ResolveMode::Warm), seed).unwrap();
+        let cold = run_instance(&dynamic_spec().resolve(ResolveMode::Cold), seed).unwrap();
+        assert_eq!(warm.ab_per_epoch, cold.ab_per_epoch, "seed {seed}");
+        assert_eq!(warm.makespan_s.to_bits(), cold.makespan_s.to_bits());
+        assert_eq!(warm.closed_form_s.to_bits(), cold.closed_form_s.to_bits());
+        assert_eq!(warm.rounds, cold.rounds);
+        assert_eq!(warm.epochs, cold.epochs);
+        assert_eq!(warm.handovers, cold.handovers);
+        // Warm mode only pays one seedless cold solve; cold mode pays one
+        // per re-solve.
+        assert!(warm.resolves > 1, "dynamic run must re-solve repeatedly");
+        assert_eq!(warm.cold_resolves, 1);
+        assert_eq!(cold.cold_resolves, cold.resolves);
+    }
 }
 
 #[test]
