@@ -13,10 +13,15 @@
 //! association objective, evaluated at each strategy's own solved a*
 //! (the seed version fixed a common provisional a; see EXPERIMENTS.md
 //! §Fig5 for the comparison note). Writes results/fig5_association.csv.
+//!
+//! Part 2 re-runs a small mobility+churn batch under both
+//! `assoc_resolve` modes (warm incremental engine vs cold per-epoch
+//! policy runs) and prints the agreement check, so the example doubles
+//! as a manual warm==cold verification tool.
 
 use hfl::config::{Args, AssocStrategy};
 use hfl::metrics::Recorder;
-use hfl::scenario::{run_batch, ScenarioSpec};
+use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
@@ -64,5 +69,55 @@ fn main() -> anyhow::Result<()> {
     ));
     rec.write_dir(std::path::Path::new("results"))?;
     println!("\nwrote results/fig5_association.csv");
+
+    // Part 2 — assoc_resolve agreement: the incremental engine must hand
+    // the epoch loop maps bitwise-identical to cold policy re-runs.
+    println!("\nassoc_resolve warm/cold agreement (5 edges, mobility + churn, proposed):");
+    let dynamic = |mode: ResolveMode| {
+        ScenarioSpec::new()
+            .edges(5)
+            .ues(num_ues)
+            .eps(eps)
+            .seed(seed)
+            .mobility(0.5, 2.0)
+            .churn(1.0, 0.02)
+            .epoch_rounds(1)
+            .max_epochs(24)
+            .instances(trials)
+            .shards(1)
+            .assoc_resolve(mode)
+    };
+    let warm = run_batch(&dynamic(ResolveMode::Warm)).map_err(anyhow::Error::msg)?;
+    let cold = run_batch(&dynamic(ResolveMode::Cold)).map_err(anyhow::Error::msg)?;
+    let mut agree = true;
+    for (w, c) in warm.outcomes.iter().zip(&cold.outcomes) {
+        if w.ab_per_epoch != c.ab_per_epoch
+            || w.makespan_s.to_bits() != c.makespan_s.to_bits()
+            || w.handovers != c.handovers
+        {
+            agree = false;
+        }
+    }
+    let (mut wt, mut ct, mut wr, mut cr) = (0.0f64, 0.0f64, 0u64, 0u64);
+    for w in &warm.outcomes {
+        wt += w.assoc_time_s;
+        wr += w.reassociations;
+    }
+    for c in &cold.outcomes {
+        ct += c.assoc_time_s;
+        cr += c.reassociations;
+    }
+    println!(
+        "  warm: {:.3} ms assoc time, {wr} reprocessed UEs | cold: {:.3} ms, {cr}",
+        wt * 1e3,
+        ct * 1e3
+    );
+    println!(
+        "  (a,b) trajectories + makespans + handovers: {}",
+        if agree { "OK — warm == cold" } else { "MISMATCH" }
+    );
+    if !agree {
+        anyhow::bail!("assoc_resolve warm diverged from cold");
+    }
     Ok(())
 }

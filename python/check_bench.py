@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the BENCH_*.json baselines.
+
+Compares freshly regenerated BENCH files (written by the benches in full
+mode) against the committed baselines and fails on a >tolerance (default
+25%) regression of the warm-path *speedup ratios* ("speedup" rows) —
+the only metrics that are self-normalizing across heterogeneous CI
+runners (cold and warm are timed on the same machine in the same run).
+Raw wall-clock metrics such as instances_per_s are printed for context
+but never gate.
+
+Skips cleanly (exit 0) when a committed baseline is still a schema stub
+("generated": false) — the stub era's escape hatch: the first CI run on a
+real toolchain produces measured artifacts, and the gate starts biting
+once a measured baseline is committed. A fresh file that is *itself* a
+stub is an error: it means the real bench run did not happen.
+
+Usage:
+  python3 python/check_bench.py --baseline-dir .bench_baselines \
+      BENCH_resolve.json BENCH_assoc.json BENCH_scenario.json
+  python3 python/check_bench.py --self-test
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def norm_name(name: str) -> str:
+    """Normalize machine-dependent parts of a row name (the throughput
+    rows embed the runner's auto shard count)."""
+    return re.sub(r"\b\d+ shards", "auto shards", name)
+
+
+def metrics_of(doc: dict) -> dict[str, float]:
+    """Gated metrics of one BENCH document, keyed by row name.
+
+    Only the warm-path *speedup ratios* are gated: cold and warm are
+    measured on the same machine in the same run, so the ratio is
+    self-normalizing across heterogeneous CI runners. Raw wall-clock
+    metrics (instances_per_s, per-epoch times) vary with the runner's
+    hardware and neighbors and would make the gate flaky — they are
+    reported informationally instead.
+    """
+    out: dict[str, float] = {}
+    for row in doc.get("rows", []):
+        name = norm_name(row.get("name", ""))
+        if "speedup" in name and isinstance(row.get("value"), (int, float)):
+            out[name] = float(row["value"])
+    return out
+
+
+def info_metrics_of(doc: dict) -> dict[str, float]:
+    """Ungated, informational metrics (machine-dependent wall-clock)."""
+    out: dict[str, float] = {}
+    for row in doc.get("rows", []):
+        name = norm_name(row.get("name", ""))
+        if isinstance(row.get("instances_per_s"), (int, float)):
+            out[name] = float(row["instances_per_s"])
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes) for one baseline/fresh pair."""
+    notes: list[str] = []
+    name = fresh.get("bench") or baseline.get("bench") or "?"
+    if baseline.get("generated") is not True:
+        notes.append(f"{name}: baseline is a schema stub (generated != true) — skipped")
+        return [], notes
+    if fresh.get("generated") is not True:
+        return [f"{name}: fresh file is not a measured run (generated != true)"], notes
+    base_m = metrics_of(baseline)
+    fresh_m = metrics_of(fresh)
+    base_info = info_metrics_of(baseline)
+    for key, fresh_val in sorted(info_metrics_of(fresh).items()):
+        base_val = base_info.get(key)
+        base_txt = f"{base_val:.3f}" if base_val is not None else "n/a"
+        notes.append(f"{name}/{key}: baseline {base_txt} fresh {fresh_val:.3f} (info only)")
+    regressions: list[str] = []
+    for key, base_val in sorted(base_m.items()):
+        if base_val <= 0:
+            notes.append(f"{name}/{key}: baseline {base_val} not positive — skipped")
+            continue
+        if key not in fresh_m:
+            regressions.append(f"{name}/{key}: metric missing from fresh run")
+            continue
+        fresh_val = fresh_m[key]
+        floor = base_val * (1.0 - tolerance)
+        verdict = "ok" if fresh_val >= floor else "REGRESSION"
+        notes.append(
+            f"{name}/{key}: baseline {base_val:.3f} fresh {fresh_val:.3f} "
+            f"floor {floor:.3f} -> {verdict}"
+        )
+        if fresh_val < floor:
+            regressions.append(
+                f"{name}/{key}: {fresh_val:.3f} < {floor:.3f} "
+                f"(baseline {base_val:.3f}, tolerance {tolerance:.0%})"
+            )
+    return regressions, notes
+
+
+def self_test() -> int:
+    stub = {"bench": "x", "generated": False, "rows": [{"name": "s speedup", "value": None}]}
+    good = {"bench": "x", "generated": True, "rows": [{"name": "s speedup", "value": 10.0}]}
+    slow = {"bench": "x", "generated": True, "rows": [{"name": "s speedup", "value": 8.0}]}
+    bad = {"bench": "x", "generated": True, "rows": [{"name": "s speedup", "value": 2.0}]}
+    thr = {
+        "bench": "y",
+        "generated": True,
+        "rows": [{"name": "static", "instances_per_s": 100.0}],
+    }
+    thr_bad = {
+        "bench": "y",
+        "generated": True,
+        "rows": [{"name": "static", "instances_per_s": 10.0}],
+    }
+    assert metrics_of(good) == {"s speedup": 10.0}
+    assert metrics_of(thr) == {}  # raw throughput is not gated...
+    assert info_metrics_of(thr) == {"static": 100.0}  # ...only reported
+    assert compare(stub, good, 0.25)[0] == []  # stub baseline skips
+    assert compare(good, good, 0.25)[0] == []  # equal passes
+    assert compare(good, slow, 0.25)[0] == []  # within tolerance passes
+    assert compare(good, bad, 0.25)[0] != []  # 5x drop fails
+    assert compare(thr, thr_bad, 0.25)[0] == []  # runner-dependent: info only
+    assert compare(good, stub, 0.25)[0] != []  # fresh stub fails
+    nrm = norm_name("static 5x100, 64 inst, 4 shards (auto)")
+    assert nrm == "static 5x100, 64 inst, auto shards (auto)"
+    print("check_bench self-test: OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="*", help="freshly generated BENCH_*.json paths")
+    ap.add_argument("--baseline-dir", default=".bench_baselines")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.fresh:
+        print("no fresh BENCH files given; nothing to gate")
+        return 0
+
+    all_regressions: list[str] = []
+    for fresh_path in args.fresh:
+        base_path = os.path.join(args.baseline_dir, os.path.basename(fresh_path))
+        if not os.path.exists(fresh_path):
+            all_regressions.append(f"{fresh_path}: fresh file missing (bench did not run?)")
+            continue
+        if not os.path.exists(base_path):
+            print(f"{fresh_path}: no committed baseline at {base_path} — skipped")
+            continue
+        with open(base_path, encoding="utf-8") as f:
+            baseline = json.load(f)
+        with open(fresh_path, encoding="utf-8") as f:
+            fresh = json.load(f)
+        regressions, notes = compare(baseline, fresh, args.tolerance)
+        for note in notes:
+            print(note)
+        all_regressions.extend(regressions)
+
+    if all_regressions:
+        print("\nperf gate FAILED:")
+        for r in all_regressions:
+            print(f"  - {r}")
+        return 1
+    print("\nperf gate: green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

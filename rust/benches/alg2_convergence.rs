@@ -9,7 +9,7 @@ use hfl::delay::DelayInstance;
 use hfl::metrics::Series;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_continuous, SolveOptions, SubgradientSolver};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 
 fn instance(eps: f64, seed: u64) -> DelayInstance {
     let params = SystemParams::default();
@@ -32,7 +32,9 @@ fn main() {
     ]);
     let opts = SolveOptions::default();
     let solver = SubgradientSolver::default();
-    for seed in 0..10u64 {
+    // `-- --test`: CI smoke shape — fewer instances, same pipeline.
+    let seeds = if short_mode() { 3u64 } else { 10u64 };
+    for seed in 0..seeds {
         let inst = instance(0.25, 100 + seed);
         let exact = solve_continuous(&inst, &opts);
         let res = solver.solve(&inst);
@@ -62,7 +64,11 @@ fn main() {
     println!("  iter {:>4}: best J = {:.6} (final)", trace.len() - 1, trace.last().unwrap());
 
     section("solver latency");
-    let b = Bencher::default();
+    let b = if short_mode() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     b.run("Algorithm 2 (polish on)", || solver.solve(&inst));
     let raw = SubgradientSolver {
         polish: false,

@@ -1,0 +1,264 @@
+//! Incremental association: cold policy re-runs vs the maintained
+//! dirty-set engine, on the `configs/scenario_scale.toml` workload shape
+//! (100k UEs x 64 edges, churn-dominated dynamics).
+//!
+//!   cargo bench --bench assoc_incremental          # full workload
+//!   cargo bench --bench assoc_incremental -- --test  # CI smoke shape
+//!
+//! Three stages:
+//!
+//! * **engine**: scenario runs of a mobility+churn batch under
+//!   `assoc_resolve = "cold"` vs `"warm"` — asserts identical (a*, b*)
+//!   trajectories, bitwise-identical makespans and equal handovers
+//!   before any timing (the acceptance cross-check).
+//! * **maps**: one drifting scale world; every epoch the cold policy map
+//!   and the warm engine map are asserted bitwise-identical, then both
+//!   paths are timed. Cold re-scores and re-sorts all U·M links; warm
+//!   reprocesses only the epoch's dirty set.
+//! * Emits BENCH_JSON lines and (full mode only) rewrites
+//!   `BENCH_assoc.json` in the current directory — to refresh the
+//!   checked-in baseline run from the repo root:
+//!   `cargo bench --manifest-path rust/Cargo.toml --bench
+//!   assoc_incremental`. Acceptance target: warm >= 5x faster per epoch
+//!   on the scale workload.
+
+use std::time::Instant;
+
+use hfl::assoc::{cold_reference_map, MaintainedAssociation, WorldDelta};
+use hfl::config::{Args, AssocStrategy};
+use hfl::net::{Channel, Position, Topology};
+use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
+use hfl::util::bench::{section, short_mode};
+use hfl::util::json::Json;
+use hfl::util::Rng;
+
+/// The scenario_mobility.toml workload shrunk to bench size — every
+/// delta type fires (moved rows, arrivals, departures, handovers).
+fn mobility_spec(assoc_resolve: ResolveMode, short: bool) -> ScenarioSpec {
+    ScenarioSpec::new()
+        .edges(5)
+        .ues(100)
+        .eps(0.25)
+        .seed(42)
+        .mobility(0.5, 2.0)
+        .churn(1.0, 0.02)
+        .epoch_rounds(1)
+        .max_epochs(if short { 8 } else { 32 })
+        .instances(if short { 4 } else { 12 })
+        .shards(1)
+        .assoc_resolve(assoc_resolve)
+}
+
+/// Load the checked-in scale spec (repo root or rust/ cwd), falling back
+/// to an identical inline shape.
+fn scale_spec() -> ScenarioSpec {
+    for path in [
+        "configs/scenario_scale.toml",
+        "../configs/scenario_scale.toml",
+    ] {
+        if std::path::Path::new(path).exists() {
+            match ScenarioSpec::load(Some(path), &Args::default()) {
+                Ok(spec) => return spec,
+                Err(e) => println!("note: could not load {path}: {e}"),
+            }
+        }
+    }
+    let mut spec = ScenarioSpec::new()
+        .edges(64)
+        .ues(100_000)
+        .eps(0.25)
+        .seed(42)
+        .churn(200.0, 0.002)
+        .epoch_rounds(1)
+        .max_epochs(6);
+    spec.base.system.edge_bandwidth_hz = 2.0e9;
+    spec.base.system.ue_bandwidth_hz = 1.0e6;
+    spec
+}
+
+fn main() {
+    let short = short_mode();
+
+    section("engine: assoc_resolve warm vs cold, mobility + churn batch");
+    let cold_batch = run_batch(&mobility_spec(ResolveMode::Cold, short)).expect("cold batch");
+    let warm_batch = run_batch(&mobility_spec(ResolveMode::Warm, short)).expect("warm batch");
+    for (c, w) in cold_batch.outcomes.iter().zip(&warm_batch.outcomes) {
+        assert_eq!(c.ab_per_epoch, w.ab_per_epoch, "warm assoc diverged from cold");
+        assert_eq!(c.makespan_s.to_bits(), w.makespan_s.to_bits());
+        assert_eq!(c.handovers, w.handovers);
+    }
+    let engine_instances = cold_batch.outcomes.len();
+    println!("cross-check: warm == cold on all {engine_instances} instances");
+    let (mut cold_reassoc, mut warm_reassoc) = (0u64, 0u64);
+    for (c, w) in cold_batch.outcomes.iter().zip(&warm_batch.outcomes) {
+        cold_reassoc += c.reassociations;
+        warm_reassoc += w.reassociations;
+    }
+    println!("reprocessed UEs: cold {cold_reassoc}  warm {warm_reassoc}");
+
+    section("maps: cold policy re-run vs MaintainedAssociation sync, scale world");
+    let spec = scale_spec();
+    let (num_edges, num_ues) = if short {
+        (8usize, 2000usize)
+    } else {
+        (spec.base.num_edges, spec.base.num_ues)
+    };
+    let cap = spec.base.system.edge_capacity();
+    let seed = spec.base.seed;
+    let epochs = if short { 3 } else { spec.dynamics.max_epochs.min(6) };
+    let churn_per_epoch = if short {
+        20
+    } else {
+        spec.dynamics.arrival_rate.round() as usize
+    };
+    let moved_per_epoch = churn_per_epoch;
+    println!(
+        "world: {num_edges} edges x {num_ues} UEs, cap {cap}, {epochs} epochs, \
+         ~{churn_per_epoch} arrivals/departures + {moved_per_epoch} moved rows per epoch"
+    );
+
+    let mut topo = Topology::sample(&spec.base.system, num_edges, num_ues, seed);
+    let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let mut active = vec![true; num_ues];
+    let mut inactive_pool: Vec<usize> = Vec::new();
+    let area = topo.params.area_m;
+    let strategy = AssocStrategy::Proposed;
+    let a0 = 20.0;
+
+    let t0 = Instant::now();
+    let mut engine = MaintainedAssociation::new(
+        strategy,
+        &topo,
+        &channel,
+        &active,
+        cap,
+        spec.assoc_hysteresis,
+        a0,
+    )
+    .expect("engine build");
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("engine cold build: {build_ms:.1} ms");
+
+    let mut rng = Rng::new(seed ^ 0xA550_C0DE);
+    let mut cold_s = 0.0f64;
+    let mut warm_s = 0.0f64;
+    let rebuilds_before = engine.full_rebuilds;
+    for epoch in 0..epochs {
+        // Churn + a sprinkle of moved rows — the scale workload's drift.
+        let mut delta = WorldDelta::default();
+        for _ in 0..churn_per_epoch {
+            let ue = rng.below(num_ues as u64) as usize;
+            if active[ue] {
+                active[ue] = false;
+                inactive_pool.push(ue);
+                delta.departed.push(ue);
+            }
+        }
+        for _ in 0..churn_per_epoch.min(inactive_pool.len()) {
+            let slot = rng.below(inactive_pool.len() as u64) as usize;
+            let ue = inactive_pool.swap_remove(slot);
+            active[ue] = true;
+            topo.ues[ue].pos = Position {
+                x: rng.range(0.0, area),
+                y: rng.range(0.0, area),
+            };
+            channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+            delta.arrived.push(ue);
+        }
+        for _ in 0..moved_per_epoch {
+            let ue = rng.below(num_ues as u64) as usize;
+            if active[ue] {
+                topo.ues[ue].pos = Position {
+                    x: rng.range(0.0, area),
+                    y: rng.range(0.0, area),
+                };
+                channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+                delta.moved.push(ue);
+            }
+        }
+
+        let t_cold = Instant::now();
+        let cold = cold_reference_map(strategy, &topo, &channel, &active, cap, a0)
+            .expect("cold map");
+        cold_s += t_cold.elapsed().as_secs_f64();
+
+        let t_warm = Instant::now();
+        engine
+            .sync(&topo, &channel, &active, &delta, a0)
+            .expect("warm sync");
+        warm_s += t_warm.elapsed().as_secs_f64();
+
+        // The acceptance invariant, checked on every epoch.
+        assert_eq!(
+            engine.edge_of_global(),
+            cold,
+            "warm map diverged from cold at epoch {epoch}"
+        );
+    }
+    let fast_path_epochs = epochs as u64 - (engine.full_rebuilds - rebuilds_before);
+    let cold_ms = cold_s / epochs as f64 * 1e3;
+    let warm_ms = warm_s / epochs as f64 * 1e3;
+    let speedup = cold_ms / warm_ms;
+    println!(
+        "assoc re-solve: cold {cold_ms:.2} ms/epoch  warm {warm_ms:.3} ms/epoch  \
+         speedup {speedup:.1}x  ({fast_path_epochs}/{epochs} fast-path epochs)"
+    );
+    println!("BENCH_JSON {{\"name\":\"assoc cold\",\"per_epoch_ms\":{cold_ms:.3}}}");
+    println!("BENCH_JSON {{\"name\":\"assoc warm\",\"per_epoch_ms\":{warm_ms:.4}}}");
+    println!("BENCH_JSON {{\"name\":\"assoc warm speedup\",\"value\":{speedup:.2}}}");
+
+    if short {
+        println!("\nshort mode: BENCH_assoc.json left untouched");
+        return;
+    }
+    assert!(
+        speedup >= 5.0,
+        "acceptance: warm must be >= 5x faster per epoch on the scale workload, got {speedup:.2}x"
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::str("assoc_incremental")),
+        ("generated", Json::Bool(true)),
+        ("command", Json::str("cargo bench --bench assoc_incremental")),
+        (
+            "workload",
+            Json::str(&format!(
+                "configs/scenario_scale.toml shape: {num_edges} edges x {num_ues} UEs, \
+                 ~{churn_per_epoch} arrivals/departures + {moved_per_epoch} moved rows per \
+                 epoch, cap {cap}"
+            )),
+        ),
+        (
+            "rows",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("assoc cold")),
+                    ("per_epoch_ms", Json::num(cold_ms)),
+                    ("epochs", Json::num(epochs as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("assoc warm")),
+                    ("per_epoch_ms", Json::num(warm_ms)),
+                    ("epochs", Json::num(epochs as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("assoc warm speedup")),
+                    ("value", Json::num(speedup)),
+                    ("target", Json::num(5.0)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("warm fast-path epochs")),
+                    ("value", Json::num(fast_path_epochs as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("engine warm==cold instances")),
+                    ("value", Json::num(engine_instances as f64)),
+                ]),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_assoc.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

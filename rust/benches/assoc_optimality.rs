@@ -10,7 +10,7 @@
 use hfl::assoc::{self, proposed::refine_swaps, LatencyTable};
 use hfl::metrics::Series;
 use hfl::net::{Channel, SystemParams, Topology};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 
 fn world(edges: usize, ues: usize, seed: u64) -> (Channel, LatencyTable, usize) {
     let mut params = SystemParams::default();
@@ -36,7 +36,9 @@ fn main() {
         "refined_gap_pct",
     ]);
     let mut agree = 0;
-    for seed in 0..12u64 {
+    // `-- --test`: CI smoke shape — fewer seeds, same pipeline.
+    let seeds = if short_mode() { 4u64 } else { 12u64 };
+    for seed in 0..seeds {
         let (channel, table, cap) = world(3, 12, seed);
         let alg3 = assoc::time_minimized(&channel, cap).unwrap();
         let claims = assoc::time_minimized_claims(&channel, cap).unwrap();
@@ -65,7 +67,10 @@ fn main() {
         ]);
     }
     series.print("per-seed max latency (s) and gap vs exact optimum");
-    println!("exact methods agree on {agree}/12 seeds: {}", if agree == 12 { "PASS" } else { "FAIL" });
+    println!(
+        "exact methods agree on {agree}/{seeds} seeds: {}",
+        if agree == seeds { "PASS" } else { "FAIL" }
+    );
 
     section("scaling: exact matching stays sub-millisecond where B&B explodes");
     let bench = Bencher::quick();
@@ -75,7 +80,12 @@ fn main() {
             assoc::solve_exact_bnb(&table, cap, None).unwrap()
         });
     }
-    for (edges, ues) in [(5usize, 100usize), (10, 200), (10, 500)] {
+    let matching_shapes: &[(usize, usize)] = if short_mode() {
+        &[(5, 100)]
+    } else {
+        &[(5, 100), (10, 200), (10, 500)]
+    };
+    for &(edges, ues) in matching_shapes {
         let (_c, table, cap) = world(edges, ues, 3);
         bench.run(&format!("matching ({edges}x{ues})"), || {
             assoc::solve_exact_matching(&table, cap).unwrap()

@@ -11,7 +11,7 @@ use hfl::delay::DelayInstance;
 use hfl::metrics::Series;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_continuous, solve_integer, SolveOptions};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 
 fn instance(eps: f64, seed: u64) -> DelayInstance {
     let params = SystemParams::default();
@@ -25,7 +25,13 @@ fn main() {
     section("Fig. 2 — optimal iteration counts vs global accuracy ε (5 edges x 20 UEs)");
     let mut series = Series::new(&["eps", "a_star", "b_star", "a_x_b", "rounds", "total_s"]);
     let opts = SolveOptions::default();
-    for eps in [0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05] {
+    // `-- --test`: CI smoke shape — a sparser ε sweep, same shape checks.
+    let eps_sweep: &[f64] = if short_mode() {
+        &[0.5, 0.25, 0.05]
+    } else {
+        &[0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05]
+    };
+    for &eps in eps_sweep {
         let inst = instance(eps, 42);
         let sol = solve_integer(&inst, &opts);
         series.push(vec![
@@ -69,7 +75,11 @@ fn main() {
     );
 
     section("solver timing");
-    let b = Bencher::default();
+    let b = if short_mode() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     let inst = instance(0.25, 42);
     b.run("solve_integer (5 edges x 20 UEs)", || {
         solve_integer(&inst, &opts)

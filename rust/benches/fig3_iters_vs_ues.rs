@@ -8,7 +8,7 @@ use hfl::delay::DelayInstance;
 use hfl::metrics::Series;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_integer, SolveOptions};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 use hfl::util::stats;
 
 fn instance(ues_per_edge: usize, seed: u64) -> DelayInstance {
@@ -26,7 +26,13 @@ fn main() {
     let opts = SolveOptions::default();
     let mut a_vals = Vec::new();
     let mut b_vals = Vec::new();
-    for upe in [10usize, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+    // `-- --test`: CI smoke shape — a sparser sweep, same reporting.
+    let sweep: &[usize] = if short_mode() {
+        &[10, 50, 100]
+    } else {
+        &[10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    };
+    for &upe in sweep {
         let inst = instance(upe, 42 + upe as u64);
         let sol = solve_integer(&inst, &opts);
         a_vals.push(sol.a as f64);
@@ -56,7 +62,8 @@ fn main() {
 
     section("scaling: solver cost vs instance size");
     let b = Bencher::quick();
-    for upe in [10usize, 50, 100] {
+    let scaling: &[usize] = if short_mode() { &[10, 100] } else { &[10, 50, 100] };
+    for &upe in scaling {
         let inst = instance(upe, 7);
         b.run(&format!("solve_integer ({upe} UEs/edge)"), || {
             solve_integer(&inst, &opts)

@@ -10,17 +10,24 @@ use hfl::delay::DelayInstance;
 use hfl::metrics::Series;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_integer, SolveOptions};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 use hfl::util::Rng;
 
 fn main() {
     section("Fig. 5 — max latency of 100 UEs vs #edge servers (ε = 0.25, mean of 5 seeds)");
     let num_ues = 100;
-    let trials = 5u64;
+    // `-- --test`: CI smoke shape — fewer sweep points and trials.
+    let short = short_mode();
+    let trials = if short { 2u64 } else { 5u64 };
+    let edge_counts: &[usize] = if short {
+        &[6, 10, 16]
+    } else {
+        &[6, 7, 8, 9, 10, 12, 14, 16]
+    };
     let mut series = Series::new(&["edges", "proposed_s", "greedy_s", "random_s", "exact_s"]);
     let mut orderings_ok = 0;
     let mut points = 0;
-    for edges in [6usize, 7, 8, 9, 10, 12, 14, 16] {
+    for &edges in edge_counts {
         let (mut p, mut g, mut r, mut e) = (0.0, 0.0, 0.0, 0.0);
         for t in 0..trials {
             let params = SystemParams::default();
@@ -59,7 +66,11 @@ fn main() {
     let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
     let cap = params.edge_capacity();
     let table = LatencyTable::build(&topo, &channel, 20.0);
-    let bench = Bencher::default();
+    let bench = if short {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     bench.run("Algorithm 3 (proposed)", || {
         assoc::time_minimized(&channel, cap).unwrap()
     });

@@ -16,11 +16,16 @@ use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_integer, SolveOptions};
 use hfl::runtime::{find_artifacts, Engine};
 use hfl::sim::{simulate, SimConfig};
-use hfl::util::bench::{section, Bencher};
+use hfl::util::bench::{section, short_mode, Bencher};
 use hfl::util::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    // `-- --test`: CI smoke shape (tiny sample windows, same coverage).
+    let b = if short_mode() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
 
     section("L3: aggregation (Eq. (6)/(10)) — 20 UE models x 44426 params");
     let dim = 44426;

@@ -27,13 +27,15 @@ use hfl::delay::{DelayInstance, MaintainedInstance};
 use hfl::net::{Channel, Position, SystemParams, Topology};
 use hfl::opt::{solve_integer, solve_integer_maintained, SolveOptions};
 use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
-use hfl::util::bench::{black_box, section};
+use hfl::util::bench::{black_box, section, short_mode};
 use hfl::util::json::Json;
 use hfl::util::Rng;
 
 /// The configs/scenario_mobility.toml workload, shrunk to bench size and
-/// pinned to one shard so the timing is not scheduler-dependent.
+/// pinned to one shard so the timing is not scheduler-dependent. Short
+/// mode (`-- --test`) shrinks it further for the CI smoke job.
 fn mobility_spec(resolve: ResolveMode) -> ScenarioSpec {
+    let short = short_mode();
     ScenarioSpec::new()
         .edges(5)
         .ues(100)
@@ -44,8 +46,8 @@ fn mobility_spec(resolve: ResolveMode) -> ScenarioSpec {
         .jitter(0.1)
         .dropout(0.01)
         .epoch_rounds(1)
-        .max_epochs(64)
-        .instances(16)
+        .max_epochs(if short { 16 } else { 64 })
+        .instances(if short { 4 } else { 16 })
         .shards(1)
         .resolve(resolve)
 }
@@ -93,7 +95,7 @@ fn main() {
     println!("BENCH_JSON {{\"name\":\"engine resolve speedup\",\"value\":{engine_speedup:.3}}}");
 
     section("solver: rebuild+cold vs sync+warm over one drifting world");
-    let steps = 200usize;
+    let steps = if short_mode() { 50usize } else { 200usize };
     let topo0 = Topology::sample(&SystemParams::default(), 5, 100, 42);
     let edge_of_plain: Vec<usize> = (0..100).map(|i| i % 5).collect();
     let edge_of: Vec<Option<usize>> = edge_of_plain.iter().map(|&e| Some(e)).collect();
@@ -156,7 +158,12 @@ fn main() {
     );
     println!("BENCH_JSON {{\"name\":\"solver resolve speedup\",\"value\":{solver_speedup:.3}}}");
 
-    // Refresh the checked-in baseline (repo root relative).
+    // Refresh the checked-in baseline (repo root relative) — full runs
+    // only: short-mode numbers are not comparable to the committed rows.
+    if short_mode() {
+        println!("\nshort mode: BENCH_resolve.json left untouched");
+        return;
+    }
     let json = Json::obj(vec![
         ("bench", Json::str("resolve_warm")),
         ("generated", Json::Bool(true)),

@@ -9,7 +9,7 @@
 //! baseline).
 
 use hfl::scenario::{run_batch, shard_count, ScenarioSpec};
-use hfl::util::bench::section;
+use hfl::util::bench::{section, short_mode};
 use hfl::util::json::Json;
 
 struct Row {
@@ -50,20 +50,29 @@ fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
 }
 
 fn main() {
+    // `-- --test`: CI smoke shape — smaller batches, single repeat, no
+    // baseline rewrite (short numbers are not comparable).
+    let short = short_mode();
+    let (static_inst, dynamic_inst, repeats) = if short { (8, 4, 1) } else { (64, 32, 3) };
     let mut rows = Vec::new();
     let auto = shard_count(0);
 
     section("scenario runner: static batches (closed-form regime)");
-    let static_spec = ScenarioSpec::new().edges(5).ues(100).eps(0.25).seed(42).instances(64);
+    let static_spec = ScenarioSpec::new()
+        .edges(5)
+        .ues(100)
+        .eps(0.25)
+        .seed(42)
+        .instances(static_inst);
     rows.push(measure(
-        "static 5x100, 64 inst, 1 shard",
+        &format!("static 5x100, {static_inst} inst, 1 shard"),
         &static_spec.clone().shards(1),
-        3,
+        repeats,
     ));
     rows.push(measure(
-        &format!("static 5x100, 64 inst, {auto} shards (auto)"),
+        &format!("static 5x100, {static_inst} inst, {auto} shards (auto)"),
         &static_spec.clone().shards(0),
-        3,
+        repeats,
     ));
 
     section("scenario runner: mobility + churn + failures");
@@ -77,20 +86,24 @@ fn main() {
         .jitter(0.1)
         .dropout(0.01)
         .epoch_rounds(1)
-        .max_epochs(32)
-        .instances(32);
+        .max_epochs(if short { 8 } else { 32 })
+        .instances(dynamic_inst);
     rows.push(measure(
-        "dynamic 5x100, 32 inst, 1 shard",
+        &format!("dynamic 5x100, {dynamic_inst} inst, 1 shard"),
         &dynamic_spec.clone().shards(1),
-        3,
+        repeats,
     ));
     rows.push(measure(
-        &format!("dynamic 5x100, 32 inst, {auto} shards (auto)"),
+        &format!("dynamic 5x100, {dynamic_inst} inst, {auto} shards (auto)"),
         &dynamic_spec.clone().shards(0),
-        3,
+        repeats,
     ));
 
-    // Refresh the checked-in baseline (repo root relative).
+    // Refresh the checked-in baseline (repo root relative) — full only.
+    if short {
+        println!("\nshort mode: BENCH_scenario.json left untouched");
+        return;
+    }
     let json = Json::obj(vec![
         ("bench", Json::str("scenario_throughput")),
         ("generated", Json::Bool(true)),

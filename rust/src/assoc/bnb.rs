@@ -11,6 +11,13 @@
 //!   link latencies and test feasibility with a max-flow (Dinic) on the
 //!   bipartite UE→edge graph with per-edge capacity. Scales to thousands
 //!   of UEs; also cross-checks the B&B.
+//!
+//! Both solvers are reachable through the shared `AssocPolicy` trait as
+//! `incremental::{BnbPolicy, ExactMatchingPolicy}`: the policies build
+//! the active-subset latency table with the scoring core's expressions
+//! (bitwise-equal to [`LatencyTable::build`] slicing) and delegate here.
+//! Neither has an incremental form, so the warm engine re-runs them cold
+//! every epoch — warm == cold trivially.
 
 use super::{Association, LatencyTable};
 

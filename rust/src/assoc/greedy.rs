@@ -1,28 +1,25 @@
 //! Greedy baseline (paper §V-C): each edge server in turn takes the
 //! still-available UEs with maximum SNR, up to the bandwidth cap.
+//!
+//! Thin wrapper over [`GreedyPolicy`]'s cold path (per-edge rankings +
+//! the shared `edgewise_take` walk, same machinery the warm engine
+//! maintains incrementally). One deliberate behavior change vs the seed:
+//! exact SNR ties now break by lower UE id on *every* edge — the seed's
+//! stable re-sort of the shrinking `available` list made tie order
+//! path-dependent past edge 0.
 
+use super::incremental::{AssocCtx, AssocPolicy, GreedyPolicy};
 use super::Association;
 use crate::net::Channel;
 
 pub fn greedy(channel: &Channel, cap: usize) -> Result<Association, String> {
-    let (n_ues, n_edges) = (channel.num_ues, channel.num_edges);
-    if n_ues > n_edges * cap {
-        return Err(format!(
-            "infeasible: {n_ues} UEs > {n_edges} edges x capacity {cap}"
-        ));
-    }
-    let mut edge_of = vec![usize::MAX; n_ues];
-    let mut available: Vec<usize> = (0..n_ues).collect();
-    for m in 0..n_edges {
-        available.sort_by(|&a, &b| channel.snr_of(b, m).total_cmp(&channel.snr_of(a, m)));
-        let take = available.len().min(cap);
-        for &n in available.iter().take(take) {
-            edge_of[n] = m;
-        }
-        available.drain(..take);
-    }
-    debug_assert!(available.is_empty());
-    let assoc = Association::new(edge_of, n_edges);
+    let ids: Vec<usize> = (0..channel.num_ues).collect();
+    let ctx = AssocCtx {
+        channel,
+        topo: None,
+    };
+    let edge_of = GreedyPolicy.assign_cold(&ctx, &ids, cap)?;
+    let assoc = Association::new(edge_of, channel.num_edges);
     assoc.validate(cap)?;
     Ok(assoc)
 }

@@ -1,0 +1,1146 @@
+//! Incremental association engine — the per-epoch re-association hot path.
+//!
+//! The scenario engine re-associates every epoch, but an epoch's dynamics
+//! touch only a few rows of the world: mobility moves some UEs (changing
+//! their channel rows), churn removes/re-adds a few, load drift is slow.
+//! The seed implementation re-scored every (UE, edge) link and re-sorted
+//! the full O(U·M) pair list per epoch, which caps scenario worlds at a
+//! few hundred UEs. [`MaintainedAssociation`] mirrors
+//! `delay::MaintainedInstance`: it keeps per-UE sorted candidate lists
+//! (edge rankings keyed by the policy's scoring metric) alive across
+//! epochs and reprocesses only a *dirty set* — UEs whose channel rows
+//! moved (mobility), arrived/departed (churn), or whose serving edge's
+//! load drifted past a hysteresis threshold.
+//!
+//! The proposed/greedy/exact/B&B strategies are refactored behind the
+//! [`AssocPolicy`] trait so the warm (maintained) and cold (from-scratch)
+//! paths share one scoring core ([`AssocPolicy::score`] /
+//! [`AssocPolicy::fill_scores`]) and one assignment core per family
+//! (`merge_assign` for the global-order policies, `edgewise_take` for the
+//! per-edge ones). Sharing the cores is what makes the warm path
+//! **bitwise-identical** to a cold rebuild:
+//!
+//! * a clean UE's channel row is unchanged, so re-deriving its candidate
+//!   row would sort bitwise-equal scores with the same comparator and
+//!   produce the same permutation — the cache *is* the cold row;
+//! * Algorithm 3's global-SNR-order sweep assigns every UE its top
+//!   candidate whenever the all-argmax load map respects the capacity:
+//!   take the first rejected pair (u, m) in the global order — every UE
+//!   assigned before it got its own top choice, so the cap UEs filling m
+//!   plus u itself are all argmax-of-m, i.e. the argmax load of m would
+//!   be ≥ cap + 1. Contrapositive: argmax loads ≤ cap ⇒ no rejection ⇒
+//!   the sweep *is* the argmax map. Fast-path epochs therefore cost only
+//!   the O(dirty·M) re-scoring plus O(U) integer bookkeeping (load
+//!   recounts, map rewrite — no float work, no sorting); the engine
+//!   falls back to the shared merge sweep (over cached rows) only when
+//!   some argmax load exceeds the capacity — both bitwise equal to cold;
+//! * every path orders links identically — score desc, then UE id asc,
+//!   then edge id asc — so a UE equidistant from two edges deterministically
+//!   lands on the lower edge id, warm and cold alike.
+//!
+//! The hysteresis threshold re-scores an edge's members once its load
+//! drifts ≥ `hysteresis · cap` since they were last scored. Under the
+//! paper's fixed per-UE bandwidth the scoring metric is load-independent,
+//! so hysteresis only bounds cache staleness for load-coupled scoring
+//! extensions (`Channel::rate_equal_share`) and **cannot change the
+//! output** — property-tested below, and the reason warm == cold holds
+//! for every hysteresis value.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+use super::LatencyTable;
+use crate::config::AssocStrategy;
+use crate::delay::{ue_compute_time, upload_time};
+use crate::net::{Channel, Topology};
+
+/// Read-only world view the policies score against. `topo` is only
+/// required by the latency-keyed policies (exact / B&B); the SNR-keyed
+/// ones run from the channel alone.
+pub struct AssocCtx<'a> {
+    pub channel: &'a Channel,
+    pub topo: Option<&'a Topology>,
+}
+
+/// One association strategy behind a common scoring core. Higher score =
+/// more preferred link; ties break by lower UE id, then lower edge id.
+/// `assign_cold` is the from-scratch path; the warm path in
+/// [`MaintainedAssociation`] reuses the same scores and assignment cores,
+/// which is what keeps warm and cold bitwise-identical.
+pub trait AssocPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Preference score of one (UE, edge) link — the shared scoring core.
+    fn score(&self, ctx: &AssocCtx, ue: usize, edge: usize) -> f64;
+
+    /// Score a full UE row into `out` (cleared first). Policies whose
+    /// scores are precomputed tables override this with a copy.
+    fn fill_scores(&self, ctx: &AssocCtx, ue: usize, out: &mut Vec<f64>) {
+        out.clear();
+        let m = ctx.channel.num_edges;
+        for e in 0..m {
+            out.push(self.score(ctx, ue, e));
+        }
+    }
+
+    /// From-scratch assignment of `ids` (ascending global UE ids) under
+    /// per-edge capacity `cap`; returns the serving edge per `ids` entry.
+    fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String>;
+}
+
+/// Algorithm 3 (the paper's proposal): global-SNR-order assignment.
+pub struct ProposedPolicy;
+
+/// Per-edge max-SNR selection under the bandwidth cap (paper §V-C).
+pub struct GreedyPolicy;
+
+/// Exact min-max association via threshold search + matching, keyed by
+/// the paper's link latency `a·t^cmp + d/r` at a fixed `a`.
+pub struct ExactMatchingPolicy {
+    pub a: f64,
+}
+
+/// Exact branch-and-bound on MILP (39) (the baseline the paper dismisses
+/// as exponential), same latency key as [`ExactMatchingPolicy`].
+pub struct BnbPolicy {
+    pub a: f64,
+}
+
+/// The [`AssocPolicy`] for a scenario strategy (`a` parameterizes the
+/// latency-keyed policies; the SNR-keyed ones ignore it). Random has no
+/// policy: it is rng-driven and re-drawn cold every epoch.
+pub fn policy_for(strategy: AssocStrategy, a: f64) -> Result<Box<dyn AssocPolicy>, String> {
+    match strategy {
+        AssocStrategy::Proposed => Ok(Box::new(ProposedPolicy)),
+        AssocStrategy::Greedy => Ok(Box::new(GreedyPolicy)),
+        AssocStrategy::Exact => Ok(Box::new(ExactMatchingPolicy { a })),
+        AssocStrategy::Random => {
+            Err("random association is rng-driven and has no AssocPolicy".to_string())
+        }
+    }
+}
+
+fn check_feasible(k: usize, m: usize, cap: usize) -> Result<(), String> {
+    if k > m * cap {
+        return Err(format!("infeasible: {k} UEs > {m} edges x capacity {cap}"));
+    }
+    Ok(())
+}
+
+fn check_edge_width(m: usize) -> Result<(), String> {
+    if m > u16::MAX as usize {
+        return Err(format!("{m} edges exceed the u16 candidate-row width"));
+    }
+    Ok(())
+}
+
+/// Sort one UE's candidate row (edge ids) by score desc, edge id asc —
+/// the tie-break every path shares.
+fn fill_candidate_row<P: AssocPolicy + ?Sized>(
+    policy: &P,
+    ctx: &AssocCtx,
+    ue: usize,
+    scratch: &mut Vec<f64>,
+    row: &mut [u16],
+) {
+    policy.fill_scores(ctx, ue, scratch);
+    for (e, slot) in row.iter_mut().enumerate() {
+        *slot = e as u16;
+    }
+    row.sort_unstable_by(|&x, &y| {
+        scratch[y as usize]
+            .total_cmp(&scratch[x as usize])
+            .then_with(|| x.cmp(&y))
+    });
+}
+
+/// Lazy k-way merge head: the next unconsidered candidate of one UE.
+struct Head {
+    score: f64,
+    ue: u32,
+    cursor: u32,
+}
+
+impl PartialEq for Head {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Head {}
+
+impl PartialOrd for Head {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Head {
+    /// Max-heap order: higher score first, then lower UE index.
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.ue.cmp(&self.ue))
+    }
+}
+
+/// Global-order greedy assignment as a lazy k-way merge over per-UE
+/// candidate rows — exactly the sorted-pair sweep of Algorithm 3 (pairs
+/// by score desc, UE asc, edge asc; assign a UE the first time it
+/// surfaces on a non-full edge), without materializing the O(U·M) pair
+/// list. `row_of[i]` is the row number of `ids[i]` inside `rows` (stride
+/// `num_edges`); `score` re-derives a head's key (the shared scoring
+/// core, so cached and fresh rows see identical keys).
+fn merge_assign(
+    ids: &[usize],
+    rows: &[u16],
+    row_of: &[usize],
+    num_edges: usize,
+    cap: usize,
+    score: &dyn Fn(usize, usize) -> f64,
+) -> Result<Vec<usize>, String> {
+    let k = ids.len();
+    check_feasible(k, num_edges, cap)?;
+    let mut edge_of = vec![usize::MAX; k];
+    let mut load = vec![0usize; num_edges];
+    let mut heap: BinaryHeap<Head> = BinaryHeap::with_capacity(k);
+    for i in 0..k {
+        let e = rows[row_of[i] * num_edges] as usize;
+        heap.push(Head {
+            score: score(ids[i], e),
+            ue: i as u32,
+            cursor: 0,
+        });
+    }
+    let mut assigned = 0usize;
+    while let Some(h) = heap.pop() {
+        let i = h.ue as usize;
+        let row = &rows[row_of[i] * num_edges..row_of[i] * num_edges + num_edges];
+        let e = row[h.cursor as usize] as usize;
+        if load[e] < cap {
+            edge_of[i] = e;
+            load[e] += 1;
+            assigned += 1;
+            if assigned == k {
+                break;
+            }
+        } else {
+            let cursor = h.cursor + 1;
+            if (cursor as usize) < num_edges {
+                let e2 = row[cursor as usize] as usize;
+                heap.push(Head {
+                    score: score(ids[i], e2),
+                    ue: h.ue,
+                    cursor,
+                });
+            }
+        }
+    }
+    if assigned != k {
+        return Err("merge sweep left UEs unassigned".to_string());
+    }
+    Ok(edge_of)
+}
+
+/// Visitor fed one ranked UE at a time; return `false` to stop the edge.
+type RankVisitor<'a> = dyn FnMut(usize) -> bool + 'a;
+
+/// Per-edge sequential selection: edge 0 takes its best `cap` eligible
+/// UEs, then edge 1, … — the greedy baseline's shared assignment core.
+/// `for_each_ranked(e, visit)` must feed edge `e`'s UE ranking (global
+/// ids, best first) to `visit` until it returns `false`.
+fn edgewise_take(
+    ids: &[usize],
+    n_total: usize,
+    num_edges: usize,
+    cap: usize,
+    for_each_ranked: &mut dyn FnMut(usize, &mut RankVisitor),
+) -> Result<Vec<usize>, String> {
+    let k = ids.len();
+    check_feasible(k, num_edges, cap)?;
+    let mut edge_of_g = vec![usize::MAX; n_total];
+    let mut eligible = vec![false; n_total];
+    for &ue in ids {
+        eligible[ue] = true;
+    }
+    let mut remaining = k;
+    for e in 0..num_edges {
+        if remaining == 0 {
+            break;
+        }
+        let mut taken = 0usize;
+        let mut visit = |ue: usize| -> bool {
+            if taken == cap {
+                return false; // guard against a caller that ignores `false`
+            }
+            if !eligible[ue] || edge_of_g[ue] != usize::MAX {
+                return true;
+            }
+            edge_of_g[ue] = e;
+            taken += 1;
+            remaining -= 1;
+            taken < cap && remaining > 0
+        };
+        for_each_ranked(e, &mut visit);
+    }
+    if remaining != 0 {
+        return Err("edgewise walk left UEs unassigned".to_string());
+    }
+    Ok(ids.iter().map(|&ue| edge_of_g[ue]).collect())
+}
+
+/// Latency table restricted to `ids`, built with the exact expressions of
+/// [`LatencyTable::build`] so subset and full tables agree bitwise.
+fn subset_latency_table(ctx: &AssocCtx, a: f64, ids: &[usize]) -> Result<LatencyTable, String> {
+    let topo = ctx
+        .topo
+        .ok_or_else(|| "latency-keyed policy needs AssocCtx::topo".to_string())?;
+    let m = ctx.channel.num_edges;
+    let mut lat = Vec::with_capacity(ids.len() * m);
+    for &ue in ids {
+        let u = &topo.ues[ue];
+        let t_cmp = ue_compute_time(u);
+        for e in 0..m {
+            lat.push(a * t_cmp + u.model_bits / ctx.channel.rate_of(ue, e));
+        }
+    }
+    Ok(LatencyTable {
+        num_ues: ids.len(),
+        num_edges: m,
+        latency_s: lat,
+    })
+}
+
+impl AssocPolicy for ProposedPolicy {
+    fn name(&self) -> &'static str {
+        "proposed"
+    }
+
+    fn score(&self, ctx: &AssocCtx, ue: usize, edge: usize) -> f64 {
+        ctx.channel.snr_of(ue, edge)
+    }
+
+    fn fill_scores(&self, ctx: &AssocCtx, ue: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(ctx.channel.snr_row(ue));
+    }
+
+    fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        let m = ctx.channel.num_edges;
+        check_feasible(ids.len(), m, cap)?;
+        check_edge_width(m)?;
+        let mut rows = vec![0u16; ids.len() * m];
+        let mut scratch = Vec::with_capacity(m);
+        for (i, &ue) in ids.iter().enumerate() {
+            fill_candidate_row(self, ctx, ue, &mut scratch, &mut rows[i * m..(i + 1) * m]);
+        }
+        let row_of: Vec<usize> = (0..ids.len()).collect();
+        merge_assign(ids, &rows, &row_of, m, cap, &|ue, e| self.score(ctx, ue, e))
+    }
+}
+
+impl AssocPolicy for GreedyPolicy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn score(&self, ctx: &AssocCtx, ue: usize, edge: usize) -> f64 {
+        ctx.channel.snr_of(ue, edge)
+    }
+
+    fn fill_scores(&self, ctx: &AssocCtx, ue: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(ctx.channel.snr_row(ue));
+    }
+
+    fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        let m = ctx.channel.num_edges;
+        let k = ids.len();
+        check_feasible(k, m, cap)?;
+        let mut scores = vec![0.0f64; k * m];
+        let mut scratch = Vec::with_capacity(m);
+        for (i, &ue) in ids.iter().enumerate() {
+            self.fill_scores(ctx, ue, &mut scratch);
+            scores[i * m..(i + 1) * m].copy_from_slice(&scratch);
+        }
+        let mut rank: Vec<Vec<u32>> = Vec::with_capacity(m);
+        for e in 0..m {
+            let mut order: Vec<u32> = (0..k as u32).collect();
+            order.sort_unstable_by(|&x, &y| {
+                scores[y as usize * m + e]
+                    .total_cmp(&scores[x as usize * m + e])
+                    .then_with(|| ids[x as usize].cmp(&ids[y as usize]))
+            });
+            rank.push(order);
+        }
+        let n_total = ids.last().map_or(0, |&ue| ue + 1);
+        let mut feed = |e: usize, visit: &mut dyn FnMut(usize) -> bool| {
+            for &i in &rank[e] {
+                if !visit(ids[i as usize]) {
+                    break;
+                }
+            }
+        };
+        edgewise_take(ids, n_total, m, cap, &mut feed)
+    }
+}
+
+impl AssocPolicy for ExactMatchingPolicy {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn score(&self, ctx: &AssocCtx, ue: usize, edge: usize) -> f64 {
+        let topo = ctx.topo.expect("latency-keyed policy needs AssocCtx::topo");
+        let u = &topo.ues[ue];
+        -(self.a * ue_compute_time(u)
+            + upload_time(u.model_bits, ctx.channel.rate_of(ue, edge)))
+    }
+
+    fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        let table = subset_latency_table(ctx, self.a, ids)?;
+        let assoc = super::solve_exact_matching(&table, cap)?;
+        Ok(assoc.edge_of)
+    }
+}
+
+impl AssocPolicy for BnbPolicy {
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+
+    fn score(&self, ctx: &AssocCtx, ue: usize, edge: usize) -> f64 {
+        let topo = ctx.topo.expect("latency-keyed policy needs AssocCtx::topo");
+        let u = &topo.ues[ue];
+        -(self.a * ue_compute_time(u)
+            + upload_time(u.model_bits, ctx.channel.rate_of(ue, edge)))
+    }
+
+    fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        let table = subset_latency_table(ctx, self.a, ids)?;
+        let assoc = super::solve_exact_bnb(&table, cap, None)?;
+        Ok(assoc.edge_of)
+    }
+}
+
+/// What one epoch changed about the world. The caller contract the warm
+/// path's exactness rests on: **every** UE whose channel row changed must
+/// appear in `moved` (or `arrived`, whose rows are recomputed at the
+/// arrival position).
+#[derive(Debug, Clone, Default)]
+pub struct WorldDelta {
+    /// Active UEs whose channel row was recomputed in place (mobility).
+    pub moved: Vec<usize>,
+    /// UEs that became active this epoch.
+    pub arrived: Vec<usize>,
+    /// UEs that left this epoch.
+    pub departed: Vec<usize>,
+}
+
+impl WorldDelta {
+    pub fn is_empty(&self) -> bool {
+        self.moved.is_empty() && self.arrived.is_empty() && self.departed.is_empty()
+    }
+
+    /// Every UE the delta touches, ascending and deduplicated.
+    pub fn touched(&self) -> Vec<usize> {
+        let mut t: Vec<usize> = self
+            .moved
+            .iter()
+            .chain(&self.arrived)
+            .chain(&self.departed)
+            .copied()
+            .collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+/// Greedy-ranking key: iterating a `BTreeSet<RankKey>` ascending yields
+/// UEs best-first (score desc, UE id asc) — the shared greedy order.
+#[derive(Debug, Clone, Copy)]
+struct RankKey {
+    score: f64,
+    ue: u32,
+}
+
+impl PartialEq for RankKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for RankKey {}
+
+impl PartialOrd for RankKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RankKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .score
+            .total_cmp(&self.score)
+            .then_with(|| self.ue.cmp(&other.ue))
+    }
+}
+
+/// Policy-specific cached candidate state.
+enum WarmState {
+    /// Algorithm 3: per-UE candidate rows + cached argmax edge.
+    Proposed { rows: Vec<u16>, top: Vec<u16> },
+    /// Greedy: per-edge total rankings as ordered sets (+ the score table
+    /// needed to remove stale keys).
+    Greedy {
+        scores: Vec<f64>,
+        rank: Vec<BTreeSet<RankKey>>,
+    },
+    /// Latency-keyed exact policies have no incremental form: re-run the
+    /// shared cold path every epoch (still through the same scoring
+    /// core, so warm and cold stay identical).
+    Cold,
+}
+
+/// Incrementally-maintained UE→edge association (see module docs for the
+/// dirty-set rules and the warm == cold equality argument).
+pub struct MaintainedAssociation {
+    strategy: AssocStrategy,
+    num_ues: usize,
+    num_edges: usize,
+    cap: usize,
+    hysteresis: f64,
+    active: Vec<bool>,
+    /// Serving edge per global UE id (`usize::MAX` = inactive).
+    edge_of: Vec<usize>,
+    /// Per-edge load of the current association.
+    load: Vec<usize>,
+    /// Per-edge load when the edge's members were last (re-)scored — the
+    /// hysteresis reference point.
+    scored_load: Vec<usize>,
+    dirty: Vec<bool>,
+    dirty_list: Vec<usize>,
+    state: WarmState,
+    /// Cumulative UEs whose candidate state was reprocessed (the
+    /// dirty-set sizes; cold fallbacks add the full active count).
+    pub reassociations: u64,
+    /// Epochs that ran a full (cold-equivalent) assignment pass.
+    pub full_rebuilds: u64,
+}
+
+impl MaintainedAssociation {
+    /// Build from a world snapshot: the first pass scores everyone, so it
+    /// is exactly the shared cold path.
+    pub fn new(
+        strategy: AssocStrategy,
+        topo: &Topology,
+        channel: &Channel,
+        active: &[bool],
+        cap: usize,
+        hysteresis: f64,
+        provisional_a: f64,
+    ) -> Result<MaintainedAssociation, String> {
+        let n = topo.num_ues();
+        let m = topo.num_edges();
+        check_edge_width(m)?;
+        if hysteresis.is_nan() || hysteresis < 0.0 {
+            return Err(format!("assoc hysteresis must be >= 0, got {hysteresis}"));
+        }
+        let state = match strategy {
+            AssocStrategy::Proposed => WarmState::Proposed {
+                rows: vec![0u16; n * m],
+                top: vec![0u16; n],
+            },
+            AssocStrategy::Greedy => WarmState::Greedy {
+                scores: vec![0.0f64; n * m],
+                rank: Vec::new(),
+            },
+            AssocStrategy::Exact => WarmState::Cold,
+            AssocStrategy::Random => {
+                return Err("random association cannot be maintained warm".to_string())
+            }
+        };
+        let mut ma = MaintainedAssociation {
+            strategy,
+            num_ues: n,
+            num_edges: m,
+            cap,
+            hysteresis,
+            active: active.to_vec(),
+            edge_of: vec![usize::MAX; n],
+            load: vec![0usize; m],
+            scored_load: vec![0usize; m],
+            dirty: vec![false; n],
+            dirty_list: Vec::new(),
+            state,
+            reassociations: 0,
+            full_rebuilds: 0,
+        };
+        for ue in 0..n {
+            ma.mark_dirty(ue);
+        }
+        ma.reassign(topo, channel, provisional_a)?;
+        ma.scored_load.copy_from_slice(&ma.load);
+        Ok(ma)
+    }
+
+    fn mark_dirty(&mut self, ue: usize) {
+        if !self.dirty[ue] {
+            self.dirty[ue] = true;
+            self.dirty_list.push(ue);
+        }
+    }
+
+    /// Apply one epoch's [`WorldDelta`] and recompute the association.
+    /// `active` is the caller's post-delta mask (cross-checked in debug
+    /// builds and adopted as the source of truth).
+    pub fn sync(
+        &mut self,
+        topo: &Topology,
+        channel: &Channel,
+        active: &[bool],
+        delta: &WorldDelta,
+        provisional_a: f64,
+    ) -> Result<(), String> {
+        for &ue in &delta.departed {
+            self.active[ue] = false;
+        }
+        for &ue in &delta.arrived {
+            self.active[ue] = true;
+            self.mark_dirty(ue);
+        }
+        for &ue in &delta.moved {
+            self.mark_dirty(ue);
+        }
+        debug_assert_eq!(self.active.as_slice(), active, "delta disagrees with active mask");
+        self.active.copy_from_slice(active);
+
+        // Hysteresis: an edge whose load drifted >= hysteresis * cap
+        // since its members were last scored re-scores them (output-
+        // neutral under load-independent scoring; see module docs).
+        if self.hysteresis.is_finite() {
+            let thresh = (self.hysteresis * self.cap as f64).max(1.0);
+            let mut tripped: Vec<usize> = Vec::new();
+            for e in 0..self.num_edges {
+                if self.load[e].abs_diff(self.scored_load[e]) as f64 >= thresh {
+                    tripped.push(e);
+                }
+            }
+            if !tripped.is_empty() {
+                for ue in 0..self.num_ues {
+                    let e = self.edge_of[ue];
+                    if self.active[ue] && e != usize::MAX && tripped.binary_search(&e).is_ok() {
+                        self.mark_dirty(ue);
+                    }
+                }
+                for &e in &tripped {
+                    self.scored_load[e] = self.load[e];
+                }
+            }
+        }
+        self.reassign(topo, channel, provisional_a)
+    }
+
+    /// The current association as the scenario engine consumes it
+    /// (`None` = inactive).
+    pub fn edge_of_global(&self) -> Vec<Option<usize>> {
+        self.edge_of
+            .iter()
+            .map(|&e| if e == usize::MAX { None } else { Some(e) })
+            .collect()
+    }
+
+    /// Per-edge load of the current association.
+    pub fn load(&self) -> &[usize] {
+        &self.load
+    }
+
+    fn reassign(
+        &mut self,
+        topo: &Topology,
+        channel: &Channel,
+        provisional_a: f64,
+    ) -> Result<(), String> {
+        let m = self.num_edges;
+        let cap = self.cap;
+        let ids: Vec<usize> = (0..self.num_ues).filter(|&u| self.active[u]).collect();
+        check_feasible(ids.len(), m, cap)?;
+        let ctx = AssocCtx {
+            channel,
+            topo: Some(topo),
+        };
+        if ids.is_empty() {
+            for x in self.edge_of.iter_mut() {
+                *x = usize::MAX;
+            }
+        } else {
+            match &mut self.state {
+                WarmState::Proposed { rows, top } => {
+                    let policy = ProposedPolicy;
+                    let mut scratch = Vec::with_capacity(m);
+                    for &ue in self.dirty_list.iter() {
+                        let row = &mut rows[ue * m..(ue + 1) * m];
+                        fill_candidate_row(&policy, &ctx, ue, &mut scratch, row);
+                        top[ue] = row[0];
+                    }
+                    self.reassociations += self.dirty_list.len() as u64;
+                    let mut argmax_load = vec![0usize; m];
+                    for &ue in &ids {
+                        argmax_load[top[ue] as usize] += 1;
+                    }
+                    if argmax_load.iter().all(|&l| l <= cap) {
+                        // Fast path: the global sweep would assign every
+                        // UE its top candidate (see module docs).
+                        for x in self.edge_of.iter_mut() {
+                            *x = usize::MAX;
+                        }
+                        for &ue in &ids {
+                            self.edge_of[ue] = top[ue] as usize;
+                        }
+                    } else {
+                        // Capacity binds somewhere: run the shared merge
+                        // sweep over the cached rows.
+                        self.full_rebuilds += 1;
+                        self.reassociations += ids.len() as u64;
+                        let assigned = merge_assign(&ids, rows, &ids, m, cap, &|ue, e| {
+                            policy.score(&ctx, ue, e)
+                        })?;
+                        for x in self.edge_of.iter_mut() {
+                            *x = usize::MAX;
+                        }
+                        for (i, &ue) in ids.iter().enumerate() {
+                            self.edge_of[ue] = assigned[i];
+                        }
+                    }
+                }
+                WarmState::Greedy { scores, rank } => {
+                    let policy = GreedyPolicy;
+                    let mut scratch = Vec::with_capacity(m);
+                    if rank.is_empty() {
+                        // First pass: bulk-build the per-edge rankings
+                        // from sorted vectors (covers the all-dirty set).
+                        for ue in 0..self.num_ues {
+                            policy.fill_scores(&ctx, ue, &mut scratch);
+                            scores[ue * m..(ue + 1) * m].copy_from_slice(&scratch);
+                        }
+                        for e in 0..m {
+                            let mut order: Vec<RankKey> = (0..self.num_ues)
+                                .map(|ue| RankKey {
+                                    score: scores[ue * m + e],
+                                    ue: ue as u32,
+                                })
+                                .collect();
+                            order.sort_unstable();
+                            rank.push(order.into_iter().collect());
+                        }
+                    } else {
+                        for &ue in self.dirty_list.iter() {
+                            for e in 0..m {
+                                rank[e].remove(&RankKey {
+                                    score: scores[ue * m + e],
+                                    ue: ue as u32,
+                                });
+                            }
+                            policy.fill_scores(&ctx, ue, &mut scratch);
+                            scores[ue * m..(ue + 1) * m].copy_from_slice(&scratch);
+                            for e in 0..m {
+                                rank[e].insert(RankKey {
+                                    score: scores[ue * m + e],
+                                    ue: ue as u32,
+                                });
+                            }
+                        }
+                    }
+                    self.reassociations += self.dirty_list.len() as u64;
+                    let mut feed = |e: usize, visit: &mut dyn FnMut(usize) -> bool| {
+                        for key in rank[e].iter() {
+                            if !visit(key.ue as usize) {
+                                break;
+                            }
+                        }
+                    };
+                    let assigned = edgewise_take(&ids, self.num_ues, m, cap, &mut feed)?;
+                    for x in self.edge_of.iter_mut() {
+                        *x = usize::MAX;
+                    }
+                    for (i, &ue) in ids.iter().enumerate() {
+                        self.edge_of[ue] = assigned[i];
+                    }
+                }
+                WarmState::Cold => {
+                    let policy = policy_for(self.strategy, provisional_a)?;
+                    let assigned = policy.assign_cold(&ctx, &ids, cap)?;
+                    self.reassociations += ids.len() as u64;
+                    self.full_rebuilds += 1;
+                    for x in self.edge_of.iter_mut() {
+                        *x = usize::MAX;
+                    }
+                    for (i, &ue) in ids.iter().enumerate() {
+                        self.edge_of[ue] = assigned[i];
+                    }
+                }
+            }
+        }
+        for &ue in &self.dirty_list {
+            self.dirty[ue] = false;
+        }
+        self.dirty_list.clear();
+        for l in self.load.iter_mut() {
+            *l = 0;
+        }
+        for &ue in &ids {
+            self.load[self.edge_of[ue]] += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Cold reference: the policy's from-scratch map over the active set, in
+/// the engine's global-id layout. Shared by tests and benches as the
+/// ground truth the warm path must reproduce bitwise.
+pub fn cold_reference_map(
+    strategy: AssocStrategy,
+    topo: &Topology,
+    channel: &Channel,
+    active: &[bool],
+    cap: usize,
+    provisional_a: f64,
+) -> Result<Vec<Option<usize>>, String> {
+    let n = topo.num_ues();
+    let ids: Vec<usize> = (0..n).filter(|&u| active[u]).collect();
+    let mut out = vec![None; n];
+    if ids.is_empty() {
+        return Ok(out);
+    }
+    let ctx = AssocCtx {
+        channel,
+        topo: Some(topo),
+    };
+    let assigned = policy_for(strategy, provisional_a)?.assign_cold(&ctx, &ids, cap)?;
+    for (i, &ue) in ids.iter().enumerate() {
+        out[ue] = Some(assigned[i]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Position, SystemParams};
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn world(edges: usize, ues: usize, seed: u64) -> (Topology, Channel) {
+        let t = Topology::sample(&SystemParams::default(), edges, ues, seed);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        (t, ch)
+    }
+
+    /// One synthetic churn+mobility epoch; returns the delta applied.
+    fn drift(
+        topo: &mut Topology,
+        channel: &mut Channel,
+        active: &mut [bool],
+        rng: &mut Rng,
+    ) -> WorldDelta {
+        let n = topo.num_ues();
+        let area = topo.params.area_m;
+        let mut delta = WorldDelta::default();
+        for _ in 0..rng.below(4) + 1 {
+            let ue = rng.below(n as u64) as usize;
+            if active[ue] && !delta.moved.contains(&ue) {
+                topo.ues[ue].pos = Position {
+                    x: rng.range(0.0, area),
+                    y: rng.range(0.0, area),
+                };
+                channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+                delta.moved.push(ue);
+            }
+        }
+        for _ in 0..rng.below(3) {
+            let ue = rng.below(n as u64) as usize;
+            if active[ue] && !delta.moved.contains(&ue) && !delta.departed.contains(&ue) {
+                active[ue] = false;
+                delta.departed.push(ue);
+            }
+        }
+        for _ in 0..rng.below(3) {
+            let ue = rng.below(n as u64) as usize;
+            if !active[ue] && !delta.departed.contains(&ue) && !delta.arrived.contains(&ue) {
+                active[ue] = true;
+                topo.ues[ue].pos = Position {
+                    x: rng.range(0.0, area),
+                    y: rng.range(0.0, area),
+                };
+                channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+                delta.arrived.push(ue);
+            }
+        }
+        delta
+    }
+
+    fn assert_warm_equals_cold(
+        strategy: AssocStrategy,
+        edges: usize,
+        ues: usize,
+        cap: usize,
+        hysteresis: f64,
+        seed: u64,
+        epochs: usize,
+    ) {
+        let (mut topo, mut channel) = world(edges, ues, seed);
+        let mut active = vec![true; ues];
+        let a = 20.0;
+        let mut ma =
+            MaintainedAssociation::new(strategy, &topo, &channel, &active, cap, hysteresis, a)
+                .unwrap();
+        let mut rng = Rng::new(seed ^ 0xD21F7);
+        for epoch in 0..epochs {
+            let cold = cold_reference_map(strategy, &topo, &channel, &active, cap, a).unwrap();
+            assert_eq!(
+                ma.edge_of_global(),
+                cold,
+                "{} warm != cold at epoch {epoch} (seed {seed})",
+                policy_for(strategy, a).unwrap().name()
+            );
+            let delta = drift(&mut topo, &mut channel, &mut active, &mut rng);
+            ma.sync(&topo, &channel, &active, &delta, a).unwrap();
+        }
+    }
+
+    #[test]
+    fn proposed_warm_equals_cold_under_drift() {
+        // Slack capacity: the argmax fast path dominates.
+        assert_warm_equals_cold(AssocStrategy::Proposed, 5, 40, 20, 0.25, 1, 12);
+        // Tight capacity: the merge fallback engages.
+        assert_warm_equals_cold(AssocStrategy::Proposed, 3, 55, 20, 0.25, 2, 12);
+    }
+
+    #[test]
+    fn greedy_warm_equals_cold_under_drift() {
+        assert_warm_equals_cold(AssocStrategy::Greedy, 4, 48, 20, 0.25, 3, 12);
+    }
+
+    #[test]
+    fn exact_fallback_warm_equals_cold_under_drift() {
+        assert_warm_equals_cold(AssocStrategy::Exact, 3, 18, 8, 0.25, 4, 6);
+    }
+
+    #[test]
+    fn prop_warm_equals_cold_any_hysteresis() {
+        check("assoc warm == cold for any hysteresis", 12, |rng| {
+            let strategy = if rng.f64() < 0.5 {
+                AssocStrategy::Proposed
+            } else {
+                AssocStrategy::Greedy
+            };
+            let edges = rng.int_range(2, 6) as usize;
+            let ues = rng.int_range(edges as i64, (edges * 18) as i64) as usize;
+            let hysteresis = rng.range(0.0, 2.0);
+            let seed = rng.next_u64();
+            assert_warm_equals_cold(strategy, edges, ues, 20, hysteresis, seed, 8);
+        });
+    }
+
+    #[test]
+    fn merge_fallback_engages_when_capacity_binds() {
+        // Everyone piled near one edge: argmax loads must exceed cap.
+        let (mut topo, mut channel) = world(3, 55, 7);
+        let magnet = topo.edges[0].pos;
+        for ue in topo.ues.iter_mut() {
+            ue.pos = magnet;
+        }
+        for ue in &topo.ues {
+            channel.recompute_ue(&topo.params, ue, &topo.edges);
+        }
+        let active = vec![true; 55];
+        let ma = MaintainedAssociation::new(
+            AssocStrategy::Proposed,
+            &topo,
+            &channel,
+            &active,
+            20,
+            0.25,
+            20.0,
+        )
+        .unwrap();
+        assert!(ma.full_rebuilds >= 1, "capacity-bound world must merge");
+        let cold =
+            cold_reference_map(AssocStrategy::Proposed, &topo, &channel, &active, 20, 20.0)
+                .unwrap();
+        assert_eq!(ma.edge_of_global(), cold);
+        assert!(ma.load().iter().all(|&l| l <= 20));
+    }
+
+    #[test]
+    fn equidistant_ue_tie_breaks_by_edge_id_warm_and_cold() {
+        // UE 0 exactly between edges 0 and 1: both links have bitwise-
+        // identical distance, hence gain, hence SNR. Every path must pick
+        // the lower edge id.
+        let (mut topo, mut channel) = world(2, 10, 5);
+        topo.edges[0].pos = Position { x: 100.0, y: 250.0 };
+        topo.edges[1].pos = Position { x: 300.0, y: 250.0 };
+        topo.ues[0].pos = Position { x: 200.0, y: 250.0 };
+        channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+        assert_eq!(
+            channel.snr_of(0, 0).to_bits(),
+            channel.snr_of(0, 1).to_bits(),
+            "tie premise: equidistant links have identical SNR"
+        );
+        let active = vec![true; 10];
+        for strategy in [AssocStrategy::Proposed, AssocStrategy::Greedy] {
+            let cold = cold_reference_map(strategy, &topo, &channel, &active, 20, 20.0).unwrap();
+            assert_eq!(cold[0], Some(0), "{strategy:?} cold tie-break");
+            let mut ma =
+                MaintainedAssociation::new(strategy, &topo, &channel, &active, 20, 0.25, 20.0)
+                    .unwrap();
+            assert_eq!(ma.edge_of_global()[0], Some(0), "{strategy:?} warm tie-break");
+            // Move the UE off and back onto the midpoint: the dirty-set
+            // re-score must reproduce the same deterministic tie-break.
+            topo.ues[0].pos = Position { x: 120.0, y: 250.0 };
+            channel.recompute_ue(&topo.params, &topo.ues[0], &topo.edges);
+            let delta = WorldDelta {
+                moved: vec![0],
+                ..Default::default()
+            };
+            ma.sync(&topo, &channel, &active, &delta, 20.0).unwrap();
+            topo.ues[0].pos = Position { x: 200.0, y: 250.0 };
+            channel.recompute_ue(&topo.params, &topo.ues[0], &topo.edges);
+            ma.sync(&topo, &channel, &active, &delta, 20.0).unwrap();
+            assert_eq!(ma.edge_of_global()[0], Some(0), "{strategy:?} re-scored tie");
+        }
+    }
+
+    #[test]
+    fn emptied_and_refilled_edge_leaks_no_stale_members() {
+        // Mirror of the PR 3 empty-edge regression suite, at the
+        // association layer: all members of one edge depart and other UEs
+        // arrive in their place within a single epoch. The maintained map
+        // must match the cold rebuild exactly — no stale member may
+        // survive — and the internal load bookkeeping must agree.
+        check("assoc empty+refill leaks nothing", 10, |rng| {
+            let (mut topo, mut channel) = world(3, 30, rng.next_u64());
+            let mut active = vec![true; 30];
+            // Start with a third of the fleet parked inactive.
+            for ue in 0..10 {
+                active[ue * 3] = false;
+            }
+            let mut ma = MaintainedAssociation::new(
+                AssocStrategy::Proposed,
+                &topo,
+                &channel,
+                &active,
+                20,
+                0.25,
+                20.0,
+            )
+            .unwrap();
+            // Drain one edge completely...
+            let victim = rng.below(3) as usize;
+            let mut delta = WorldDelta::default();
+            let map = ma.edge_of_global();
+            for (ue, e) in map.iter().enumerate() {
+                if *e == Some(victim) {
+                    active[ue] = false;
+                    delta.departed.push(ue);
+                }
+            }
+            // ...and refill the world from the inactive pool, same epoch.
+            let area = topo.params.area_m;
+            for ue in 0..30 {
+                if !active[ue] && !delta.departed.contains(&ue) {
+                    active[ue] = true;
+                    topo.ues[ue].pos = Position {
+                        x: rng.range(0.0, area),
+                        y: rng.range(0.0, area),
+                    };
+                    channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+                    delta.arrived.push(ue);
+                }
+            }
+            ma.sync(&topo, &channel, &active, &delta, 20.0).unwrap();
+            let cold = cold_reference_map(
+                AssocStrategy::Proposed,
+                &topo,
+                &channel,
+                &active,
+                20,
+                20.0,
+            )
+            .unwrap();
+            assert_eq!(ma.edge_of_global(), cold, "stale member leaked");
+            for (ue, e) in ma.edge_of_global().iter().enumerate() {
+                assert_eq!(e.is_some(), active[ue], "active/assigned mismatch");
+            }
+            let mut expect_load = vec![0usize; 3];
+            for e in cold.iter().flatten() {
+                expect_load[*e] += 1;
+            }
+            assert_eq!(ma.load(), expect_load.as_slice());
+        });
+    }
+
+    #[test]
+    fn policy_cold_paths_match_legacy_wrappers() {
+        let (topo, channel) = world(5, 100, 11);
+        let ids: Vec<usize> = (0..100).collect();
+        let ctx = AssocCtx {
+            channel: &channel,
+            topo: Some(&topo),
+        };
+        let p = ProposedPolicy.assign_cold(&ctx, &ids, 20).unwrap();
+        assert_eq!(p, crate::assoc::time_minimized(&channel, 20).unwrap().edge_of);
+        let g = GreedyPolicy.assign_cold(&ctx, &ids, 20).unwrap();
+        assert_eq!(g, crate::assoc::greedy(&channel, 20).unwrap().edge_of);
+        let table = LatencyTable::build(&topo, &channel, 20.0);
+        let e = ExactMatchingPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 25).unwrap();
+        assert_eq!(
+            e,
+            crate::assoc::solve_exact_matching(&table, 25).unwrap().edge_of
+        );
+    }
+
+    #[test]
+    fn infeasible_and_empty_inputs() {
+        let (topo, channel) = world(2, 50, 13);
+        let ids: Vec<usize> = (0..50).collect();
+        let ctx = AssocCtx {
+            channel: &channel,
+            topo: Some(&topo),
+        };
+        assert!(ProposedPolicy.assign_cold(&ctx, &ids, 20).is_err());
+        assert!(GreedyPolicy.assign_cold(&ctx, &ids, 20).is_err());
+        assert_eq!(ProposedPolicy.assign_cold(&ctx, &[], 20).unwrap(), vec![]);
+        let active = vec![false; 50];
+        let ma = MaintainedAssociation::new(
+            AssocStrategy::Proposed,
+            &topo,
+            &channel,
+            &active,
+            20,
+            0.25,
+            20.0,
+        )
+        .unwrap();
+        assert!(ma.edge_of_global().iter().all(|e| e.is_none()));
+        assert!(policy_for(AssocStrategy::Random, 1.0).is_err());
+    }
+
+    #[test]
+    fn bnb_policy_agrees_with_matching_on_small_worlds() {
+        let (topo, channel) = world(3, 9, 17);
+        let ids: Vec<usize> = (0..9).collect();
+        let ctx = AssocCtx {
+            channel: &channel,
+            topo: Some(&topo),
+        };
+        let table = LatencyTable::build(&topo, &channel, 20.0);
+        let b = BnbPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 4).unwrap();
+        let e = ExactMatchingPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 4).unwrap();
+        let ob = ids.iter().map(|&u| table.of(u, b[u])).fold(0.0, f64::max);
+        let oe = ids.iter().map(|&u| table.of(u, e[u])).fold(0.0, f64::max);
+        assert!((ob - oe).abs() < 1e-12, "bnb {ob} vs matching {oe}");
+    }
+}

@@ -11,9 +11,19 @@
 //!
 //! All strategies produce an [`Association`] that is validated against the
 //! paper's constraints (3)/(13c)–(13e).
+//!
+//! The strategies are implemented behind the [`AssocPolicy`] trait in
+//! [`incremental`], which also provides [`MaintainedAssociation`] — the
+//! dirty-set warm engine the scenario loop uses to re-associate 100k-UE
+//! worlds: per epoch it re-scores only the changed UEs (O(dirty·M)
+//! float work plus cheap O(U) integer bookkeeping) instead of
+//! re-scoring and re-sorting all O(U·M) links, and the maps stay
+//! bitwise-equal to the cold rebuild (see the module docs for the
+//! argument).
 
 pub mod bnb;
 pub mod greedy;
+pub mod incremental;
 pub mod proposed;
 pub mod random;
 
@@ -21,6 +31,10 @@ use crate::net::{Channel, Topology};
 
 pub use bnb::{solve_exact_bnb, solve_exact_matching};
 pub use greedy::greedy;
+pub use incremental::{
+    cold_reference_map, policy_for, AssocCtx, AssocPolicy, BnbPolicy, ExactMatchingPolicy,
+    GreedyPolicy, MaintainedAssociation, ProposedPolicy, WorldDelta,
+};
 pub use proposed::{time_minimized, time_minimized_claims};
 pub use random::random;
 

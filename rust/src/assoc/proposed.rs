@@ -21,44 +21,30 @@
 //! `refine_swaps` adds an optional 1-move local search on the min-max
 //! latency objective (38) — an extension, off by default.
 
+use super::incremental::{AssocCtx, AssocPolicy, ProposedPolicy};
 use super::{Association, LatencyTable};
 use crate::net::Channel;
 
 /// Primary Algorithm 3: global-SNR-order assignment under capacity `cap`.
 ///
+/// Thin wrapper over [`ProposedPolicy`]'s cold path: all (UE, edge) pairs
+/// are considered in (SNR desc, UE asc, edge asc) order — realized as a
+/// lazy k-way merge over per-UE candidate rows instead of materializing
+/// and sorting the O(U·M) pair list — and each UE is assigned the first
+/// time it surfaces on a non-full edge. Bit-identical to the seed's
+/// full-sort sweep (the stable pair-index tie-break *is* UE asc, edge
+/// asc), including on degenerate NaN/∞ SNR worlds, where `total_cmp`
+/// keeps the order deterministic instead of panicking mid-sort.
+///
 /// Returns an error when the instance is infeasible (`N > M·cap`).
 pub fn time_minimized(channel: &Channel, cap: usize) -> Result<Association, String> {
-    let (n_ues, n_edges) = (channel.num_ues, channel.num_edges);
-    if n_ues > n_edges * cap {
-        return Err(format!(
-            "infeasible: {n_ues} UEs > {n_edges} edges x capacity {cap}"
-        ));
-    }
-    // Sort all links by SNR descending (paper line 1: "sort g p / N0").
-    let mut pairs: Vec<u32> = (0..(n_ues * n_edges) as u32).collect();
-    pairs.sort_by(|&p, &q| {
-        let (pn, pm) = ((p as usize) / n_edges, (p as usize) % n_edges);
-        let (qn, qm) = ((q as usize) / n_edges, (q as usize) % n_edges);
-        // total_cmp: degenerate channels (NaN/∞ SNR) sort deterministically
-        // instead of panicking mid-sort.
-        channel.snr_of(qn, qm).total_cmp(&channel.snr_of(pn, pm))
-    });
-    let mut edge_of = vec![usize::MAX; n_ues];
-    let mut load = vec![0usize; n_edges];
-    let mut assigned = 0usize;
-    for p in pairs {
-        let (n, m) = ((p as usize) / n_edges, (p as usize) % n_edges);
-        if edge_of[n] == usize::MAX && load[m] < cap {
-            edge_of[n] = m;
-            load[m] += 1;
-            assigned += 1;
-            if assigned == n_ues {
-                break;
-            }
-        }
-    }
-    debug_assert_eq!(assigned, n_ues, "capacity check guarantees completion");
-    let assoc = Association::new(edge_of, n_edges);
+    let ids: Vec<usize> = (0..channel.num_ues).collect();
+    let ctx = AssocCtx {
+        channel,
+        topo: None,
+    };
+    let edge_of = ProposedPolicy.assign_cold(&ctx, &ids, cap)?;
+    let assoc = Association::new(edge_of, channel.num_edges);
     assoc.validate(cap)?;
     Ok(assoc)
 }

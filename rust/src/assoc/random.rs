@@ -1,5 +1,12 @@
 //! Random-association baseline (paper §V-C): UEs are assigned uniformly
 //! at random among edges with remaining bandwidth capacity.
+//!
+//! Deliberately *not* behind the `AssocPolicy` trait: the outcome is a
+//! function of the rng stream, not of any link score, so there is
+//! nothing for the warm engine to cache. The scenario loop re-draws it
+//! cold every epoch in both `assoc_resolve` modes, consuming the same
+//! rng stream either way (which keeps warm and cold trajectories
+//! bitwise-identical for this strategy too).
 
 use super::Association;
 use crate::util::Rng;

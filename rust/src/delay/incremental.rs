@@ -125,27 +125,56 @@ impl MaintainedInstance {
     pub fn sync(&mut self, topo: &Topology, channel: &Channel, edge_of: &[Option<usize>]) {
         debug_assert_eq!(edge_of.len(), self.slot.len());
         for (n, desired) in edge_of.iter().enumerate() {
-            match (self.slot[n], desired) {
-                (Some((e, s)), Some(d)) if e == *d => {
-                    let ue = &topo.ues[n];
-                    let delays = (
-                        ue_compute_time(ue),
-                        upload_time(ue.model_bits, channel.rate_of(n, e)),
-                    );
-                    if self.inst.per_edge[e].ue[s] != delays {
-                        self.inst.per_edge[e].ue[s] = delays;
-                        self.dirty[e] = true;
-                    }
+            self.sync_one(n, *desired, topo, channel);
+        }
+    }
+
+    /// [`Self::sync`] restricted to a known touched set — the delta-driven
+    /// path the scenario engine uses once it knows exactly which channel
+    /// rows moved and whose membership changed, making the per-epoch
+    /// maintenance O(touched) instead of O(N) float re-derivations.
+    ///
+    /// Caller contract: `touched` must contain every UE whose channel row
+    /// changed since the last sync *and* every UE whose desired edge
+    /// differs from the maintained one. Duplicates are harmless (the
+    /// per-UE update is idempotent). With a complete set the result is
+    /// bitwise-identical to a full [`Self::sync`].
+    pub fn sync_delta(
+        &mut self,
+        topo: &Topology,
+        channel: &Channel,
+        edge_of: &[Option<usize>],
+        touched: &[usize],
+    ) {
+        debug_assert_eq!(edge_of.len(), self.slot.len());
+        for &n in touched {
+            self.sync_one(n, edge_of[n], topo, channel);
+        }
+    }
+
+    /// One UE's sync step, shared by [`Self::sync`] and
+    /// [`Self::sync_delta`] so the two paths cannot drift apart.
+    fn sync_one(&mut self, n: usize, desired: Option<usize>, topo: &Topology, channel: &Channel) {
+        match (self.slot[n], desired) {
+            (Some((e, s)), Some(d)) if e == d => {
+                let ue = &topo.ues[n];
+                let delays = (
+                    ue_compute_time(ue),
+                    upload_time(ue.model_bits, channel.rate_of(n, e)),
+                );
+                if self.inst.per_edge[e].ue[s] != delays {
+                    self.inst.per_edge[e].ue[s] = delays;
+                    self.dirty[e] = true;
                 }
-                (Some(_), _) => {
-                    self.remove(n);
-                    if let Some(d) = desired {
-                        self.insert(n, *d, topo, channel);
-                    }
-                }
-                (None, Some(d)) => self.insert(n, *d, topo, channel),
-                (None, None) => {}
             }
+            (Some(_), _) => {
+                self.remove(n);
+                if let Some(d) = desired {
+                    self.insert(n, d, topo, channel);
+                }
+            }
+            (None, Some(d)) => self.insert(n, d, topo, channel),
+            (None, None) => {}
         }
     }
 
@@ -309,6 +338,35 @@ mod tests {
         // A no-op sync stays identical.
         m.sync(&topo, &ch, &edge_of);
         check_equal(&m, &rebuild(&topo, &ch, &edge_of, eps));
+    }
+
+    #[test]
+    fn sync_delta_matches_full_sync_bitwise() {
+        let (mut topo, mut ch) = world(13);
+        let eps = 0.25;
+        let mut edge_of: Vec<Option<usize>> = (0..18)
+            .map(|i| if i % 7 == 6 { None } else { Some(i % 3) })
+            .collect();
+        let mut full = MaintainedInstance::build(&topo, &ch, &edge_of, eps);
+        let mut delta = full.clone();
+
+        // Mobility on two rows, one departure, one arrival, one handover.
+        topo.ues[1].pos = Position { x: 44.0, y: 301.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[1], &topo.edges);
+        topo.ues[9].pos = Position { x: 402.0, y: 77.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[9], &topo.edges);
+        edge_of[3] = None;
+        edge_of[6] = Some(2);
+        edge_of[2] = Some(1);
+        let touched = vec![1usize, 9, 3, 6, 2, 2]; // duplicate on purpose
+
+        full.sync(&topo, &ch, &edge_of);
+        delta.sync_delta(&topo, &ch, &edge_of, &touched);
+        check_equal(&delta, full.instance());
+
+        // An empty delta is a no-op.
+        delta.sync_delta(&topo, &ch, &edge_of, &[]);
+        check_equal(&delta, full.instance());
     }
 
     #[test]

@@ -112,6 +112,11 @@ SCENARIO OPTIONS
   --max-epochs N       epoch cap                           (default 256)
   --mode NAME          integer|continuous|subgradient      (default integer)
   --resolve NAME       per-epoch (a,b) re-solve: warm|cold (default warm)
+  --assoc-resolve NAME per-epoch re-association: warm (incremental
+                       MaintainedAssociation engine) | cold (default warm;
+                       identical maps either way)
+  --assoc-hysteresis H load-drift fraction of capacity that re-scores an
+                       edge's members in warm mode (default 0.25)
   --report FILE        JSON report path (default results/scenario_report.json)
 ";
 

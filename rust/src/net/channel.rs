@@ -127,6 +127,25 @@ impl Channel {
         self.rate_bps[ue * self.num_edges + edge]
     }
 
+    /// One UE's gain row (all edges) — the unit `recompute_ue` rewrites.
+    #[inline]
+    pub fn gain_row(&self, ue: usize) -> &[f64] {
+        &self.gain[ue * self.num_edges..(ue + 1) * self.num_edges]
+    }
+
+    /// One UE's SNR row — the association scoring core copies this
+    /// instead of `num_edges` indexed `snr_of` calls on the hot path.
+    #[inline]
+    pub fn snr_row(&self, ue: usize) -> &[f64] {
+        &self.snr[ue * self.num_edges..(ue + 1) * self.num_edges]
+    }
+
+    /// One UE's uplink-rate row.
+    #[inline]
+    pub fn rate_row(&self, ue: usize) -> &[f64] {
+        &self.rate_bps[ue * self.num_edges..(ue + 1) * self.num_edges]
+    }
+
     /// Recompute the table row of one UE in place — the mobility hot path:
     /// when an epoch moves a UE, only its N-row of gains/SNRs/rates
     /// changes. Uses the same expressions in the same order as
@@ -286,6 +305,19 @@ mod tests {
         assert_eq!(incremental.gain, reference.gain);
         assert_eq!(incremental.snr, reference.snr);
         assert_eq!(incremental.rate_bps, reference.rate_bps);
+    }
+
+    #[test]
+    fn row_accessors_match_scalar_lookups() {
+        let t = topo();
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        for n in [0usize, 7, 29] {
+            for m in 0..t.num_edges() {
+                assert_eq!(ch.gain_row(n)[m].to_bits(), ch.gain_of(n, m).to_bits());
+                assert_eq!(ch.snr_row(n)[m].to_bits(), ch.snr_of(n, m).to_bits());
+                assert_eq!(ch.rate_row(n)[m].to_bits(), ch.rate_of(n, m).to_bits());
+            }
+        }
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //! One scenario *instance* is a full protocol run over an evolving world:
 //!
 //! 1. sample a topology + channel from the instance seed;
-//! 2. associate the active UEs (any [`AssocStrategy`]) and build the
-//!    delay instance;
+//! 2. associate the active UEs (any [`AssocStrategy`]) — incrementally
+//!    via [`MaintainedAssociation`] under `assoc_resolve = "warm"`
+//!    (dirty-set reprocessing of the epoch's [`WorldDelta`]), or from
+//!    scratch under `"cold"`, with bitwise-identical maps either way —
+//!    and maintain the delay instance;
 //! 3. solve sub-problem I for (a, b) under the configured
 //!    [`OptimizerMode`] and ask the accuracy model how many cloud rounds
 //!    are still required;
@@ -24,7 +27,7 @@
 use std::time::Instant;
 
 use super::spec::{OptimizerMode, ResolveMode, ScenarioSpec};
-use crate::assoc::{self, Association, LatencyTable};
+use crate::assoc::{self, MaintainedAssociation, WorldDelta};
 use crate::config::AssocStrategy;
 use crate::delay::{self, cloud_rounds_int, DelayInstance, EdgeDelays, MaintainedInstance};
 use crate::net::{Channel, Position, Topology};
@@ -93,6 +96,15 @@ pub struct ScenarioOutcome {
     /// The (a, b) used by each executed epoch — the re-solve trajectory
     /// the warm/cold cross-check compares.
     pub ab_per_epoch: Vec<(u64, u64)>,
+    /// Wall-clock spent in per-epoch association (engine maintenance or
+    /// cold policy runs), cumulative. Measured, so *not* part of the
+    /// bitwise-determinism contract.
+    pub assoc_time_s: f64,
+    /// UEs whose association state was reprocessed, cumulative: the
+    /// dirty-set sizes under `assoc_resolve = "warm"` (full active
+    /// counts on merge/cold fallbacks), the full active count per epoch
+    /// under `"cold"`. Deterministic within one mode.
+    pub reassociations: u64,
 }
 
 /// Random-waypoint state: one target + speed per UE.
@@ -139,10 +151,19 @@ impl MobilityState {
     }
 
     /// Advance every active UE by `dt` seconds of travel, updating its
-    /// position and recomputing its channel row.
-    fn step(&mut self, dt: f64, active: &[bool], topo: &mut Topology, channel: &mut Channel) {
+    /// position and recomputing its channel row. Returns the UEs whose
+    /// rows were recomputed — the mobility part of the epoch's
+    /// [`WorldDelta`].
+    fn step(
+        &mut self,
+        dt: f64,
+        active: &[bool],
+        topo: &mut Topology,
+        channel: &mut Channel,
+    ) -> Vec<usize> {
+        let mut moved = Vec::new();
         if dt <= 0.0 {
-            return;
+            return moved;
         }
         for n in 0..topo.ues.len() {
             if !active[n] {
@@ -179,13 +200,17 @@ impl MobilityState {
             }
             topo.ues[n].pos = pos;
             channel.recompute_ue(&topo.params, &topo.ues[n], &topo.edges);
+            moved.push(n);
         }
+        moved
     }
 }
 
 /// One churn transition. Departures are Bernoulli per active UE; arrivals
 /// re-activate departed UEs (Poisson count) at fresh uniform positions,
 /// capped by total edge capacity so the association stays feasible.
+/// Returns the arrived and departed UE ids — the churn part of the
+/// epoch's [`WorldDelta`].
 fn churn_step(
     rng: &mut Rng,
     active: &mut [bool],
@@ -194,13 +219,13 @@ fn churn_step(
     arrival_rate: f64,
     departure_prob: f64,
     capacity_total: usize,
-) -> (Vec<usize>, u64) {
-    let mut departures = 0u64;
+) -> (Vec<usize>, Vec<usize>) {
+    let mut departed = Vec::new();
     if departure_prob > 0.0 {
-        for flag in active.iter_mut() {
+        for (n, flag) in active.iter_mut().enumerate() {
             if *flag && rng.f64() < departure_prob {
                 *flag = false;
-                departures += 1;
+                departed.push(n);
             }
         }
     }
@@ -224,32 +249,16 @@ fn churn_step(
         channel.recompute_ue(&topo.params, &topo.ues[pick], &topo.edges);
         arrived.push(pick);
     }
-    (arrived, departures)
+    (arrived, departed)
 }
 
-/// Channel table restricted to the active UEs (rows copied; subset index
-/// `i` maps to global id `ids[i]`).
-fn sub_channel(channel: &Channel, ids: &[usize]) -> Channel {
-    let m = channel.num_edges;
-    let mut gain = Vec::with_capacity(ids.len() * m);
-    let mut snr = Vec::with_capacity(ids.len() * m);
-    let mut rate = Vec::with_capacity(ids.len() * m);
-    for &id in ids {
-        gain.extend_from_slice(&channel.gain[id * m..(id + 1) * m]);
-        snr.extend_from_slice(&channel.snr[id * m..(id + 1) * m]);
-        rate.extend_from_slice(&channel.rate_bps[id * m..(id + 1) * m]);
-    }
-    Channel {
-        num_ues: ids.len(),
-        num_edges: m,
-        gain,
-        snr,
-        rate_bps: rate,
-    }
-}
-
-/// Associate the active UEs under the spec's strategy. Returns the
-/// serving edge per *global* UE id (`None` = inactive).
+/// Associate the active UEs under the spec's strategy — the cold path.
+/// Returns the serving edge per *global* UE id (`None` = inactive).
+///
+/// Policy strategies run `AssocPolicy::assign_cold` directly on the
+/// global channel (no more per-epoch sub-channel copy — at 100k UEs that
+/// copy alone was ~150 MB/epoch); random stays rng-driven so warm and
+/// cold modes consume the same stream.
 fn associate_active(
     strategy: AssocStrategy,
     topo: &Topology,
@@ -266,29 +275,18 @@ fn associate_active(
     if ids.is_empty() {
         return Ok(edge_of_global);
     }
-    let association: Association = match strategy {
-        AssocStrategy::Proposed => assoc::time_minimized(&sub_channel(channel, &ids), cap)?,
-        AssocStrategy::Greedy => assoc::greedy(&sub_channel(channel, &ids), cap)?,
-        AssocStrategy::Random => assoc::random(ids.len(), m, cap, rng)?,
-        AssocStrategy::Exact => {
-            // The canonical Fig. 5 objective, restricted to the active
-            // rows (mirrors `sub_channel` — build the full table with the
-            // shared formula, then slice).
-            let full = LatencyTable::build(topo, channel, provisional_a);
-            let mut lat = Vec::with_capacity(ids.len() * m);
-            for &id in &ids {
-                lat.extend_from_slice(&full.latency_s[id * m..(id + 1) * m]);
-            }
-            let table = LatencyTable {
-                num_ues: ids.len(),
-                num_edges: m,
-                latency_s: lat,
+    let assigned: Vec<usize> = match strategy {
+        AssocStrategy::Random => assoc::random(ids.len(), m, cap, rng)?.edge_of,
+        _ => {
+            let ctx = assoc::AssocCtx {
+                channel,
+                topo: Some(topo),
             };
-            assoc::solve_exact_matching(&table, cap)?
+            assoc::policy_for(strategy, provisional_a)?.assign_cold(&ctx, &ids, cap)?
         }
     };
     for (i, &id) in ids.iter().enumerate() {
-        edge_of_global[id] = Some(association.edge_of[i]);
+        edge_of_global[id] = Some(assigned[i]);
     }
     Ok(edge_of_global)
 }
@@ -488,6 +486,8 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         resolves: 0,
         cold_resolves: 0,
         ab_per_epoch: Vec::new(),
+        assoc_time_s: 0.0,
+        reassociations: 0,
     };
 
     let mut now = 0.0f64;
@@ -511,19 +511,54 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
     }
     let opts = SolveOptions::default();
     let mut maint: Option<MaintainedInstance> = None;
+    let mut massoc: Option<MaintainedAssociation> = None;
     let mut prev_int: Option<IntSolution> = None;
     let mut prev_cont: Option<Solution> = None;
+    // What the previous world-advance changed (empty on the first epoch)
+    // and the association last handed to the maintained delay instance —
+    // together they form the touched set for the delta-driven syncs.
+    let mut delta = WorldDelta::default();
+    let mut last_assoc: Vec<Option<usize>> = vec![None; n];
     loop {
-        // (1) Association for the current world.
-        let edge_of = associate_active(
-            base.assoc,
-            &topo,
-            &channel,
-            &active,
-            cap,
-            provisional_a,
-            &mut assoc_rng,
-        )?;
+        // (1) Association for the current world. Warm mode keeps the
+        // incremental engine alive across epochs and reprocesses only
+        // the delta's dirty set; cold mode re-runs the policy from
+        // scratch. The maps are bitwise-identical either way (see
+        // assoc/incremental.rs), so both modes share one trajectory.
+        let warm_assoc =
+            spec.assoc_resolve == ResolveMode::Warm && base.assoc != AssocStrategy::Random;
+        let t_assoc = Instant::now();
+        let edge_of = if warm_assoc {
+            if let Some(ma) = massoc.as_mut() {
+                ma.sync(&topo, &channel, &active, &delta, provisional_a)?;
+            } else {
+                massoc = Some(MaintainedAssociation::new(
+                    base.assoc,
+                    &topo,
+                    &channel,
+                    &active,
+                    cap,
+                    spec.assoc_hysteresis,
+                    provisional_a,
+                )?);
+            }
+            let ma = massoc.as_ref().expect("maintained association initialized above");
+            out.reassociations = ma.reassociations;
+            ma.edge_of_global()
+        } else {
+            let cold = associate_active(
+                base.assoc,
+                &topo,
+                &channel,
+                &active,
+                cap,
+                provisional_a,
+                &mut assoc_rng,
+            )?;
+            out.reassociations += active.iter().filter(|&&on| on).count() as u64;
+            cold
+        };
+        out.assoc_time_s += t_assoc.elapsed().as_secs_f64();
 
         // (2) Re-solve (a, b) for this epoch's world. Warm mode maintains
         // the delay instance in place (dirty-row deltas + cached τ
@@ -541,7 +576,16 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             (a, b, true)
         } else {
             if let Some(m) = maint.as_mut() {
-                m.sync(&topo, &channel, &edge_of);
+                // Delta-driven maintenance: the rows the epoch moved plus
+                // every UE whose serving edge changed since the last
+                // sync, instead of an O(N) re-derivation of all delays.
+                let mut touched = delta.touched();
+                for (ue, (prev, cur)) in last_assoc.iter().zip(edge_of.iter()).enumerate() {
+                    if prev != cur {
+                        touched.push(ue);
+                    }
+                }
+                m.sync_delta(&topo, &channel, &edge_of, &touched);
             } else {
                 maint = Some(MaintainedInstance::build(&topo, &channel, &edge_of, base.eps));
             }
@@ -553,6 +597,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         if cold {
             out.cold_resolves += 1;
         }
+        last_assoc.clone_from(&edge_of);
         let inst: &DelayInstance = match cold_inst.as_ref() {
             Some(built) => built,
             None => maint.as_ref().expect("warm mode keeps it").instance(),
@@ -621,12 +666,14 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             break;
         }
 
-        // (4) Advance the world for the next epoch.
+        // (4) Advance the world for the next epoch, capturing what moved
+        // as the delta the incremental association + delay paths consume.
+        delta = WorldDelta::default();
         if spec.dynamics.mobility_enabled() {
-            mobility.step(dt, &active, &mut topo, &mut channel);
+            delta.moved = mobility.step(dt, &active, &mut topo, &mut channel);
         }
         if spec.dynamics.churn_enabled() {
-            let (arrived, departures) = churn_step(
+            let (arrived, departed) = churn_step(
                 &mut churn_rng,
                 &mut active,
                 &mut topo,
@@ -635,12 +682,14 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                 spec.dynamics.departure_prob,
                 capacity_total,
             );
-            out.departures += departures;
+            out.departures += departed.len() as u64;
             out.arrivals += arrived.len() as u64;
-            for id in arrived {
+            for &id in &arrived {
                 mobility.respawn(id);
                 prev_edge[id] = None; // re-joining is not a handover
             }
+            delta.arrived = arrived;
+            delta.departed = departed;
         }
     }
     out.makespan_s = now;

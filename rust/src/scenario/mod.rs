@@ -10,8 +10,11 @@
 //!   **dynamics** block;
 //! * [`dynamics`] — the epoch engine: random-waypoint mobility (position
 //!   updates → incremental channel recompute), Poisson churn, per-epoch
-//!   handover re-association and an **incremental (a, b) re-solve** (the
-//!   delay instance is maintained in place across epochs and the solver
+//!   handover re-association — **incremental** via
+//!   `assoc::MaintainedAssociation` (`assoc_resolve = "warm" | "cold"`,
+//!   dirty-set reprocessing of only the UEs the epoch touched, bitwise-
+//!   equal maps) — and an **incremental (a, b) re-solve** (the delay
+//!   instance is maintained in place across epochs and the solver
 //!   warm-starts from the previous optimum; `resolve = "warm" | "cold"`),
 //!   with the makespan accruing bit-exactly across epochs through `sim/`;
 //! * [`runner`] — a sharded work-stealing batch executor that runs

@@ -90,6 +90,11 @@ pub struct BatchReport {
     pub ue_barrier_wait_s: SummaryStat,
     /// Per-instance cumulative (a, b) re-solve wall time (seconds).
     pub resolve_time_s: SummaryStat,
+    /// Per-instance cumulative association wall time (seconds).
+    pub assoc_time_s: SummaryStat,
+    /// Per-instance cumulative reprocessed-UE counts (the incremental
+    /// association engine's work metric).
+    pub reassociations: SummaryStat,
 }
 
 fn column<F: Fn(&ScenarioOutcome) -> f64>(outcomes: &[ScenarioOutcome], f: F) -> SummaryStat {
@@ -118,6 +123,8 @@ impl BatchReport {
             tau_max_s: column(outcomes, |o| o.tau_max_s),
             ue_barrier_wait_s: column(outcomes, |o| o.ue_barrier_wait_s),
             resolve_time_s: column(outcomes, |o| o.resolve_time_s),
+            assoc_time_s: column(outcomes, |o| o.assoc_time_s),
+            reassociations: column(outcomes, |o| o.reassociations as f64),
         }
     }
 
@@ -137,6 +144,8 @@ impl BatchReport {
             ("tau_max_s", self.tau_max_s.to_json()),
             ("ue_barrier_wait_s", self.ue_barrier_wait_s.to_json()),
             ("resolve_time_s", self.resolve_time_s.to_json()),
+            ("assoc_time_s", self.assoc_time_s.to_json()),
+            ("reassociations", self.reassociations.to_json()),
         ];
         if let Some(spec) = spec {
             fields.insert(0, ("spec", Json::str(&spec.summary())));
@@ -175,6 +184,8 @@ impl BatchReport {
         row("dropped_uploads", &self.dropped_uploads);
         row("ue_wait_s", &self.ue_barrier_wait_s);
         row("resolve_s", &self.resolve_time_s);
+        row("assoc_s", &self.assoc_time_s);
+        row("reassociations", &self.reassociations);
     }
 }
 
@@ -200,6 +211,8 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             "resolve_time_s",
             "resolves",
             "cold_resolves",
+            "assoc_time_s",
+            "reassociations",
         ],
     );
     for o in outcomes {
@@ -220,6 +233,8 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             o.resolve_time_s,
             o.resolves as f64,
             o.cold_resolves as f64,
+            o.assoc_time_s,
+            o.reassociations as f64,
         ]);
     }
 }
@@ -252,6 +267,8 @@ mod tests {
             resolves: 1,
             cold_resolves: 1,
             ab_per_epoch: vec![(10, 3)],
+            assoc_time_s: 0.0,
+            reassociations: 1,
         }
     }
 

@@ -177,7 +177,7 @@ impl Default for BatchSpec {
 
 /// A complete declarative scenario: what to run, how it evolves over
 /// time, what can fail, and how wide to fan out.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ScenarioSpec {
     /// Topology/channel/learning constants + association + eps + seed
     /// (the batch *base* seed; instances derive their own).
@@ -185,9 +185,34 @@ pub struct ScenarioSpec {
     pub optimizer: OptimizerMode,
     /// Per-epoch (a, b) re-solve strategy (warm-started vs from-scratch).
     pub resolve: ResolveMode,
+    /// Per-epoch re-association strategy: `Warm` maintains the
+    /// association incrementally (`assoc::MaintainedAssociation`,
+    /// dirty-set reprocessing, bitwise-equal maps), `Cold` re-runs the
+    /// policy from scratch every epoch (the pre-incremental baseline).
+    pub assoc_resolve: ResolveMode,
+    /// Load-drift fraction of the edge capacity beyond which the warm
+    /// association engine re-scores an edge's members (output-neutral
+    /// under the paper's load-independent metric; bounds cache staleness
+    /// for load-coupled scoring extensions).
+    pub assoc_hysteresis: f64,
     pub failure: FailureSpec,
     pub dynamics: DynamicsSpec,
     pub batch: BatchSpec,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            base: Scenario::default(),
+            optimizer: OptimizerMode::default(),
+            resolve: ResolveMode::default(),
+            assoc_resolve: ResolveMode::default(),
+            assoc_hysteresis: 0.25,
+            failure: FailureSpec::default(),
+            dynamics: DynamicsSpec::default(),
+            batch: BatchSpec::default(),
+        }
+    }
 }
 
 impl ScenarioSpec {
@@ -230,6 +255,20 @@ impl ScenarioSpec {
     /// Per-epoch re-solve strategy (warm = seed from previous optimum).
     pub fn resolve(mut self, mode: ResolveMode) -> Self {
         self.resolve = mode;
+        self
+    }
+
+    /// Per-epoch re-association strategy (warm = maintained incremental
+    /// engine, cold = from-scratch policy run; identical maps).
+    pub fn assoc_resolve(mut self, mode: ResolveMode) -> Self {
+        self.assoc_resolve = mode;
+        self
+    }
+
+    /// Warm-association hysteresis: load-drift fraction of the capacity
+    /// that triggers member re-scoring.
+    pub fn assoc_hysteresis(mut self, h: f64) -> Self {
+        self.assoc_hysteresis = h;
         self
     }
 
@@ -345,6 +384,12 @@ impl ScenarioSpec {
         if let Some(s) = doc.str("optimizer", "resolve") {
             self.resolve = ResolveMode::parse(s)?;
         }
+        if let Some(s) = doc.str("optimizer", "assoc_resolve") {
+            self.assoc_resolve = ResolveMode::parse(s)?;
+        }
+        if let Some(v) = doc.f64("optimizer", "assoc_hysteresis") {
+            self.assoc_hysteresis = v;
+        }
         // [batch]
         if let Some(v) = doc.i64("batch", "instances") {
             self.batch.instances = v.max(1) as usize;
@@ -386,6 +431,12 @@ impl ScenarioSpec {
         }
         if let Some(s) = args.str("resolve") {
             self.resolve = ResolveMode::parse(&s).map_err(CliError)?;
+        }
+        if let Some(s) = args.str("assoc-resolve") {
+            self.assoc_resolve = ResolveMode::parse(&s).map_err(CliError)?;
+        }
+        if let Some(v) = args.get::<f64>("assoc-hysteresis")? {
+            self.assoc_hysteresis = v;
         }
         if let Some(v) = args.get::<usize>("instances")? {
             self.batch.instances = v.max(1);
@@ -442,6 +493,12 @@ impl ScenarioSpec {
         if self.batch.instances == 0 {
             return Err("batch.instances must be >= 1".into());
         }
+        if self.assoc_hysteresis.is_nan() || self.assoc_hysteresis < 0.0 {
+            return Err(format!(
+                "assoc_hysteresis must be >= 0, got {}",
+                self.assoc_hysteresis
+            ));
+        }
         Ok(())
     }
 
@@ -457,13 +514,15 @@ impl ScenarioSpec {
             "static".to_string()
         };
         format!(
-            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, jitter={}, dropout={}, {}",
+            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}, \
+             jitter={}, dropout={}, {}",
             self.base.num_edges,
             self.base.num_ues,
             self.base.eps,
             self.base.assoc.name(),
             self.optimizer.name(),
             self.resolve.name(),
+            self.assoc_resolve.name(),
             self.failure.jitter_sigma,
             self.failure.dropout_prob,
             dynamics
@@ -622,6 +681,39 @@ shards = 8
             OptimizerMode::Integer
         );
         assert!(OptimizerMode::parse("magic").is_err());
+    }
+
+    #[test]
+    fn assoc_resolve_knob_toml_cli_builder() {
+        // Defaults: warm engine, 0.25 hysteresis.
+        let d = ScenarioSpec::default();
+        assert_eq!(d.assoc_resolve, ResolveMode::Warm);
+        assert!((d.assoc_hysteresis - 0.25).abs() < 1e-12);
+        // TOML.
+        let spec = ScenarioSpec::parse_toml(
+            r#"
+[optimizer]
+assoc_resolve = "cold"
+assoc_hysteresis = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.assoc_resolve, ResolveMode::Cold);
+        assert!((spec.assoc_hysteresis - 0.5).abs() < 1e-12);
+        // CLI overrides.
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args("scenario --assoc-resolve cold --assoc-hysteresis 1.5"))
+            .unwrap();
+        assert_eq!(spec.assoc_resolve, ResolveMode::Cold);
+        assert!((spec.assoc_hysteresis - 1.5).abs() < 1e-12);
+        assert!(spec.summary().contains("assoc_resolve=cold"));
+        // Builder + validation.
+        let spec = ScenarioSpec::new()
+            .assoc_resolve(ResolveMode::Warm)
+            .assoc_hysteresis(0.0);
+        spec.validate().unwrap();
+        assert!(ScenarioSpec::new().assoc_hysteresis(-1.0).validate().is_err());
+        assert!(ScenarioSpec::new().assoc_hysteresis(f64::NAN).validate().is_err());
     }
 
     #[test]

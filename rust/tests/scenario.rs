@@ -144,11 +144,12 @@ fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
             x.edge_barrier_wait_s.to_bits(),
             y.edge_barrier_wait_s.to_bits()
         );
-        // Re-solve bookkeeping is deterministic too — all but the
-        // measured wall time (resolve_time_s).
+        // Re-solve and re-association bookkeeping is deterministic too —
+        // all but the measured wall times (resolve_time_s/assoc_time_s).
         assert_eq!(x.ab_per_epoch, y.ab_per_epoch);
         assert_eq!(x.resolves, y.resolves);
         assert_eq!(x.cold_resolves, y.cold_resolves);
+        assert_eq!(x.reassociations, y.reassociations);
     }
 }
 
@@ -180,6 +181,56 @@ fn dynamic_instance_is_deterministic_and_does_dynamics() {
     assert!(a.departures > 0, "churn must fire");
     // Dropout at 5% across hundreds of UE-round uploads.
     assert!(a.dropped_uploads > 0, "dropout must fire");
+    // The incremental association engine scored the full fleet at least
+    // once (the first epoch) and its bookkeeping is deterministic.
+    assert!(a.reassociations >= 40, "first epoch scores everyone");
+    assert_eq!(a.reassociations, b.reassociations);
+}
+
+#[test]
+fn warm_assoc_reproduces_cold_trajectory() {
+    // The incremental association engine must hand the epoch loop maps
+    // bitwise-identical to the from-scratch policy runs, for every
+    // strategy, so warm and cold runs share one trajectory.
+    for strategy in [
+        AssocStrategy::Proposed,
+        AssocStrategy::Greedy,
+        AssocStrategy::Random,
+    ] {
+        for seed in [5u64, 31] {
+            let warm = run_instance(
+                &dynamic_spec().assoc(strategy).assoc_resolve(ResolveMode::Warm),
+                seed,
+            )
+            .unwrap();
+            let cold = run_instance(
+                &dynamic_spec().assoc(strategy).assoc_resolve(ResolveMode::Cold),
+                seed,
+            )
+            .unwrap();
+            assert_eq!(warm.ab_per_epoch, cold.ab_per_epoch, "{strategy:?} seed {seed}");
+            assert_eq!(warm.makespan_s.to_bits(), cold.makespan_s.to_bits());
+            assert_eq!(warm.closed_form_s.to_bits(), cold.closed_form_s.to_bits());
+            assert_eq!(warm.handovers, cold.handovers);
+            assert_eq!(warm.rounds, cold.rounds);
+            assert_eq!(warm.epochs, cold.epochs);
+        }
+    }
+    // The latency-keyed exact policy re-runs cold inside the warm engine;
+    // the trajectories still agree bit for bit.
+    let spec = ScenarioSpec::new()
+        .edges(2)
+        .ues(12)
+        .eps(0.25)
+        .mobility(1.0, 3.0)
+        .churn(0.5, 0.05)
+        .epoch_rounds(1)
+        .max_epochs(16)
+        .assoc(AssocStrategy::Exact);
+    let warm = run_instance(&spec.clone().assoc_resolve(ResolveMode::Warm), 9).unwrap();
+    let cold = run_instance(&spec.assoc_resolve(ResolveMode::Cold), 9).unwrap();
+    assert_eq!(warm.ab_per_epoch, cold.ab_per_epoch);
+    assert_eq!(warm.makespan_s.to_bits(), cold.makespan_s.to_bits());
 }
 
 #[test]
