@@ -17,7 +17,8 @@ stub is an error: it means the real bench run did not happen.
 
 Usage:
   python3 python/check_bench.py --baseline-dir .bench_baselines \
-      BENCH_resolve.json BENCH_assoc.json BENCH_scenario.json
+      BENCH_resolve.json BENCH_assoc.json BENCH_scenario.json \
+      BENCH_hetero.json
   python3 python/check_bench.py --self-test
 """
 
@@ -118,9 +119,37 @@ def self_test() -> int:
         "generated": True,
         "rows": [{"name": "static", "instances_per_s": 10.0}],
     }
+    # BENCH_hetero.json shape: one gated speedup ratio, a throughput info
+    # row and plain scalar quality rows (participation) that never gate.
+    hetero = {
+        "bench": "hetero_scenario",
+        "generated": True,
+        "rows": [
+            {"name": "hetero 50k world", "instances_per_s": 0.5},
+            {"name": "hetero participation", "value": 0.93},
+            {"name": "hetero assoc warm speedup", "value": 4.0},
+        ],
+    }
+    hetero_slow_world = {
+        "bench": "hetero_scenario",
+        "generated": True,
+        "rows": [
+            {"name": "hetero 50k world", "instances_per_s": 0.05},
+            {"name": "hetero participation", "value": 0.2},
+            {"name": "hetero assoc warm speedup", "value": 4.0},
+        ],
+    }
+    hetero_slow_speedup = {
+        "bench": "hetero_scenario",
+        "generated": True,
+        "rows": [{"name": "hetero assoc warm speedup", "value": 1.0}],
+    }
     assert metrics_of(good) == {"s speedup": 10.0}
     assert metrics_of(thr) == {}  # raw throughput is not gated...
     assert info_metrics_of(thr) == {"static": 100.0}  # ...only reported
+    assert metrics_of(hetero) == {"hetero assoc warm speedup": 4.0}
+    assert compare(hetero, hetero_slow_world, 0.25)[0] == []  # quality/throughput: info only
+    assert compare(hetero, hetero_slow_speedup, 0.25)[0] != []  # 4x -> 1x ratio drop fails
     assert compare(stub, good, 0.25)[0] == []  # stub baseline skips
     assert compare(good, good, 0.25)[0] == []  # equal passes
     assert compare(good, slow, 0.25)[0] == []  # within tolerance passes

@@ -1,0 +1,231 @@
+//! Heterogeneous device classes + edge outages + deadline aggregation,
+//! end to end on the `configs/scenario_hetero.toml` workload (50k UEs x
+//! 32 edges, three device classes, ~15% per-epoch edge failures, finite
+//! aggregation deadline).
+//!
+//!   cargo bench --bench hetero_scenario           # full workload
+//!   cargo bench --bench hetero_scenario -- --test # CI smoke (same 50k
+//!                                                 # world, 1 instance,
+//!                                                 # 2 epochs; baselines
+//!                                                 # untouched)
+//!
+//! Stages:
+//!
+//! * **generalization**: identity-class spec == plain spec, bitwise, on
+//!   a small dynamic world (the strict-generalization guard, asserted
+//!   before any timing);
+//! * **cross-check**: warm vs cold assoc/resolve trajectories on a
+//!   shrunken hetero+outage world — identical (a*, b*) sequences and
+//!   bitwise-equal makespans;
+//! * **world**: the 50k-UE heterogeneous outage world end to end,
+//!   timed; asserts outages fired and participation is partial but
+//!   nonzero. Full mode rewrites `BENCH_hetero.json` (from the repo
+//!   root: `cargo bench --manifest-path rust/Cargo.toml --bench
+//!   hetero_scenario`).
+
+use std::time::Instant;
+
+use hfl::config::Args;
+use hfl::net::DeviceClassSpec;
+use hfl::scenario::{run_batch, run_instance, BatchReport, ResolveMode, ScenarioSpec};
+use hfl::util::bench::{section, short_mode};
+use hfl::util::json::Json;
+
+/// Load the checked-in hetero spec (repo root or rust/ cwd). A present-
+/// but-broken TOML is fatal — silently falling back to the inline shape
+/// would let the two drift apart and gate BENCH_hetero.json against a
+/// different world than the one documented. The inline fallback only
+/// covers cwds where the config genuinely is not checked out.
+fn hetero_spec() -> ScenarioSpec {
+    for path in [
+        "configs/scenario_hetero.toml",
+        "../configs/scenario_hetero.toml",
+    ] {
+        if std::path::Path::new(path).exists() {
+            return ScenarioSpec::load(Some(path), &Args::default())
+                .unwrap_or_else(|e| panic!("load {path}: {e}"));
+        }
+    }
+    let mut spec = ScenarioSpec::new()
+        .edges(32)
+        .ues(50_000)
+        .eps(0.25)
+        .seed(42)
+        .devices(
+            DeviceClassSpec::parse(
+                "flagship:0.3:1.0:1.0:1.0, mid:0.5:0.5:0.8:1.0, iot:0.2:0.08:0.4:1.5",
+            )
+            .expect("inline device classes"),
+        )
+        .deadline(8.0)
+        .outage(0.15, 0.5)
+        .churn(100.0, 0.002)
+        .epoch_rounds(1)
+        .max_epochs(6)
+        .instances(2);
+    spec.base.system.edge_bandwidth_hz = 2.0e9;
+    spec.base.system.ue_bandwidth_hz = 1.0e6;
+    spec
+}
+
+fn main() {
+    let short = short_mode();
+
+    section("generalization: identity class + no outage + no deadline == plain, bitwise");
+    let plain = ScenarioSpec::new()
+        .edges(3)
+        .ues(36)
+        .eps(0.1)
+        .seed(13)
+        .mobility(1.0, 4.0)
+        .churn(1.0, 0.05)
+        .epoch_rounds(1)
+        .max_epochs(24);
+    let identity = plain
+        .clone()
+        .device_class("only", 1.0, 1.0, 1.0, 1.0)
+        .outage(0.0, 0.0)
+        .deadline(f64::INFINITY);
+    let a = run_instance(&plain, 9).expect("plain instance");
+    let b = run_instance(&identity, 9).expect("identity instance");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "strict generalization broke");
+    assert_eq!(a.ab_per_epoch, b.ab_per_epoch);
+    assert_eq!(a.events, b.events);
+    println!("identity spec reproduces the homogeneous trajectory bitwise");
+
+    section("cross-check: warm vs cold on a shrunken hetero+outage world");
+    let mut small = hetero_spec()
+        .ues(4_000)
+        .edges(8)
+        .max_epochs(if short { 3 } else { 5 })
+        .instances(if short { 1 } else { 2 })
+        .shards(1);
+    small.base.system.edge_bandwidth_hz = 1.0e9; // cap 1000/edge, 8k total
+    let warm_batch = run_batch(
+        &small
+            .clone()
+            .resolve(ResolveMode::Warm)
+            .assoc_resolve(ResolveMode::Warm),
+    )
+    .expect("warm batch");
+    let cold_batch = run_batch(
+        &small
+            .clone()
+            .resolve(ResolveMode::Cold)
+            .assoc_resolve(ResolveMode::Cold),
+    )
+    .expect("cold batch");
+    for (w, c) in warm_batch.outcomes.iter().zip(&cold_batch.outcomes) {
+        assert_eq!(w.ab_per_epoch, c.ab_per_epoch, "hetero warm diverged from cold");
+        assert_eq!(w.makespan_s.to_bits(), c.makespan_s.to_bits());
+        assert_eq!(w.outages, c.outages);
+        assert_eq!(w.late_uploads, c.late_uploads);
+    }
+    println!(
+        "warm == cold on {} hetero instances (outages: {:?})",
+        warm_batch.outcomes.len(),
+        warm_batch.outcomes.iter().map(|o| o.outages).collect::<Vec<_>>()
+    );
+    section("world: 50k-UE heterogeneous outage world, end to end");
+    let spec = hetero_spec()
+        .max_epochs(if short { 2 } else { 6 })
+        .instances(if short { 1 } else { 2 });
+    println!("spec: [{}]", spec.summary());
+    let t0 = Instant::now();
+    let batch = run_batch(&spec).expect("hetero batch");
+    let wall = t0.elapsed().as_secs_f64();
+    let report = BatchReport::from_outcomes(&batch.outcomes);
+    let ips = batch.outcomes.len() as f64 / wall;
+    println!(
+        "{} instances in {wall:.2}s on {} shards ({ips:.2} instances/s)",
+        batch.outcomes.len(),
+        batch.shards
+    );
+    println!(
+        "participation mean {:.4}  outages mean {:.1}  late mean {:.0}  epochs mean {:.1}",
+        report.participation_rate.mean,
+        report.outages.mean,
+        report.late_uploads.mean,
+        report.epochs.mean
+    );
+    for o in &batch.outcomes {
+        assert!(o.outages > 0, "an outage-heavy world must fail edges");
+        assert!(
+            o.participation_rate > 0.0 && o.participation_rate <= 1.0,
+            "participation out of range: {}",
+            o.participation_rate
+        );
+        assert!(o.makespan_s.is_finite() && o.makespan_s > 0.0);
+    }
+    println!("BENCH_JSON {{\"name\":\"hetero 50k world\",\"instances_per_s\":{ips:.4}}}");
+    println!(
+        "BENCH_JSON {{\"name\":\"hetero participation\",\"value\":{:.4}}}",
+        report.participation_rate.mean
+    );
+
+    if short {
+        println!("\nshort mode: BENCH_hetero.json left untouched");
+        return;
+    }
+
+    section("baseline: cold association on the same 50k world (full mode only)");
+    let cold50 = run_batch(&spec.clone().assoc_resolve(ResolveMode::Cold)).expect("cold 50k");
+    for (w, c) in batch.outcomes.iter().zip(&cold50.outcomes) {
+        assert_eq!(w.ab_per_epoch, c.ab_per_epoch, "50k warm diverged from cold");
+        assert_eq!(w.makespan_s.to_bits(), c.makespan_s.to_bits());
+        assert_eq!(w.outages, c.outages);
+    }
+    let warm_assoc_s: f64 = batch.outcomes.iter().map(|o| o.assoc_time_s).sum();
+    let cold_assoc_s: f64 = cold50.outcomes.iter().map(|o| o.assoc_time_s).sum();
+    let assoc_speedup = cold_assoc_s / warm_assoc_s.max(1e-9);
+    println!(
+        "assoc wall at 50k: cold {cold_assoc_s:.3}s  warm {warm_assoc_s:.3}s  \
+         speedup {assoc_speedup:.1}x"
+    );
+    assert!(
+        assoc_speedup >= 1.0,
+        "acceptance: warm association must not lose to cold on the 50k outage world, \
+         got {assoc_speedup:.2}x"
+    );
+    println!("BENCH_JSON {{\"name\":\"hetero assoc warm speedup\",\"value\":{assoc_speedup:.2}}}");
+    let json = Json::obj(vec![
+        ("bench", Json::str("hetero_scenario")),
+        ("generated", Json::Bool(true)),
+        ("command", Json::str("cargo bench --bench hetero_scenario")),
+        (
+            "workload",
+            Json::str(
+                "configs/scenario_hetero.toml: 32 edges x 50k UEs, 3 device classes, \
+                 outage 0.15/0.5, deadline 8s, churn 100/0.002",
+            ),
+        ),
+        (
+            "rows",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("hetero 50k world")),
+                    ("instances_per_s", Json::num(ips)),
+                    ("instances", Json::num(batch.outcomes.len() as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("hetero participation")),
+                    ("value", Json::num(report.participation_rate.mean)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("hetero outages per instance")),
+                    ("value", Json::num(report.outages.mean)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("hetero assoc warm speedup")),
+                    ("value", Json::num(assoc_speedup)),
+                    ("target", Json::num(1.0)),
+                ]),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_hetero.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

@@ -17,6 +17,7 @@ pub fn greedy(channel: &Channel, cap: usize) -> Result<Association, String> {
     let ctx = AssocCtx {
         channel,
         topo: None,
+        edge_up: None,
     };
     let edge_of = GreedyPolicy.assign_cold(&ctx, &ids, cap)?;
     let assoc = Association::new(edge_of, channel.num_edges);

@@ -56,10 +56,16 @@ use crate::net::{Channel, Topology};
 
 /// Read-only world view the policies score against. `topo` is only
 /// required by the latency-keyed policies (exact / B&B); the SNR-keyed
-/// ones run from the channel alone.
+/// ones run from the channel alone. `edge_up` is the outage mask:
+/// `Some(mask)` excludes down edges from every assignment (their links
+/// are skipped by the sweeps / poisoned to +∞ latency), `None` means all
+/// edges serve. Scores themselves never change with the mask — only
+/// availability does — which is what keeps the warm engine's cached
+/// candidate rows valid across outage transitions.
 pub struct AssocCtx<'a> {
     pub channel: &'a Channel,
     pub topo: Option<&'a Topology>,
+    pub edge_up: Option<&'a [bool]>,
 }
 
 /// One association strategy behind a common scoring core. Higher score =
@@ -127,6 +133,74 @@ fn check_feasible(k: usize, m: usize, cap: usize) -> Result<(), String> {
     Ok(())
 }
 
+/// [`check_feasible`] against the outage mask: only up edges carry load.
+fn check_feasible_masked(
+    k: usize,
+    m: usize,
+    edge_up: Option<&[bool]>,
+    cap: usize,
+) -> Result<(), String> {
+    match edge_up {
+        None => check_feasible(k, m, cap),
+        Some(mask) => {
+            let up = mask.iter().filter(|&&u| u).count();
+            if k > up * cap {
+                return Err(format!(
+                    "infeasible: {k} UEs > {up} up edges (of {m}) x capacity {cap}"
+                ));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Is edge `e` serving under the (optional) outage mask?
+#[inline]
+fn edge_is_up(edge_up: Option<&[bool]>, e: usize) -> bool {
+    match edge_up {
+        None => true,
+        Some(mask) => mask[e],
+    }
+}
+
+/// Guard for the latency-keyed solvers under an outage mask: the +∞
+/// poisoning of down edges excludes them whenever any *finite* link
+/// exists, but a UE whose rate to every up edge is 0 (the degenerate
+/// zero-bandwidth channel) has ∞ latency everywhere, and at threshold ∞
+/// the min-max matching may route through a down edge. Fail loudly
+/// instead of silently serving from a failed edge.
+fn check_assignment_up(
+    edge_up: Option<&[bool]>,
+    edge_of: &[usize],
+    solver: &str,
+) -> Result<(), String> {
+    if let Some(mask) = edge_up {
+        if let Some(&bad) = edge_of.iter().find(|&&e| !mask[e]) {
+            return Err(format!(
+                "{solver} routed a UE to down edge {bad}: every up-edge link is ∞-latency \
+                 (degenerate channel) — no finite masked assignment exists"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// First serving edge of a score-sorted candidate row — the cached
+/// argmax the proposed fast path keys on. With every edge down (only
+/// reachable on an infeasible world the caller already rejected) it
+/// degrades to the raw row head.
+#[inline]
+fn first_up(row: &[u16], edge_up: Option<&[bool]>) -> u16 {
+    match edge_up {
+        None => row[0],
+        Some(mask) => row
+            .iter()
+            .copied()
+            .find(|&e| mask[e as usize])
+            .unwrap_or(row[0]),
+    }
+}
+
 fn check_edge_width(m: usize) -> Result<(), String> {
     if m > u16::MAX as usize {
         return Err(format!("{m} edges exceed the u16 candidate-row width"));
@@ -190,17 +264,22 @@ impl Ord for Head {
 /// surfaces on a non-full edge), without materializing the O(U·M) pair
 /// list. `row_of[i]` is the row number of `ids[i]` inside `rows` (stride
 /// `num_edges`); `score` re-derives a head's key (the shared scoring
-/// core, so cached and fresh rows see identical keys).
+/// core, so cached and fresh rows see identical keys). A down edge
+/// (`edge_up`) is treated exactly like a full one — skipping its pairs
+/// from the global sweep, which is the same assignment the sweep would
+/// produce on a world without that edge (removing pairs from a sorted
+/// list preserves the relative order of the rest).
 fn merge_assign(
     ids: &[usize],
     rows: &[u16],
     row_of: &[usize],
     num_edges: usize,
     cap: usize,
+    edge_up: Option<&[bool]>,
     score: &dyn Fn(usize, usize) -> f64,
 ) -> Result<Vec<usize>, String> {
     let k = ids.len();
-    check_feasible(k, num_edges, cap)?;
+    check_feasible_masked(k, num_edges, edge_up, cap)?;
     let mut edge_of = vec![usize::MAX; k];
     let mut load = vec![0usize; num_edges];
     let mut heap: BinaryHeap<Head> = BinaryHeap::with_capacity(k);
@@ -217,7 +296,7 @@ fn merge_assign(
         let i = h.ue as usize;
         let row = &rows[row_of[i] * num_edges..row_of[i] * num_edges + num_edges];
         let e = row[h.cursor as usize] as usize;
-        if load[e] < cap {
+        if edge_is_up(edge_up, e) && load[e] < cap {
             edge_of[i] = e;
             load[e] += 1;
             assigned += 1;
@@ -248,16 +327,18 @@ type RankVisitor<'a> = dyn FnMut(usize) -> bool + 'a;
 /// Per-edge sequential selection: edge 0 takes its best `cap` eligible
 /// UEs, then edge 1, … — the greedy baseline's shared assignment core.
 /// `for_each_ranked(e, visit)` must feed edge `e`'s UE ranking (global
-/// ids, best first) to `visit` until it returns `false`.
+/// ids, best first) to `visit` until it returns `false`. A down edge
+/// (`edge_up`) takes nothing — identical to removing it from the walk.
 fn edgewise_take(
     ids: &[usize],
     n_total: usize,
     num_edges: usize,
     cap: usize,
+    edge_up: Option<&[bool]>,
     for_each_ranked: &mut dyn FnMut(usize, &mut RankVisitor),
 ) -> Result<Vec<usize>, String> {
     let k = ids.len();
-    check_feasible(k, num_edges, cap)?;
+    check_feasible_masked(k, num_edges, edge_up, cap)?;
     let mut edge_of_g = vec![usize::MAX; n_total];
     let mut eligible = vec![false; n_total];
     for &ue in ids {
@@ -267,6 +348,9 @@ fn edgewise_take(
     for e in 0..num_edges {
         if remaining == 0 {
             break;
+        }
+        if !edge_is_up(edge_up, e) {
+            continue;
         }
         let mut taken = 0usize;
         let mut visit = |ue: usize| -> bool {
@@ -290,7 +374,10 @@ fn edgewise_take(
 }
 
 /// Latency table restricted to `ids`, built with the exact expressions of
-/// [`LatencyTable::build`] so subset and full tables agree bitwise.
+/// [`LatencyTable::build`] so subset and full tables agree bitwise. Down
+/// edges (outage mask) are poisoned to +∞ latency: the min-max threshold
+/// search and the B&B bound both refuse an ∞ link whenever a finite
+/// assignment exists, which the masked feasibility check guarantees.
 fn subset_latency_table(ctx: &AssocCtx, a: f64, ids: &[usize]) -> Result<LatencyTable, String> {
     let topo = ctx
         .topo
@@ -301,7 +388,11 @@ fn subset_latency_table(ctx: &AssocCtx, a: f64, ids: &[usize]) -> Result<Latency
         let u = &topo.ues[ue];
         let t_cmp = ue_compute_time(u);
         for e in 0..m {
-            lat.push(a * t_cmp + u.model_bits / ctx.channel.rate_of(ue, e));
+            if edge_is_up(ctx.edge_up, e) {
+                lat.push(a * t_cmp + u.model_bits / ctx.channel.rate_of(ue, e));
+            } else {
+                lat.push(f64::INFINITY);
+            }
         }
     }
     Ok(LatencyTable {
@@ -327,7 +418,7 @@ impl AssocPolicy for ProposedPolicy {
 
     fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
         let m = ctx.channel.num_edges;
-        check_feasible(ids.len(), m, cap)?;
+        check_feasible_masked(ids.len(), m, ctx.edge_up, cap)?;
         check_edge_width(m)?;
         let mut rows = vec![0u16; ids.len() * m];
         let mut scratch = Vec::with_capacity(m);
@@ -335,7 +426,9 @@ impl AssocPolicy for ProposedPolicy {
             fill_candidate_row(self, ctx, ue, &mut scratch, &mut rows[i * m..(i + 1) * m]);
         }
         let row_of: Vec<usize> = (0..ids.len()).collect();
-        merge_assign(ids, &rows, &row_of, m, cap, &|ue, e| self.score(ctx, ue, e))
+        merge_assign(ids, &rows, &row_of, m, cap, ctx.edge_up, &|ue, e| {
+            self.score(ctx, ue, e)
+        })
     }
 }
 
@@ -356,7 +449,7 @@ impl AssocPolicy for GreedyPolicy {
     fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
         let m = ctx.channel.num_edges;
         let k = ids.len();
-        check_feasible(k, m, cap)?;
+        check_feasible_masked(k, m, ctx.edge_up, cap)?;
         let mut scores = vec![0.0f64; k * m];
         let mut scratch = Vec::with_capacity(m);
         for (i, &ue) in ids.iter().enumerate() {
@@ -381,7 +474,7 @@ impl AssocPolicy for GreedyPolicy {
                 }
             }
         };
-        edgewise_take(ids, n_total, m, cap, &mut feed)
+        edgewise_take(ids, n_total, m, cap, ctx.edge_up, &mut feed)
     }
 }
 
@@ -398,8 +491,10 @@ impl AssocPolicy for ExactMatchingPolicy {
     }
 
     fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        check_feasible_masked(ids.len(), ctx.channel.num_edges, ctx.edge_up, cap)?;
         let table = subset_latency_table(ctx, self.a, ids)?;
         let assoc = super::solve_exact_matching(&table, cap)?;
+        check_assignment_up(ctx.edge_up, &assoc.edge_of, "exact matching")?;
         Ok(assoc.edge_of)
     }
 }
@@ -417,8 +512,10 @@ impl AssocPolicy for BnbPolicy {
     }
 
     fn assign_cold(&self, ctx: &AssocCtx, ids: &[usize], cap: usize) -> Result<Vec<usize>, String> {
+        check_feasible_masked(ids.len(), ctx.channel.num_edges, ctx.edge_up, cap)?;
         let table = subset_latency_table(ctx, self.a, ids)?;
         let assoc = super::solve_exact_bnb(&table, cap, None)?;
+        check_assignment_up(ctx.edge_up, &assoc.edge_of, "bnb")?;
         Ok(assoc.edge_of)
     }
 }
@@ -435,14 +532,28 @@ pub struct WorldDelta {
     pub arrived: Vec<usize>,
     /// UEs that left this epoch.
     pub departed: Vec<usize>,
+    /// Edge servers that went *down* this epoch (outage process). Their
+    /// members are displaced: the warm engine marks them dirty itself,
+    /// so they need not be listed UE-by-UE here.
+    pub downed: Vec<usize>,
+    /// Edge servers that came back *up* this epoch.
+    pub restored: Vec<usize>,
 }
 
 impl WorldDelta {
     pub fn is_empty(&self) -> bool {
-        self.moved.is_empty() && self.arrived.is_empty() && self.departed.is_empty()
+        self.moved.is_empty()
+            && self.arrived.is_empty()
+            && self.departed.is_empty()
+            && self.downed.is_empty()
+            && self.restored.is_empty()
     }
 
-    /// Every UE the delta touches, ascending and deduplicated.
+    /// Every UE the delta touches *directly*, ascending and deduplicated.
+    /// UEs displaced by a `downed` edge are not listed (the delta names
+    /// the edge, not its members); callers that maintain per-UE state
+    /// must additionally diff serving edges, which is exactly what the
+    /// scenario engine's `last_assoc` diff feeds `sync_delta`.
     pub fn touched(&self) -> Vec<usize> {
         let mut t: Vec<usize> = self
             .moved
@@ -520,6 +631,13 @@ pub struct MaintainedAssociation {
     /// Per-edge load when the edge's members were last (re-)scored — the
     /// hysteresis reference point.
     scored_load: Vec<usize>,
+    /// Outage mask: `false` edges serve nobody. Maintained from the
+    /// deltas' `downed`/`restored` lists; all-up at build.
+    edge_up: Vec<bool>,
+    /// The up-mask changed since the last reassign: cached argmaxes must
+    /// be retargeted to the best *up* edge (integer row walks only — the
+    /// scores themselves are unaffected by availability).
+    mask_changed: bool,
     dirty: Vec<bool>,
     dirty_list: Vec<usize>,
     state: WarmState,
@@ -572,6 +690,8 @@ impl MaintainedAssociation {
             edge_of: vec![usize::MAX; n],
             load: vec![0usize; m],
             scored_load: vec![0usize; m],
+            edge_up: vec![true; m],
+            mask_changed: false,
             dirty: vec![false; n],
             dirty_list: Vec::new(),
             state,
@@ -613,6 +733,34 @@ impl MaintainedAssociation {
         }
         for &ue in &delta.moved {
             self.mark_dirty(ue);
+        }
+        // Outage transitions. A recovered edge only changes availability
+        // (its candidates re-enter every sweep through the mask); a downed
+        // edge additionally displaces its current members, which the
+        // engine marks dirty itself — the delta names edges, not UEs. The
+        // displacement scan is a single O(N) pass against a per-edge mask
+        // regardless of how many edges failed this epoch.
+        for &e in &delta.restored {
+            if !self.edge_up[e] {
+                self.edge_up[e] = true;
+                self.mask_changed = true;
+            }
+        }
+        let mut downed_now: Option<Vec<bool>> = None;
+        for &e in &delta.downed {
+            if self.edge_up[e] {
+                self.edge_up[e] = false;
+                self.mask_changed = true;
+                downed_now.get_or_insert_with(|| vec![false; self.num_edges])[e] = true;
+            }
+        }
+        if let Some(downed) = downed_now {
+            for ue in 0..self.num_ues {
+                let e = self.edge_of[ue];
+                if self.active[ue] && e != usize::MAX && downed[e] {
+                    self.mark_dirty(ue);
+                }
+            }
         }
         debug_assert_eq!(self.active.as_slice(), active, "delta disagrees with active mask");
         self.active.copy_from_slice(active);
@@ -666,10 +814,18 @@ impl MaintainedAssociation {
         let m = self.num_edges;
         let cap = self.cap;
         let ids: Vec<usize> = (0..self.num_ues).filter(|&u| self.active[u]).collect();
-        check_feasible(ids.len(), m, cap)?;
+        // `None` when every edge serves, so outage-free worlds take the
+        // exact pre-outage paths (and error messages).
+        let mask: Option<&[bool]> = if self.edge_up.iter().all(|&u| u) {
+            None
+        } else {
+            Some(self.edge_up.as_slice())
+        };
+        check_feasible_masked(ids.len(), m, mask, cap)?;
         let ctx = AssocCtx {
             channel,
             topo: Some(topo),
+            edge_up: mask,
         };
         if ids.is_empty() {
             for x in self.edge_of.iter_mut() {
@@ -683,9 +839,21 @@ impl MaintainedAssociation {
                     for &ue in self.dirty_list.iter() {
                         let row = &mut rows[ue * m..(ue + 1) * m];
                         fill_candidate_row(&policy, &ctx, ue, &mut scratch, row);
-                        top[ue] = row[0];
+                        top[ue] = first_up(row, mask);
                     }
                     self.reassociations += self.dirty_list.len() as u64;
+                    if self.mask_changed {
+                        // Availability changed but no score did: retarget
+                        // every cached argmax to its best *up* edge by
+                        // walking the cached rows — integer work only, no
+                        // re-scoring, no re-sorting. This is what keeps an
+                        // outage epoch incremental instead of a cold
+                        // rebuild.
+                        for ue in 0..self.num_ues {
+                            let row = &rows[ue * m..(ue + 1) * m];
+                            top[ue] = first_up(row, mask);
+                        }
+                    }
                     let mut argmax_load = vec![0usize; m];
                     for &ue in &ids {
                         argmax_load[top[ue] as usize] += 1;
@@ -704,7 +872,7 @@ impl MaintainedAssociation {
                         // sweep over the cached rows.
                         self.full_rebuilds += 1;
                         self.reassociations += ids.len() as u64;
-                        let assigned = merge_assign(&ids, rows, &ids, m, cap, &|ue, e| {
+                        let assigned = merge_assign(&ids, rows, &ids, m, cap, mask, &|ue, e| {
                             policy.score(&ctx, ue, e)
                         })?;
                         for x in self.edge_of.iter_mut() {
@@ -761,7 +929,7 @@ impl MaintainedAssociation {
                             }
                         }
                     };
-                    let assigned = edgewise_take(&ids, self.num_ues, m, cap, &mut feed)?;
+                    let assigned = edgewise_take(&ids, self.num_ues, m, cap, mask, &mut feed)?;
                     for x in self.edge_of.iter_mut() {
                         *x = usize::MAX;
                     }
@@ -787,13 +955,26 @@ impl MaintainedAssociation {
             self.dirty[ue] = false;
         }
         self.dirty_list.clear();
+        self.mask_changed = false;
         for l in self.load.iter_mut() {
             *l = 0;
         }
         for &ue in &ids {
             self.load[self.edge_of[ue]] += 1;
         }
+        debug_assert!(
+            self.load
+                .iter()
+                .zip(&self.edge_up)
+                .all(|(&l, &up)| up || l == 0),
+            "a down edge kept members"
+        );
         Ok(())
+    }
+
+    /// The engine's current outage mask (true = serving).
+    pub fn edge_up(&self) -> &[bool] {
+        &self.edge_up
     }
 }
 
@@ -808,6 +989,20 @@ pub fn cold_reference_map(
     cap: usize,
     provisional_a: f64,
 ) -> Result<Vec<Option<usize>>, String> {
+    cold_reference_map_masked(strategy, topo, channel, active, None, cap, provisional_a)
+}
+
+/// [`cold_reference_map`] under an outage mask: down edges take nobody.
+#[allow(clippy::too_many_arguments)]
+pub fn cold_reference_map_masked(
+    strategy: AssocStrategy,
+    topo: &Topology,
+    channel: &Channel,
+    active: &[bool],
+    edge_up: Option<&[bool]>,
+    cap: usize,
+    provisional_a: f64,
+) -> Result<Vec<Option<usize>>, String> {
     let n = topo.num_ues();
     let ids: Vec<usize> = (0..n).filter(|&u| active[u]).collect();
     let mut out = vec![None; n];
@@ -817,6 +1012,7 @@ pub fn cold_reference_map(
     let ctx = AssocCtx {
         channel,
         topo: Some(topo),
+        edge_up,
     };
     let assigned = policy_for(strategy, provisional_a)?.assign_cold(&ctx, &ids, cap)?;
     for (i, &ue) in ids.iter().enumerate() {
@@ -1083,12 +1279,153 @@ mod tests {
     }
 
     #[test]
+    fn outage_engine_matches_masked_cold_and_recovers_bitwise() {
+        // Down an edge: the displaced members re-associate incrementally
+        // and the map must equal the masked cold rebuild; restore it and
+        // the original map comes back bit for bit.
+        for strategy in [AssocStrategy::Proposed, AssocStrategy::Greedy, AssocStrategy::Exact] {
+            for &hysteresis in &[0.0, 0.75] {
+                let (topo, channel) = world(3, 30, 21);
+                let active = vec![true; 30];
+                let mut ma = MaintainedAssociation::new(
+                    strategy,
+                    &topo,
+                    &channel,
+                    &active,
+                    20,
+                    hysteresis,
+                    20.0,
+                )
+                .unwrap();
+                let before = ma.edge_of_global();
+                let victim = 1usize;
+                let delta_down = WorldDelta {
+                    downed: vec![victim],
+                    ..Default::default()
+                };
+                ma.sync(&topo, &channel, &active, &delta_down, 20.0).unwrap();
+                let mut up = vec![true; 3];
+                up[victim] = false;
+                let cold = cold_reference_map_masked(
+                    strategy,
+                    &topo,
+                    &channel,
+                    &active,
+                    Some(&up),
+                    20,
+                    20.0,
+                )
+                .unwrap();
+                assert_eq!(ma.edge_of_global(), cold, "{strategy:?} h={hysteresis}");
+                assert!(
+                    cold.iter().flatten().all(|&e| e != victim),
+                    "{strategy:?}: down edge kept members"
+                );
+                assert_eq!(ma.load()[victim], 0);
+                assert!(!ma.edge_up()[victim]);
+                // Recovery: the pre-outage association returns exactly.
+                let delta_up = WorldDelta {
+                    restored: vec![victim],
+                    ..Default::default()
+                };
+                ma.sync(&topo, &channel, &active, &delta_up, 20.0).unwrap();
+                assert_eq!(ma.edge_of_global(), before, "{strategy:?} h={hysteresis}");
+            }
+        }
+    }
+
+    #[test]
+    fn outage_equals_departing_and_rejoining_the_displaced_members() {
+        // The observational-equivalence property: an outage epoch and an
+        // epoch that explicitly churn-departs the edge's members and
+        // re-arrives them (with the edge masked) produce the same map.
+        for strategy in [AssocStrategy::Proposed, AssocStrategy::Greedy, AssocStrategy::Exact] {
+            let (topo, channel) = world(4, 44, 8);
+            let active = vec![true; 44];
+            let build = || {
+                MaintainedAssociation::new(strategy, &topo, &channel, &active, 20, 0.25, 20.0)
+                    .unwrap()
+            };
+            let mut via_outage = build();
+            let mut via_churn = build();
+            let victim = 2usize;
+            let members: Vec<usize> = via_churn
+                .edge_of_global()
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| **e == Some(victim))
+                .map(|(ue, _)| ue)
+                .collect();
+            assert!(!members.is_empty(), "victim edge must host someone");
+            via_outage
+                .sync(
+                    &topo,
+                    &channel,
+                    &active,
+                    &WorldDelta {
+                        downed: vec![victim],
+                        ..Default::default()
+                    },
+                    20.0,
+                )
+                .unwrap();
+            via_churn
+                .sync(
+                    &topo,
+                    &channel,
+                    &active,
+                    &WorldDelta {
+                        departed: members.clone(),
+                        arrived: members,
+                        downed: vec![victim],
+                        ..Default::default()
+                    },
+                    20.0,
+                )
+                .unwrap();
+            assert_eq!(
+                via_outage.edge_of_global(),
+                via_churn.edge_of_global(),
+                "{strategy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bnb_and_matching_respect_the_outage_mask() {
+        let (topo, channel) = world(3, 9, 17);
+        let ids: Vec<usize> = (0..9).collect();
+        let mut up = vec![true; 3];
+        up[0] = false;
+        let ctx = AssocCtx {
+            channel: &channel,
+            topo: Some(&topo),
+            edge_up: Some(&up),
+        };
+        let b = BnbPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 5).unwrap();
+        let e = ExactMatchingPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 5).unwrap();
+        assert!(b.iter().all(|&m| m != 0), "bnb used a down edge");
+        assert!(e.iter().all(|&m| m != 0), "matching used a down edge");
+        // Same min-max objective over the masked table.
+        let table = LatencyTable::build(&topo, &channel, 20.0);
+        let ob = ids.iter().map(|&u| table.of(u, b[u])).fold(0.0, f64::max);
+        let oe = ids.iter().map(|&u| table.of(u, e[u])).fold(0.0, f64::max);
+        assert!((ob - oe).abs() < 1e-12, "bnb {ob} vs matching {oe}");
+        // Masked infeasibility is detected up front (9 UEs > 2 up x 4).
+        assert!(BnbPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 4).is_err());
+        assert!(ExactMatchingPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 4).is_err());
+        assert!(ProposedPolicy.assign_cold(&ctx, &ids, 4).is_err());
+        assert!(GreedyPolicy.assign_cold(&ctx, &ids, 4).is_err());
+    }
+
+    #[test]
     fn policy_cold_paths_match_legacy_wrappers() {
         let (topo, channel) = world(5, 100, 11);
         let ids: Vec<usize> = (0..100).collect();
         let ctx = AssocCtx {
             channel: &channel,
             topo: Some(&topo),
+            edge_up: None,
         };
         let p = ProposedPolicy.assign_cold(&ctx, &ids, 20).unwrap();
         assert_eq!(p, crate::assoc::time_minimized(&channel, 20).unwrap().edge_of);
@@ -1109,6 +1446,7 @@ mod tests {
         let ctx = AssocCtx {
             channel: &channel,
             topo: Some(&topo),
+            edge_up: None,
         };
         assert!(ProposedPolicy.assign_cold(&ctx, &ids, 20).is_err());
         assert!(GreedyPolicy.assign_cold(&ctx, &ids, 20).is_err());
@@ -1135,6 +1473,7 @@ mod tests {
         let ctx = AssocCtx {
             channel: &channel,
             topo: Some(&topo),
+            edge_up: None,
         };
         let table = LatencyTable::build(&topo, &channel, 20.0);
         let b = BnbPolicy { a: 20.0 }.assign_cold(&ctx, &ids, 4).unwrap();

@@ -32,8 +32,8 @@ use crate::net::{Channel, Topology};
 pub use bnb::{solve_exact_bnb, solve_exact_matching};
 pub use greedy::greedy;
 pub use incremental::{
-    cold_reference_map, policy_for, AssocCtx, AssocPolicy, BnbPolicy, ExactMatchingPolicy,
-    GreedyPolicy, MaintainedAssociation, ProposedPolicy, WorldDelta,
+    cold_reference_map, cold_reference_map_masked, policy_for, AssocCtx, AssocPolicy, BnbPolicy,
+    ExactMatchingPolicy, GreedyPolicy, MaintainedAssociation, ProposedPolicy, WorldDelta,
 };
 pub use proposed::{time_minimized, time_minimized_claims};
 pub use random::random;

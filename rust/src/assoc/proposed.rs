@@ -42,6 +42,7 @@ pub fn time_minimized(channel: &Channel, cap: usize) -> Result<Association, Stri
     let ctx = AssocCtx {
         channel,
         topo: None,
+        edge_up: None,
     };
     let edge_of = ProposedPolicy.assign_cold(&ctx, &ids, cap)?;
     let assoc = Association::new(edge_of, channel.num_edges);

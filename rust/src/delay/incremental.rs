@@ -421,6 +421,32 @@ mod tests {
     }
 
     #[test]
+    fn hetero_fleet_frontier_matches_full_scan_bitwise() {
+        // Device classes make the per-edge lines genuinely unequal (1000x
+        // slope spread); the Pareto pruning argument never assumed equal
+        // members, so the frontier evaluation must stay bitwise-equal to
+        // the full scan — and the frontier should actually prune, since a
+        // slow-CPU member dominates fast ones at matching upload times.
+        use crate::net::DeviceClassSpec;
+        let params = SystemParams::default();
+        let devices = DeviceClassSpec::new()
+            .class("fast", 1.0, 1.0, 1.0, 1.0)
+            .class("slow", 1.0, 0.001, 0.5, 2.0);
+        let topo = Topology::sample_with_devices(&params, &devices, 3, 24, 19);
+        let ch = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+        let edge_of: Vec<Option<usize>> = (0..24).map(|i| Some(i % 3)).collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        m.refresh();
+        let inst = rebuild(&topo, &ch, &edge_of, 0.25);
+        for a in [1.0, 5.0, 42.0, 150.0] {
+            assert_eq!(m.tau_max(a).to_bits(), inst.tau_max(a).to_bits());
+            for b in [1.0, 3.0, 17.0] {
+                assert_eq!(m.round_time(a, b).to_bits(), inst.round_time(a, b).to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn maintained_solver_matches_plain_under_drift() {
         use crate::opt::{solve_integer, solve_integer_maintained, SolveOptions};
         let (mut topo, mut ch) = world(11);

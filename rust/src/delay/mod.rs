@@ -23,6 +23,14 @@ use crate::assoc::Association;
 use crate::net::{Channel, Topology, Ue};
 
 /// Eq. (1): per-iteration local computation time `t_n^cmp = C_n D_n / f_n`.
+///
+/// `f_n` is per-UE: the paper pins it to `f_max` fleet-wide (§IV-C.1),
+/// while the device-class extension (`net::DeviceClassSpec`) samples it
+/// per class. Everything downstream — `EdgeDelays`, the Pareto
+/// frontiers, `τ_m(a)` — was already a max over per-UE lines, so
+/// heterogeneous fleets need no structural change here; `τ_max(a)`
+/// stays nondecreasing in `a` (nonnegative slopes), which is the only
+/// property the warm integer solver's pruning relies on.
 pub fn ue_compute_time(ue: &Ue) -> f64 {
     ue.cycles_per_sample * ue.num_samples as f64 / ue.cpu_hz
 }

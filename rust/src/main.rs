@@ -95,6 +95,8 @@ SIMULATE OPTIONS
   --a N --b N          iteration counts (default: from optimizer)
   --jitter SIGMA       lognormal jitter on every delay (default 0)
   --dropout P          per-round UE dropout probability (default 0)
+  --deadline S         per-edge-round aggregation deadline τ_dl in seconds:
+                       later uploads are dropped at the barrier (default off)
   --rounds N           override the ⌈R⌉ cloud-round count
 
 SCENARIO OPTIONS
@@ -104,6 +106,12 @@ SCENARIO OPTIONS
   --shards N           worker threads (0 = one per core)   (default 0)
   --jitter SIGMA       lognormal delay jitter              (default 0)
   --dropout P          per-round UE dropout probability    (default 0)
+  --deadline S         per-edge-round aggregation deadline τ_dl (s): late
+                       uploads are dropped as partial participation
+  --device-classes S   heterogeneous device classes, compact format
+                       name:weight:f_cpu:power:cycles[,...] (default uniform)
+  --outage-fail P      per-epoch edge up→down probability  (default 0)
+  --outage-recover P   per-epoch edge down→up probability  (default 0)
   --speed-min M        random-waypoint min speed (m/s)     (default 0)
   --speed-max M        random-waypoint max speed (m/s)     (default 0)
   --arrival-rate L     Poisson UE arrivals per epoch       (default 0)
@@ -217,6 +225,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let int = solve_integer(&inst, &SolveOptions::default());
     let a = args.get_or("a", int.a).map_err(|e| anyhow!("{e}"))?;
     let b = args.get_or("b", int.b).map_err(|e| anyhow!("{e}"))?;
+    let deadline_s = args
+        .get_or("deadline", f64::INFINITY)
+        .map_err(|e| anyhow!("{e}"))?;
+    if deadline_s.is_nan() || deadline_s <= 0.0 {
+        bail!("--deadline must be > 0 seconds (omit it to disable), got {deadline_s}");
+    }
     let cfg = SimConfig {
         a,
         b,
@@ -225,6 +239,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         dropout_prob: args.get_or("dropout", 0.0).map_err(|e| anyhow!("{e}"))?,
         seed: sc.seed,
         start_s: 0.0,
+        deadline_s,
     };
     let res = simulate(&inst, &cfg);
     println!(

@@ -1,0 +1,274 @@
+//! Heterogeneous device classes (extension; the paper's fleet is uniform).
+//!
+//! The paper samples every UE from one implicit "device": `f_n = f_max`,
+//! `p_n = p_max`, cycles-per-sample uniform in a single range. Real HFL
+//! fleets mix flagships, mid-tier phones and IoT nodes whose compute and
+//! radio differ by orders of magnitude — the heterogeneity that makes
+//! per-edge round time `τ_m(a) = max_n (a·t_n^cmp + t_n^com)` a genuine
+//! max over *unequal* members instead of a near-tie. A
+//! [`DeviceClassSpec`] is a weighted distribution over named classes,
+//! each scaling the three per-UE physical quantities:
+//!
+//! * `f_cpu_scale`  — CPU frequency relative to `f_max` (Eq. (1) `f_n`);
+//! * `power_scale`  — transmit power relative to `p_max` (SNR → rate);
+//! * `cycles_scale` — multiplier on the drawn cycles-per-sample `C_n`.
+//!
+//! Sampling discipline (what the strict-generalization property rests
+//! on): class draws come from a **separate** RNG stream forked off the
+//! topology seed, never from the stream that draws positions and data
+//! sizes. The base topology is therefore bitwise-identical with or
+//! without device classes, and a single class with all scales `1.0`
+//! reproduces the homogeneous fleet exactly — bit for bit, at every
+//! level of the stack (property-tested in `tests/hetero.rs`).
+//!
+//! Compact text format (TOML `[devices] classes = "..."` and the
+//! `--device-classes` CLI flag):
+//!
+//! ```text
+//! name:weight:f_cpu_scale:power_scale:cycles_scale[, ...]
+//! e.g. "flagship:0.2:1.0:1.0:1.0, mid:0.5:0.5:0.8:1.0, iot:0.3:0.1:0.4:2.0"
+//! ```
+
+use crate::util::Rng;
+
+/// One device class: a weight (relative share of the fleet) plus the
+/// three physical scale factors applied to a sampled UE.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceClass {
+    pub name: String,
+    /// Relative sampling weight (need not be normalized; ≥ 0).
+    pub weight: f64,
+    /// `f_n = f_cpu_scale · f_max`.
+    pub f_cpu_scale: f64,
+    /// `p_n = power_scale · p_max` (watts, post dBm conversion).
+    pub power_scale: f64,
+    /// Multiplier on the drawn cycles-per-sample `C_n`.
+    pub cycles_scale: f64,
+}
+
+impl DeviceClass {
+    /// The homogeneous identity class (all scales 1).
+    pub fn baseline(name: &str, weight: f64) -> DeviceClass {
+        DeviceClass {
+            name: name.to_string(),
+            weight,
+            f_cpu_scale: 1.0,
+            power_scale: 1.0,
+            cycles_scale: 1.0,
+        }
+    }
+}
+
+/// A weighted distribution over device classes. Empty = the paper's
+/// homogeneous fleet (no class pass runs at all).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DeviceClassSpec {
+    pub classes: Vec<DeviceClass>,
+}
+
+impl DeviceClassSpec {
+    pub fn new() -> DeviceClassSpec {
+        DeviceClassSpec::default()
+    }
+
+    /// Append one class (builder style).
+    pub fn class(
+        mut self,
+        name: &str,
+        weight: f64,
+        f_cpu_scale: f64,
+        power_scale: f64,
+        cycles_scale: f64,
+    ) -> Self {
+        self.classes.push(DeviceClass {
+            name: name.to_string(),
+            weight,
+            f_cpu_scale,
+            power_scale,
+            cycles_scale,
+        });
+        self
+    }
+
+    /// No classes at all — the untouched homogeneous sampler runs.
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    /// Would applying this spec change nothing about a sampled fleet?
+    /// True when empty, or when every positive-weight class is the
+    /// identity (all scales exactly 1) — the strict-generalization case.
+    pub fn is_homogeneous(&self) -> bool {
+        self.classes
+            .iter()
+            .filter(|c| c.weight > 0.0)
+            .all(|c| c.f_cpu_scale == 1.0 && c.power_scale == 1.0 && c.cycles_scale == 1.0)
+    }
+
+    /// Parse the compact `name:w:f:p:c[, ...]` format (see module docs).
+    pub fn parse(text: &str) -> Result<DeviceClassSpec, String> {
+        let mut spec = DeviceClassSpec::default();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').map(str::trim).collect();
+            if fields.len() != 5 {
+                return Err(format!(
+                    "device class '{part}': expected name:weight:f_cpu:power:cycles (5 fields, \
+                     got {})",
+                    fields.len()
+                ));
+            }
+            let num = |i: usize, what: &str| -> Result<f64, String> {
+                fields[i].parse::<f64>().map_err(|_| {
+                    format!("device class '{}': bad {what} '{}'", fields[0], fields[i])
+                })
+            };
+            spec.classes.push(DeviceClass {
+                name: fields[0].to_string(),
+                weight: num(1, "weight")?,
+                f_cpu_scale: num(2, "f_cpu_scale")?,
+                power_scale: num(3, "power_scale")?,
+                cycles_scale: num(4, "cycles_scale")?,
+            });
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Round-trip of [`Self::parse`] (for spec summaries / provenance).
+    pub fn to_compact(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}:{}:{}:{}:{}",
+                    c.name, c.weight, c.f_cpu_scale, c.power_scale, c.cycles_scale
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.classes.is_empty() {
+            return Ok(());
+        }
+        let mut total = 0.0;
+        for c in &self.classes {
+            if !c.weight.is_finite() || c.weight < 0.0 {
+                return Err(format!("device class '{}': weight must be >= 0", c.name));
+            }
+            for (what, v) in [
+                ("f_cpu_scale", c.f_cpu_scale),
+                ("power_scale", c.power_scale),
+                ("cycles_scale", c.cycles_scale),
+            ] {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!(
+                        "device class '{}': {what} must be finite and > 0, got {v}",
+                        c.name
+                    ));
+                }
+            }
+            total += c.weight;
+        }
+        if total <= 0.0 {
+            return Err("device classes need positive total weight".to_string());
+        }
+        Ok(())
+    }
+
+    /// Draw one class index by weight. Deterministic walk over the
+    /// cumulative weights; zero-weight classes are unreachable (u is
+    /// strictly below the total, and a zero-weight class never advances
+    /// the cumulative sum past u on its own).
+    pub fn pick(&self, rng: &mut Rng) -> usize {
+        debug_assert!(!self.classes.is_empty());
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let u = rng.f64() * total;
+        let mut acc = 0.0;
+        let mut last_positive = 0;
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.weight > 0.0 {
+                last_positive = i;
+            }
+            acc += c.weight;
+            if u < acc {
+                return i;
+            }
+        }
+        // Float round-off on the final cumulative sum: clamp to the last
+        // class that can actually be drawn.
+        last_positive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let spec = DeviceClassSpec::parse(
+            "flagship:0.2:1.0:1.0:1.0, mid:0.5:0.5:0.8:1.0, iot:0.3:0.1:0.4:2.0",
+        )
+        .unwrap();
+        assert_eq!(spec.classes.len(), 3);
+        assert_eq!(spec.classes[1].name, "mid");
+        assert_eq!(spec.classes[1].f_cpu_scale, 0.5);
+        assert_eq!(spec.classes[2].cycles_scale, 2.0);
+        let again = DeviceClassSpec::parse(&spec.to_compact()).unwrap();
+        assert_eq!(spec, again);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(DeviceClassSpec::parse("a:1:1:1").is_err()); // 4 fields
+        assert!(DeviceClassSpec::parse("a:x:1:1:1").is_err()); // bad number
+        assert!(DeviceClassSpec::parse("a:1:0:1:1").is_err()); // zero scale
+        assert!(DeviceClassSpec::parse("a:-1:1:1:1").is_err()); // negative weight
+        assert!(DeviceClassSpec::parse("a:0:1:1:1").is_err()); // zero total weight
+        assert!(DeviceClassSpec::parse("").unwrap().is_empty()); // empty = homogeneous
+    }
+
+    #[test]
+    fn homogeneity_detection() {
+        assert!(DeviceClassSpec::new().is_homogeneous());
+        assert!(DeviceClassSpec::new().class("one", 1.0, 1.0, 1.0, 1.0).is_homogeneous());
+        // A zero-weight non-identity class is never drawn: still homogeneous.
+        assert!(DeviceClassSpec::new()
+            .class("one", 1.0, 1.0, 1.0, 1.0)
+            .class("ghost", 0.0, 0.1, 0.1, 5.0)
+            .is_homogeneous());
+        assert!(!DeviceClassSpec::new().class("slow", 1.0, 0.5, 1.0, 1.0).is_homogeneous());
+    }
+
+    #[test]
+    fn pick_respects_weights_and_skips_zero() {
+        let spec = DeviceClassSpec::new()
+            .class("a", 1.0, 1.0, 1.0, 1.0)
+            .class("ghost", 0.0, 0.1, 1.0, 1.0)
+            .class("b", 3.0, 0.5, 1.0, 1.0);
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            counts[spec.pick(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0, "zero-weight class must never be drawn");
+        // 1:3 weight ratio within loose tolerance.
+        let frac_b = counts[2] as f64 / 4000.0;
+        assert!((frac_b - 0.75).abs() < 0.05, "b fraction {frac_b}");
+    }
+
+    #[test]
+    fn pick_single_class_is_always_zero() {
+        let spec = DeviceClassSpec::new().class("only", 0.25, 0.5, 1.0, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..64 {
+            assert_eq!(spec.pick(&mut rng), 0);
+        }
+    }
+}

@@ -8,8 +8,10 @@
 
 pub mod bandwidth;
 pub mod channel;
+pub mod devices;
 pub mod topology;
 
 pub use bandwidth::BandwidthPolicy;
 pub use channel::{path_loss_gain, shannon_rate, snr, Channel};
+pub use devices::{DeviceClass, DeviceClassSpec};
 pub use topology::{EdgeServer, Position, SystemParams, Topology, Ue};

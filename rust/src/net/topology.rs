@@ -176,6 +176,38 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// [`Self::sample`] with heterogeneous device classes: the base fleet
+    /// is drawn exactly as the homogeneous sampler draws it (same RNG,
+    /// same order), then a **separate** class stream forked off the seed
+    /// assigns each UE a class and scales `f_n`, `p_n` and `C_n`. Because
+    /// the class stream never touches the base stream, positions and
+    /// dataset sizes are bitwise-identical with or without classes, and
+    /// an identity class spec reproduces [`Self::sample`] bit for bit
+    /// (the strict-generalization property `tests/hetero.rs` pins).
+    pub fn sample_with_devices(
+        params: &SystemParams,
+        devices: &crate::net::DeviceClassSpec,
+        num_edges: usize,
+        num_ues: usize,
+        seed: u64,
+    ) -> Topology {
+        let mut topo = Topology::sample(params, num_edges, num_ues, seed);
+        if devices.is_empty() {
+            return topo;
+        }
+        let mut class_rng = Rng::new(seed ^ 0xDE71_CEC1_A55E_5EED);
+        for ue in topo.ues.iter_mut() {
+            let c = &devices.classes[devices.pick(&mut class_rng)];
+            // Multiplication by an exact 1.0 is the identity under
+            // IEEE-754, so identity classes leave the fleet bitwise
+            // untouched even though the pass runs.
+            ue.cpu_hz = params.f_max_hz * c.f_cpu_scale;
+            ue.tx_power_w = dbm_to_w(params.p_max_dbm) * c.power_scale;
+            ue.cycles_per_sample *= c.cycles_scale;
+        }
+        topo
+    }
+
     /// Sample a deployment: UEs uniform in the square; edge servers on a
     /// regular sub-grid ("located in the center" of their cells, §V-A).
     pub fn sample(params: &SystemParams, num_edges: usize, num_ues: usize, seed: u64) -> Topology {
@@ -287,6 +319,63 @@ mod tests {
         assert!((dbm_to_w(10.0) - 0.01).abs() < 1e-12);
         // Capacity: 20 MHz / 1 MHz = 20 UEs per edge.
         assert_eq!(p.edge_capacity(), 20);
+    }
+
+    #[test]
+    fn device_classes_scale_only_the_class_fields() {
+        use crate::net::DeviceClassSpec;
+        let p = SystemParams::default();
+        let plain = Topology::sample(&p, 3, 40, 11);
+        let spec = DeviceClassSpec::new()
+            .class("fast", 1.0, 1.0, 1.0, 1.0)
+            .class("slow", 1.0, 0.25, 0.5, 2.0);
+        let hetero = Topology::sample_with_devices(&p, &spec, 3, 40, 11);
+        let mut saw_slow = false;
+        for (a, b) in plain.ues.iter().zip(&hetero.ues) {
+            // Base draws untouched: position + dataset size bitwise equal.
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.num_samples, b.num_samples);
+            assert_eq!(a.model_bits.to_bits(), b.model_bits.to_bits());
+            // Class fields are one of the two class values exactly.
+            let slow = b.cpu_hz == p.f_max_hz * 0.25;
+            let fast = b.cpu_hz == p.f_max_hz;
+            assert!(slow || fast, "cpu {:.3e}", b.cpu_hz);
+            if slow {
+                saw_slow = true;
+                assert_eq!(b.cycles_per_sample.to_bits(), (a.cycles_per_sample * 2.0).to_bits());
+                assert_eq!(b.tx_power_w.to_bits(), (a.tx_power_w * 0.5).to_bits());
+            } else {
+                assert_eq!(b.cycles_per_sample.to_bits(), a.cycles_per_sample.to_bits());
+                assert_eq!(b.tx_power_w.to_bits(), a.tx_power_w.to_bits());
+            }
+        }
+        assert!(saw_slow, "40 draws at weight 1:1 must hit the slow class");
+        // Deterministic per seed.
+        let again = Topology::sample_with_devices(&p, &spec, 3, 40, 11);
+        for (a, b) in hetero.ues.iter().zip(&again.ues) {
+            assert_eq!(a.cpu_hz.to_bits(), b.cpu_hz.to_bits());
+        }
+    }
+
+    #[test]
+    fn identity_device_class_reproduces_plain_sample_bitwise() {
+        use crate::net::DeviceClassSpec;
+        let p = SystemParams::default();
+        let plain = Topology::sample(&p, 4, 60, 9);
+        let one = Topology::sample_with_devices(
+            &p,
+            &DeviceClassSpec::new().class("only", 1.0, 1.0, 1.0, 1.0),
+            4,
+            60,
+            9,
+        );
+        for (a, b) in plain.ues.iter().zip(&one.ues) {
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.cpu_hz.to_bits(), b.cpu_hz.to_bits());
+            assert_eq!(a.tx_power_w.to_bits(), b.tx_power_w.to_bits());
+            assert_eq!(a.cycles_per_sample.to_bits(), b.cycles_per_sample.to_bits());
+            assert_eq!(a.num_samples, b.num_samples);
+        }
     }
 
     #[test]

@@ -74,6 +74,22 @@ pub struct ScenarioOutcome {
     pub departures: u64,
     /// Uploads lost to the dropout failure model.
     pub dropped_uploads: u64,
+    /// Uploads that missed the per-round aggregation deadline τ_dl
+    /// (scheduled and computed, but dropped at the barrier).
+    pub late_uploads: u64,
+    /// UE-round uploads scheduled in total — the participation-rate
+    /// denominator.
+    pub scheduled_uploads: u64,
+    /// Fraction of scheduled uploads that made their barrier:
+    /// `(scheduled − dropout − late) / scheduled` (1.0 when nothing ran).
+    pub participation_rate: f64,
+    /// Edge up→down transitions over the run (outage process).
+    pub outages: u64,
+    /// Edge down→up transitions over the run.
+    pub recoveries: u64,
+    /// Σ over executed epochs of the number of down edges — the outage
+    /// exposure the fleet actually trained under.
+    pub down_edge_epochs: u64,
     /// Discrete events processed by the simulator.
     pub events: u64,
     /// Cumulative straggler wait at the per-edge aggregation barrier.
@@ -258,12 +274,15 @@ fn churn_step(
 /// Policy strategies run `AssocPolicy::assign_cold` directly on the
 /// global channel (no more per-epoch sub-channel copy — at 100k UEs that
 /// copy alone was ~150 MB/epoch); random stays rng-driven so warm and
-/// cold modes consume the same stream.
+/// cold modes consume the same stream. Down edges (`edge_up`) take no
+/// members; an all-up mask takes the exact pre-outage code paths.
+#[allow(clippy::too_many_arguments)]
 fn associate_active(
     strategy: AssocStrategy,
     topo: &Topology,
     channel: &Channel,
     active: &[bool],
+    edge_up: &[bool],
     cap: usize,
     provisional_a: f64,
     rng: &mut Rng,
@@ -275,12 +294,23 @@ fn associate_active(
     if ids.is_empty() {
         return Ok(edge_of_global);
     }
+    let all_up = edge_up.iter().all(|&u| u);
     let assigned: Vec<usize> = match strategy {
-        AssocStrategy::Random => assoc::random(ids.len(), m, cap, rng)?.edge_of,
+        AssocStrategy::Random if all_up => assoc::random(ids.len(), m, cap, rng)?.edge_of,
+        AssocStrategy::Random => {
+            // Random over the up edges only: draw on the compacted
+            // up-edge index space, then map back to global edge ids.
+            // Outage-free epochs take the branch above, consuming the
+            // exact historical rng stream.
+            let up: Vec<usize> = (0..m).filter(|&e| edge_up[e]).collect();
+            let compact = assoc::random(ids.len(), up.len(), cap, rng)?;
+            compact.edge_of.iter().map(|&e| up[e]).collect()
+        }
         _ => {
             let ctx = assoc::AssocCtx {
                 channel,
                 topo: Some(topo),
+                edge_up: if all_up { None } else { Some(edge_up) },
             };
             assoc::policy_for(strategy, provisional_a)?.assign_cold(&ctx, &ids, cap)?
         }
@@ -289,6 +319,41 @@ fn associate_active(
         edge_of_global[id] = Some(assigned[i]);
     }
     Ok(edge_of_global)
+}
+
+/// One epoch's Markov outage transition: each up edge fails with
+/// `fail_prob` — unless losing it would push the up capacity below the
+/// active fleet (the feasibility veto; the probability draw still
+/// happens, so the rng stream is independent of the veto decision) —
+/// and each down edge recovers with `recover_prob`. Edges are visited in
+/// id order; returns (downed, restored) edge ids, the outage part of the
+/// epoch's [`WorldDelta`].
+fn outage_step(
+    rng: &mut Rng,
+    edge_up: &mut [bool],
+    fail_prob: f64,
+    recover_prob: f64,
+    active_count: usize,
+    cap: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    let mut downed = Vec::new();
+    let mut restored = Vec::new();
+    let mut up_count = edge_up.iter().filter(|&&u| u).count();
+    for e in 0..edge_up.len() {
+        if edge_up[e] {
+            let fails = rng.f64() < fail_prob;
+            if fails && up_count >= 1 && (up_count - 1) * cap >= active_count {
+                edge_up[e] = false;
+                up_count -= 1;
+                downed.push(e);
+            }
+        } else if rng.f64() < recover_prob {
+            edge_up[e] = true;
+            up_count += 1;
+            restored.push(e);
+        }
+    }
+    (downed, restored)
 }
 
 /// Build the delay instance for the current association from scratch
@@ -445,22 +510,31 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
     // (notably the Rayleigh-fading × dynamics rejection).
     spec.validate()?;
     let base = &spec.base;
-    let mut topo = Topology::sample(&base.system, base.num_edges, base.num_ues, seed);
+    let mut topo = Topology::sample_with_devices(
+        &base.system,
+        &spec.devices,
+        base.num_edges,
+        base.num_ues,
+        seed,
+    );
     let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
     let cap = base.system.edge_capacity();
-    let capacity_total = cap.saturating_mul(base.num_edges);
     let n = base.num_ues;
 
     // Independent seeded sub-streams: association tie-breaking, simulator
-    // noise, churn, mobility. Forked from the instance seed only.
+    // noise, churn, mobility, edge outages. Forked from the instance seed
+    // only; the outage fork comes *last* so outage-free specs leave the
+    // historical streams untouched.
     let mut master = Rng::new(seed ^ 0x5CE2_A210_D15C_0FEE);
     let mut assoc_rng = master.fork(0xA550);
     let mut sim_rng = master.fork(0x51ED);
     let mut churn_rng = master.fork(0xC42B);
     let mobility_rng = master.fork(0x30B1);
+    let mut outage_rng = master.fork(0x0D6E);
     let mut mobility = MobilityState::init(&topo, spec.dynamics.speed_mps, mobility_rng);
 
     let mut active = vec![true; n];
+    let mut edge_up = vec![true; base.num_edges];
     let mut prev_edge: Vec<Option<usize>> = vec![None; n];
 
     let mut out = ScenarioOutcome {
@@ -479,6 +553,12 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         arrivals: 0,
         departures: 0,
         dropped_uploads: 0,
+        late_uploads: 0,
+        scheduled_uploads: 0,
+        participation_rate: 1.0,
+        outages: 0,
+        recoveries: 0,
+        down_edge_epochs: 0,
         events: 0,
         ue_barrier_wait_s: 0.0,
         edge_barrier_wait_s: 0.0,
@@ -502,6 +582,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             &topo,
             &channel,
             &active,
+            &edge_up,
             cap,
             provisional_a,
             &mut assoc_rng,
@@ -551,6 +632,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                 &topo,
                 &channel,
                 &active,
+                &edge_up,
                 cap,
                 provisional_a,
                 &mut assoc_rng,
@@ -630,9 +712,15 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         prev_edge.clone_from(&edge_of);
         provisional_a = a as f64;
         out.ab_per_epoch.push((a, b));
+        out.down_edge_epochs += edge_up.iter().filter(|&&u| !u).count() as u64;
 
-        // (3) Simulate this epoch's chunk of rounds.
-        let chunk = spec.dynamics.chunk(target - out.rounds);
+        // (3) Simulate this epoch's chunk of rounds. The outage process
+        // counts as a world dynamic: without an explicit epoch_rounds it
+        // forces one-round epochs, else a no-churn/no-mobility spec would
+        // run everything in a single epoch and never fail an edge.
+        let chunk = spec
+            .dynamics
+            .chunk_with(target - out.rounds, spec.outage.enabled());
         let cfg = SimConfig {
             a,
             b,
@@ -641,6 +729,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             dropout_prob: spec.failure.dropout_prob,
             seed: sim_rng.next_u64(),
             start_s: now,
+            deadline_s: spec.failure.deadline_s,
         };
         let res = simulate(inst, &cfg);
         let dt = res.total_time_s - now;
@@ -650,6 +739,8 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         out.epochs += 1;
         out.closed_form_s += chunk as f64 * inst.round_time(a as f64, b as f64);
         out.dropped_uploads += res.dropped_uploads;
+        out.late_uploads += res.late_uploads;
+        out.scheduled_uploads += res.scheduled_uploads;
         out.events += res.events;
         out.ue_barrier_wait_s += res.ue_barrier_wait_s;
         out.edge_barrier_wait_s += res.edge_barrier_wait_s;
@@ -658,10 +749,12 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         out.round_time_s = inst.round_time(a as f64, b as f64);
         out.tau_max_s = inst.tau_max(a as f64);
 
-        // A world without dynamics cannot change the accuracy target, so
-        // convergence is decidable now — skip the redundant re-associate +
-        // re-solve a full extra loop iteration would spend discovering it.
-        if !spec.dynamics.any_dynamics() && out.rounds >= target {
+        // A world without dynamics (outages included — they re-shape the
+        // delay instance and hence the accuracy target) cannot change the
+        // target, so convergence is decidable now — skip the redundant
+        // re-associate + re-solve a full extra loop iteration would spend
+        // discovering it.
+        if !spec.dynamics.any_dynamics() && !spec.outage.enabled() && out.rounds >= target {
             out.converged = true;
             break;
         }
@@ -673,6 +766,9 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             delta.moved = mobility.step(dt, &active, &mut topo, &mut channel);
         }
         if spec.dynamics.churn_enabled() {
+            // Arrivals are capped by the *serving* capacity: edges that
+            // are down host nobody.
+            let up_capacity = cap.saturating_mul(edge_up.iter().filter(|&&u| u).count());
             let (arrived, departed) = churn_step(
                 &mut churn_rng,
                 &mut active,
@@ -680,7 +776,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                 &mut channel,
                 spec.dynamics.arrival_rate,
                 spec.dynamics.departure_prob,
-                capacity_total,
+                up_capacity,
             );
             out.departures += departed.len() as u64;
             out.arrivals += arrived.len() as u64;
@@ -691,7 +787,28 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             delta.arrived = arrived;
             delta.departed = departed;
         }
+        if spec.outage.enabled() {
+            let active_count = active.iter().filter(|&&on| on).count();
+            let (downed, restored) = outage_step(
+                &mut outage_rng,
+                &mut edge_up,
+                spec.outage.fail_prob,
+                spec.outage.recover_prob,
+                active_count,
+                cap,
+            );
+            out.outages += downed.len() as u64;
+            out.recoveries += restored.len() as u64;
+            delta.downed = downed;
+            delta.restored = restored;
+        }
     }
     out.makespan_s = now;
+    out.participation_rate = if out.scheduled_uploads == 0 {
+        1.0
+    } else {
+        (out.scheduled_uploads - out.dropped_uploads - out.late_uploads) as f64
+            / out.scheduled_uploads as f64
+    };
     Ok(out)
 }

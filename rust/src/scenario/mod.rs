@@ -35,4 +35,6 @@ pub mod spec;
 pub use dynamics::{run_instance, ScenarioOutcome};
 pub use report::{record_batch, BatchReport, SummaryStat};
 pub use runner::{instance_seeds, run_batch, run_batch_with, shard_count, BatchResult};
-pub use spec::{BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, ResolveMode, ScenarioSpec};
+pub use spec::{
+    BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, OutageSpec, ResolveMode, ScenarioSpec,
+};

@@ -95,6 +95,15 @@ pub struct BatchReport {
     /// Per-instance cumulative reprocessed-UE counts (the incremental
     /// association engine's work metric).
     pub reassociations: SummaryStat,
+    /// Per-instance participation rate: fraction of scheduled uploads
+    /// that made their barrier (dropout + deadline losses excluded).
+    pub participation_rate: SummaryStat,
+    /// Per-instance deadline-dropped uploads.
+    pub late_uploads: SummaryStat,
+    /// Per-instance edge up→down transitions (outage process).
+    pub outages: SummaryStat,
+    /// Per-instance Σ over epochs of down-edge counts (outage exposure).
+    pub down_edge_epochs: SummaryStat,
 }
 
 fn column<F: Fn(&ScenarioOutcome) -> f64>(outcomes: &[ScenarioOutcome], f: F) -> SummaryStat {
@@ -125,6 +134,10 @@ impl BatchReport {
             resolve_time_s: column(outcomes, |o| o.resolve_time_s),
             assoc_time_s: column(outcomes, |o| o.assoc_time_s),
             reassociations: column(outcomes, |o| o.reassociations as f64),
+            participation_rate: column(outcomes, |o| o.participation_rate),
+            late_uploads: column(outcomes, |o| o.late_uploads as f64),
+            outages: column(outcomes, |o| o.outages as f64),
+            down_edge_epochs: column(outcomes, |o| o.down_edge_epochs as f64),
         }
     }
 
@@ -146,6 +159,10 @@ impl BatchReport {
             ("resolve_time_s", self.resolve_time_s.to_json()),
             ("assoc_time_s", self.assoc_time_s.to_json()),
             ("reassociations", self.reassociations.to_json()),
+            ("participation_rate", self.participation_rate.to_json()),
+            ("late_uploads", self.late_uploads.to_json()),
+            ("outages", self.outages.to_json()),
+            ("down_edge_epochs", self.down_edge_epochs.to_json()),
         ];
         if let Some(spec) = spec {
             fields.insert(0, ("spec", Json::str(&spec.summary())));
@@ -182,6 +199,9 @@ impl BatchReport {
         row("epochs", &self.epochs);
         row("handovers", &self.handovers);
         row("dropped_uploads", &self.dropped_uploads);
+        row("late_uploads", &self.late_uploads);
+        row("participation", &self.participation_rate);
+        row("outages", &self.outages);
         row("ue_wait_s", &self.ue_barrier_wait_s);
         row("resolve_s", &self.resolve_time_s);
         row("assoc_s", &self.assoc_time_s);
@@ -206,6 +226,12 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             "arrivals",
             "departures",
             "dropped_uploads",
+            "late_uploads",
+            "scheduled_uploads",
+            "participation_rate",
+            "outages",
+            "recoveries",
+            "down_edge_epochs",
             "events",
             "converged",
             "resolve_time_s",
@@ -228,6 +254,12 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             o.arrivals as f64,
             o.departures as f64,
             o.dropped_uploads as f64,
+            o.late_uploads as f64,
+            o.scheduled_uploads as f64,
+            o.participation_rate,
+            o.outages as f64,
+            o.recoveries as f64,
+            o.down_edge_epochs as f64,
             o.events as f64,
             if o.converged { 1.0 } else { 0.0 },
             o.resolve_time_s,
@@ -260,6 +292,12 @@ mod tests {
             arrivals: 0,
             departures: 0,
             dropped_uploads: 0,
+            late_uploads: 0,
+            scheduled_uploads: rounds * 10,
+            participation_rate: 1.0,
+            outages: 0,
+            recoveries: 0,
+            down_edge_epochs: 0,
             events: rounds * 10,
             ue_barrier_wait_s: 0.0,
             edge_barrier_wait_s: 0.0,
@@ -325,6 +363,12 @@ mod tests {
             Some(3.0)
         );
         assert!(parsed.get("makespan_s").and_then(|m| m.get("p90")).is_some());
+        assert!(parsed
+            .get("participation_rate")
+            .and_then(|m| m.get("mean"))
+            .is_some());
+        assert!(parsed.get("outages").and_then(|m| m.get("max")).is_some());
+        assert!(parsed.get("late_uploads").is_some());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 use crate::config::cli::CliError;
 use crate::config::{Args, AssocStrategy, Scenario};
+use crate::net::DeviceClassSpec;
 use crate::util::toml::TomlDoc;
 
 /// Which sub-problem-I solver the engine (re-)runs every epoch.
@@ -91,12 +92,46 @@ impl ResolveMode {
 }
 
 /// Failure injection applied to every simulated epoch.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FailureSpec {
     /// Lognormal jitter σ on every compute/upload duration (0 = none).
     pub jitter_sigma: f64,
     /// Per-round UE dropout probability (0 = none).
     pub dropout_prob: f64,
+    /// Per-edge-round aggregation deadline τ_dl (seconds): uploads
+    /// arriving later are dropped at the barrier, which closes exactly
+    /// at the deadline (partial participation). `INFINITY` (default) =
+    /// wait for the slowest scheduled member, the paper's semantics.
+    pub deadline_s: f64,
+}
+
+impl Default for FailureSpec {
+    fn default() -> Self {
+        FailureSpec {
+            jitter_sigma: 0.0,
+            dropout_prob: 0.0,
+            deadline_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Per-epoch Markov edge outage/recovery process. Between epochs each up
+/// edge fails with `fail_prob` (its members are displaced and
+/// re-associate incrementally) and each down edge recovers with
+/// `recover_prob`. A failure that would push the serving capacity below
+/// the active fleet is vetoed, so runs stay feasible by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OutageSpec {
+    /// Per-epoch up→down probability per edge (0 = no outages).
+    pub fail_prob: f64,
+    /// Per-epoch down→up probability per edge.
+    pub recover_prob: f64,
+}
+
+impl OutageSpec {
+    pub fn enabled(&self) -> bool {
+        self.fail_prob > 0.0
+    }
 }
 
 /// Time-varying dynamics: epoch-based mobility and churn.
@@ -149,9 +184,17 @@ impl DynamicsSpec {
     /// Rounds to simulate this epoch, given how many the accuracy model
     /// still requires.
     pub fn chunk(&self, remaining: u64) -> u64 {
+        self.chunk_with(remaining, false)
+    }
+
+    /// [`Self::chunk`] with an extra world dynamic this block cannot see
+    /// (the outage process lives in its own spec table): *any* dynamic
+    /// forces one-round epochs when `epoch_rounds` is unset, and the
+    /// policy lives here, in one place, rather than at call sites.
+    pub fn chunk_with(&self, remaining: u64, extra_dynamics: bool) -> u64 {
         match self.epoch_rounds {
             Some(k) => k.max(1).min(remaining),
-            None if self.any_dynamics() => remaining.min(1),
+            None if self.any_dynamics() || extra_dynamics => remaining.min(1),
             None => remaining,
         }
     }
@@ -196,6 +239,10 @@ pub struct ScenarioSpec {
     /// for load-coupled scoring extensions).
     pub assoc_hysteresis: f64,
     pub failure: FailureSpec,
+    /// Heterogeneous device classes (empty = the paper's uniform fleet).
+    pub devices: DeviceClassSpec,
+    /// Edge outage/recovery process (disabled by default).
+    pub outage: OutageSpec,
     pub dynamics: DynamicsSpec,
     pub batch: BatchSpec,
 }
@@ -209,6 +256,8 @@ impl Default for ScenarioSpec {
             assoc_resolve: ResolveMode::default(),
             assoc_hysteresis: 0.25,
             failure: FailureSpec::default(),
+            devices: DeviceClassSpec::default(),
+            outage: OutageSpec::default(),
             dynamics: DynamicsSpec::default(),
             batch: BatchSpec::default(),
         }
@@ -289,6 +338,40 @@ impl ScenarioSpec {
         self
     }
 
+    /// Per-edge-round aggregation deadline τ_dl (seconds; ∞ = off).
+    pub fn deadline(mut self, deadline_s: f64) -> Self {
+        self.failure.deadline_s = deadline_s;
+        self
+    }
+
+    /// Replace the device-class distribution wholesale.
+    pub fn devices(mut self, spec: DeviceClassSpec) -> Self {
+        self.devices = spec;
+        self
+    }
+
+    /// Append one device class (see [`DeviceClassSpec::class`]).
+    pub fn device_class(
+        mut self,
+        name: &str,
+        weight: f64,
+        f_cpu_scale: f64,
+        power_scale: f64,
+        cycles_scale: f64,
+    ) -> Self {
+        self.devices = self
+            .devices
+            .class(name, weight, f_cpu_scale, power_scale, cycles_scale);
+        self
+    }
+
+    /// Markov edge outages: per-epoch fail / recover probabilities.
+    pub fn outage(mut self, fail_prob: f64, recover_prob: f64) -> Self {
+        self.outage.fail_prob = fail_prob;
+        self.outage.recover_prob = recover_prob;
+        self
+    }
+
     /// Random-waypoint mobility with speeds uniform in `[lo, hi]` m/s.
     pub fn mobility(mut self, lo_mps: f64, hi_mps: f64) -> Self {
         self.dynamics.speed_mps = (lo_mps, hi_mps);
@@ -358,6 +441,20 @@ impl ScenarioSpec {
         if let Some(v) = doc.f64("failure", "dropout_prob") {
             self.failure.dropout_prob = v;
         }
+        if let Some(v) = doc.f64("failure", "deadline_s") {
+            self.failure.deadline_s = v;
+        }
+        // [devices]
+        if let Some(s) = doc.str("devices", "classes") {
+            self.devices = DeviceClassSpec::parse(s)?;
+        }
+        // [outage]
+        if let Some(v) = doc.f64("outage", "fail_prob") {
+            self.outage.fail_prob = v;
+        }
+        if let Some(v) = doc.f64("outage", "recover_prob") {
+            self.outage.recover_prob = v;
+        }
         // [dynamics]
         if let Some(v) = doc.i64("dynamics", "epoch_rounds") {
             self.dynamics.epoch_rounds = Some(v.max(1) as u64);
@@ -407,6 +504,18 @@ impl ScenarioSpec {
         }
         if let Some(v) = args.get::<f64>("dropout")? {
             self.failure.dropout_prob = v;
+        }
+        if let Some(v) = args.get::<f64>("deadline")? {
+            self.failure.deadline_s = v;
+        }
+        if let Some(s) = args.str("device-classes") {
+            self.devices = DeviceClassSpec::parse(&s).map_err(CliError)?;
+        }
+        if let Some(v) = args.get::<f64>("outage-fail")? {
+            self.outage.fail_prob = v;
+        }
+        if let Some(v) = args.get::<f64>("outage-recover")? {
+            self.outage.recover_prob = v;
         }
         if let Some(v) = args.get::<u64>("epoch-rounds")? {
             self.dynamics.epoch_rounds = Some(v.max(1));
@@ -490,6 +599,35 @@ impl ScenarioSpec {
                 f.dropout_prob
             ));
         }
+        if f.deadline_s.is_nan() || f.deadline_s <= 0.0 {
+            return Err(format!(
+                "deadline_s must be > 0 (INFINITY = off), got {}",
+                f.deadline_s
+            ));
+        }
+        self.devices.validate()?;
+        let o = &self.outage;
+        if !(0.0..=1.0).contains(&o.fail_prob) {
+            return Err(format!("outage fail_prob must be in [0,1], got {}", o.fail_prob));
+        }
+        if !(0.0..=1.0).contains(&o.recover_prob) {
+            return Err(format!(
+                "outage recover_prob must be in [0,1], got {}",
+                o.recover_prob
+            ));
+        }
+        if o.recover_prob > 0.0 && !o.enabled() {
+            return Err(
+                "outage recover_prob without fail_prob would be a silent no-op; \
+                 set fail_prob > 0 (or drop the [outage] table)"
+                    .into(),
+            );
+        }
+        if o.enabled() && self.base.num_edges < 2 {
+            return Err("edge outages need at least 2 edges (the feasibility veto \
+                        would pin a single edge up forever)"
+                .into());
+        }
         if self.batch.instances == 0 {
             return Err("batch.instances must be >= 1".into());
         }
@@ -513,9 +651,27 @@ impl ScenarioSpec {
         } else {
             "static".to_string()
         };
+        let devices = if self.devices.is_empty() {
+            "uniform".to_string()
+        } else {
+            format!("{} classes [{}]", self.devices.classes.len(), self.devices.to_compact())
+        };
+        let deadline = if self.failure.deadline_s.is_finite() {
+            format!(", deadline={}s", self.failure.deadline_s)
+        } else {
+            String::new()
+        };
+        let outage = if self.outage.enabled() {
+            format!(
+                ", outage {:.3}/{:.3}",
+                self.outage.fail_prob, self.outage.recover_prob
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}, \
-             jitter={}, dropout={}, {}",
+             jitter={}, dropout={}{deadline}{outage}, devices={devices}, {}",
             self.base.num_edges,
             self.base.num_ues,
             self.base.eps,
@@ -668,6 +824,12 @@ shards = 8
         assert_eq!(explicit.chunk(17), 4);
         assert_eq!(explicit.chunk(3), 3);
         assert_eq!(explicit.chunk(0), 0);
+        // An extra dynamic (the outage process) forces one-round epochs
+        // exactly like the block's own dynamics — unless epoch_rounds
+        // pins the chunk explicitly.
+        assert_eq!(stat.chunk_with(17, true), 1);
+        assert_eq!(stat.chunk_with(17, false), 17);
+        assert_eq!(explicit.chunk_with(17, true), 4);
     }
 
     #[test]
@@ -714,6 +876,77 @@ assoc_hysteresis = 0.5
         spec.validate().unwrap();
         assert!(ScenarioSpec::new().assoc_hysteresis(-1.0).validate().is_err());
         assert!(ScenarioSpec::new().assoc_hysteresis(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn devices_outage_deadline_toml_cli_builder() {
+        // Defaults: uniform fleet, no outages, no deadline.
+        let d = ScenarioSpec::default();
+        assert!(d.devices.is_empty());
+        assert!(!d.outage.enabled());
+        assert!(d.failure.deadline_s.is_infinite());
+        d.validate().unwrap();
+        // TOML.
+        let spec = ScenarioSpec::parse_toml(
+            r#"
+[scenario]
+num_edges = 4
+num_ues = 40
+[failure]
+deadline_s = 2.5
+[devices]
+classes = "flagship:0.2:1.0:1.0:1.0, iot:0.8:0.1:0.5:2.0"
+[outage]
+fail_prob = 0.1
+recover_prob = 0.4
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.devices.classes.len(), 2);
+        assert_eq!(spec.devices.classes[1].name, "iot");
+        assert_eq!(spec.devices.classes[1].f_cpu_scale, 0.1);
+        assert_eq!(spec.failure.deadline_s, 2.5);
+        assert!(spec.outage.enabled());
+        assert_eq!(spec.outage.recover_prob, 0.4);
+        // CLI overrides.
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args(
+            "scenario --deadline 1.5 --outage-fail 0.2 --outage-recover 0.5 \
+             --device-classes fast:1:1:1:1,slow:1:0.5:1:1",
+        ))
+        .unwrap();
+        assert_eq!(spec.failure.deadline_s, 1.5);
+        assert_eq!(spec.outage.fail_prob, 0.2);
+        assert_eq!(spec.devices.classes.len(), 2);
+        spec.validate().unwrap();
+        let s = spec.summary();
+        assert!(s.contains("outage 0.200/0.500"), "{s}");
+        assert!(s.contains("deadline=1.5s"), "{s}");
+        assert!(s.contains("2 classes"), "{s}");
+        // Builder + validation rejections.
+        ScenarioSpec::new()
+            .device_class("a", 1.0, 1.0, 1.0, 1.0)
+            .outage(0.1, 0.5)
+            .deadline(3.0)
+            .validate()
+            .unwrap();
+        assert!(ScenarioSpec::new().deadline(0.0).validate().is_err());
+        assert!(ScenarioSpec::new().deadline(f64::NAN).validate().is_err());
+        assert!(ScenarioSpec::new().outage(1.5, 0.0).validate().is_err());
+        assert!(ScenarioSpec::new().outage(0.1, -0.2).validate().is_err());
+        // recover_prob alone would silently never fire: rejected.
+        assert!(ScenarioSpec::new().outage(0.0, 0.5).validate().is_err());
+        assert!(ScenarioSpec::new().outage(0.0, 0.0).validate().is_ok());
+        // Outages on a single-edge world are rejected (the feasibility
+        // veto would pin it up forever — a silent no-op spec).
+        assert!(ScenarioSpec::new().edges(1).outage(0.5, 0.5).validate().is_err());
+        assert!(ScenarioSpec::new()
+            .device_class("x", -1.0, 1.0, 1.0, 1.0)
+            .validate()
+            .is_err());
+        // A bad CLI device spec surfaces as a CLI error.
+        let mut bad = ScenarioSpec::default();
+        assert!(bad.apply_args(&args("scenario --device-classes nope:1:1")).is_err());
     }
 
     #[test]

@@ -58,6 +58,15 @@ pub struct SimConfig {
     /// epochs by carrying one epoch's end time into the next epoch's
     /// `start_s`, so makespans accrue bit-exactly across re-solves.
     pub start_s: f64,
+    /// Per-edge-round aggregation deadline τ_dl (seconds), measured from
+    /// the round's start. A scheduled upload arriving after
+    /// `t0 + deadline_s` is dropped at the barrier (counted in
+    /// [`SimResult::late_uploads`]) and the barrier then closes exactly
+    /// at the deadline — the edge cannot know further uploads stopped
+    /// coming, so it waits the whole window out. `f64::INFINITY`
+    /// (the default) disables the deadline: the barrier waits for the
+    /// slowest scheduled member, the pre-deadline behavior.
+    pub deadline_s: f64,
 }
 
 impl SimConfig {
@@ -70,6 +79,7 @@ impl SimConfig {
             dropout_prob: 0.0,
             seed: 0,
             start_s: 0.0,
+            deadline_s: f64::INFINITY,
         }
     }
 }
@@ -87,21 +97,161 @@ pub struct SimResult {
     pub events: u64,
     /// UE-round uploads dropped by failure injection.
     pub dropped_uploads: u64,
+    /// UE-round uploads that missed the aggregation deadline (scheduled
+    /// and computed, but arrived after the barrier closed).
+    pub late_uploads: u64,
+    /// UE-round uploads scheduled in total (every member of every edge
+    /// round, dropouts and stragglers included) — the denominator of the
+    /// participation rate.
+    pub scheduled_uploads: u64,
     /// Cumulative time edges spent waiting at the cloud barrier.
     pub edge_barrier_wait_s: f64,
-    /// Cumulative time the per-edge aggregation barrier waited on its
-    /// slowest member (straggler cost).
+    /// Cumulative time the per-edge aggregation barrier waited — against
+    /// the barrier that *actually closed*: the slowest aggregated member
+    /// without a deadline, the deadline itself when it dropped someone.
     pub ue_barrier_wait_s: f64,
     /// Cloud rounds executed.
     pub rounds: u64,
 }
 
+impl SimResult {
+    /// Uploads that made their barrier: scheduled − dropout − late.
+    pub fn delivered_uploads(&self) -> u64 {
+        self.scheduled_uploads - self.dropped_uploads - self.late_uploads
+    }
+
+    /// Fraction of scheduled uploads aggregated (1.0 when nothing ran).
+    pub fn participation_rate(&self) -> f64 {
+        if self.scheduled_uploads == 0 {
+            1.0
+        } else {
+            self.delivered_uploads() as f64 / self.scheduled_uploads as f64
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Event {
     /// UE `ue_slot` of edge `edge` delivered its model for edge round `k`.
+    /// Declared before [`Event::BarrierDeadline`] so an upload landing
+    /// exactly on the deadline aggregates before the barrier closes.
     UeUploadDone { edge: usize, ue_slot: usize, k: u64 },
+    /// τ_dl elapsed for edge round `k` of `edge`: the barrier closes now.
+    /// Only scheduled when some member of the round missed the deadline.
+    BarrierDeadline { edge: usize, k: u64 },
     /// Edge `edge` delivered its aggregate to the cloud.
     EdgeUploadDone { edge: usize },
+}
+
+type Heap = BinaryHeap<Reverse<(OrdF64, Event)>>;
+
+/// Jittered duration: lognormal multiplier with median 1 (no rng draw at
+/// σ = 0, keeping the deterministic stream byte-compatible).
+#[inline]
+fn dur(base: f64, sigma: f64, rng: &mut Rng) -> f64 {
+    if sigma <= 0.0 {
+        base
+    } else {
+        base * (sigma * rng.normal()).exp()
+    }
+}
+
+/// Start edge round `k` of `edge` at `t0`: draw dropout + jitter per
+/// member (identical draw order to the pre-deadline engine), enqueue the
+/// arrivals that make the deadline, and — when some scheduled member
+/// misses τ_dl — enqueue the barrier's forced close at `t0 + τ_dl`.
+/// Returns `(ontime, forced)`: `forced` means the barrier closes at the
+/// deadline rather than on the last arrival. When every member dropped
+/// out (and nobody was merely late) the edge skips its remaining edge
+/// rounds and forwards the stale aggregate immediately, exactly like the
+/// pre-deadline engine; a round whose members all *missed the deadline*
+/// instead waits the window out and continues — the edge only learns the
+/// uploads are missing once τ_dl elapses.
+#[allow(clippy::too_many_arguments)]
+fn launch_round(
+    inst: &DelayInstance,
+    cfg: &SimConfig,
+    edge: usize,
+    k: u64,
+    t0: f64,
+    rng: &mut Rng,
+    heap: &mut Heap,
+    result: &mut SimResult,
+) -> (usize, bool) {
+    let e = &inst.per_edge[edge];
+    let mut ontime = 0usize;
+    let mut late = 0u64;
+    for (slot, &(cmp, com)) in e.ue.iter().enumerate() {
+        result.scheduled_uploads += 1;
+        if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
+            result.dropped_uploads += 1;
+            continue;
+        }
+        let t =
+            t0 + cfg.a as f64 * dur(cmp, cfg.jitter_sigma, rng) + dur(com, cfg.jitter_sigma, rng);
+        if t > t0 + cfg.deadline_s {
+            result.late_uploads += 1;
+            late += 1;
+            continue;
+        }
+        ontime += 1;
+        heap.push(Reverse((
+            OrdF64(t),
+            Event::UeUploadDone { edge, ue_slot: slot, k },
+        )));
+    }
+    let forced = late > 0;
+    if forced {
+        heap.push(Reverse((
+            OrdF64(t0 + cfg.deadline_s),
+            Event::BarrierDeadline { edge, k },
+        )));
+    } else if ontime == 0 {
+        // Every member dropped out this round: the edge skips its b edge
+        // rounds and forwards the stale aggregate.
+        let tb = t0 + dur(e.backhaul_s, cfg.jitter_sigma, rng);
+        heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
+    }
+    (ontime, forced)
+}
+
+/// Advance `edge` past an aggregation barrier that closed at `t_close`:
+/// account the straggler wait against the close that actually happened,
+/// then start the next edge round or upload the aggregate to the cloud.
+#[allow(clippy::too_many_arguments)]
+fn advance_edge(
+    inst: &DelayInstance,
+    cfg: &SimConfig,
+    edge: usize,
+    t_close: f64,
+    rng: &mut Rng,
+    heap: &mut Heap,
+    result: &mut SimResult,
+    edge_round: &mut [u64],
+    pending: &mut [usize],
+    forced: &mut [bool],
+    first_arrival: &mut [f64],
+) {
+    // Straggler cost: barrier close − first arrival. Without a deadline
+    // the close IS the last arrival (the historical accounting); with a
+    // forced close it is the deadline, never the late member that was
+    // dropped (the pre-fix accounting would have charged the barrier for
+    // an upload it did not wait for).
+    if first_arrival[edge].is_finite() {
+        result.ue_barrier_wait_s += t_close - first_arrival[edge];
+    }
+    first_arrival[edge] = f64::INFINITY;
+    edge_round[edge] += 1;
+    if edge_round[edge] < cfg.b {
+        let (ontime, f) =
+            launch_round(inst, cfg, edge, edge_round[edge], t_close, rng, heap, result);
+        pending[edge] = ontime;
+        forced[edge] = f;
+    } else {
+        // b edge rounds done: upload aggregate to the cloud.
+        let tb = t_close + dur(inst.per_edge[edge].backhaul_s, cfg.jitter_sigma, rng);
+        heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
+    }
 }
 
 /// Run the protocol. See module docs.
@@ -124,18 +274,11 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
         round_end_s: Vec::with_capacity(rounds as usize),
         events: 0,
         dropped_uploads: 0,
+        late_uploads: 0,
+        scheduled_uploads: 0,
         edge_barrier_wait_s: 0.0,
         ue_barrier_wait_s: 0.0,
         rounds,
-    };
-
-    // Jittered duration: lognormal multiplier with median 1.
-    let dur = |base: f64, rng: &mut Rng| -> f64 {
-        if cfg.jitter_sigma <= 0.0 {
-            base
-        } else {
-            base * (cfg.jitter_sigma * rng.normal()).exp()
-        }
     };
 
     // Edges without members do not take part in a round at all: nothing
@@ -147,44 +290,24 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
 
     let mut now = cfg.start_s;
     for _round in 0..rounds {
-        let mut heap: BinaryHeap<Reverse<(OrdF64, Event)>> = BinaryHeap::new();
+        let mut heap: Heap = BinaryHeap::new();
 
         // Edge state for this cloud round.
         let mut edge_round: Vec<u64> = vec![0; m_edges]; // current k
         let mut pending: Vec<usize> = vec![0; m_edges]; // uploads still awaited
+        let mut forced: Vec<bool> = vec![false; m_edges]; // deadline closes the barrier
         let mut first_arrival: Vec<f64> = vec![f64::INFINITY; m_edges];
         let mut edges_pending = participating;
         let mut edge_done_at: Vec<f64> = vec![f64::NAN; m_edges];
 
         // Kick off edge round 0 at `now` for every participating edge.
-        for (m, e) in inst.per_edge.iter().enumerate() {
-            if e.ue.is_empty() {
+        for m in 0..m_edges {
+            if inst.per_edge[m].ue.is_empty() {
                 continue;
             }
-            let mut live = 0;
-            for (slot, &(cmp, com)) in e.ue.iter().enumerate() {
-                if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
-                    result.dropped_uploads += 1;
-                    continue;
-                }
-                live += 1;
-                let t = now + cfg.a as f64 * dur(cmp, &mut rng) + dur(com, &mut rng);
-                heap.push(Reverse((
-                    OrdF64(t),
-                    Event::UeUploadDone {
-                        edge: m,
-                        ue_slot: slot,
-                        k: 0,
-                    },
-                )));
-            }
-            pending[m] = live;
-            // Every member dropped out this round: the edge skips its b
-            // edge rounds and forwards the stale aggregate.
-            if live == 0 {
-                let t = now + dur(e.backhaul_s, &mut rng);
-                heap.push(Reverse((OrdF64(t), Event::EdgeUploadDone { edge: m })));
-            }
+            let (ontime, f) = launch_round(inst, cfg, m, 0, now, &mut rng, &mut heap, &mut result);
+            pending[m] = ontime;
+            forced[m] = f;
         }
 
         let mut cloud_round_end = now;
@@ -196,46 +319,46 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
                     let _ = ue_slot;
                     first_arrival[edge] = first_arrival[edge].min(t);
                     pending[edge] -= 1;
-                    if pending[edge] > 0 {
-                        continue;
+                    // A forced barrier holds until its deadline even once
+                    // every on-time member arrived.
+                    if pending[edge] == 0 && !forced[edge] {
+                        advance_edge(
+                            inst,
+                            cfg,
+                            edge,
+                            t,
+                            &mut rng,
+                            &mut heap,
+                            &mut result,
+                            &mut edge_round,
+                            &mut pending,
+                            &mut forced,
+                            &mut first_arrival,
+                        );
                     }
-                    // Barrier complete: straggler wait = last - first.
-                    if first_arrival[edge].is_finite() {
-                        result.ue_barrier_wait_s += t - first_arrival[edge];
-                    }
-                    first_arrival[edge] = f64::INFINITY;
-                    edge_round[edge] += 1;
-                    if edge_round[edge] < cfg.b {
-                        // Next edge round: every member restarts at `t`.
-                        let k_next = edge_round[edge];
-                        let mut live = 0;
-                        for (slot, &(cmp, com)) in inst.per_edge[edge].ue.iter().enumerate() {
-                            if cfg.dropout_prob > 0.0 && rng.f64() < cfg.dropout_prob {
-                                result.dropped_uploads += 1;
-                                continue;
-                            }
-                            live += 1;
-                            let tn = t + cfg.a as f64 * dur(cmp, &mut rng) + dur(com, &mut rng);
-                            heap.push(Reverse((
-                                OrdF64(tn),
-                                Event::UeUploadDone {
-                                    edge,
-                                    ue_slot: slot,
-                                    k: k_next,
-                                },
-                            )));
-                        }
-                        pending[edge] = live;
-                        if live == 0 {
-                            // Everyone dropped: skip straight to backhaul.
-                            let tb = t + dur(inst.per_edge[edge].backhaul_s, &mut rng);
-                            heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
-                        }
-                    } else {
-                        // b edge rounds done: upload aggregate to the cloud.
-                        let tb = t + dur(inst.per_edge[edge].backhaul_s, &mut rng);
-                        heap.push(Reverse((OrdF64(tb), Event::EdgeUploadDone { edge })));
-                    }
+                }
+                Event::BarrierDeadline { edge, k } => {
+                    // Every on-time arrival of this round timestamps at or
+                    // before the deadline (and the UeUploadDone variant
+                    // wins timestamp ties), so the round's arrivals are
+                    // all accounted for by now.
+                    debug_assert_eq!(k, edge_round[edge]);
+                    debug_assert!(forced[edge]);
+                    debug_assert_eq!(pending[edge], 0);
+                    forced[edge] = false;
+                    advance_edge(
+                        inst,
+                        cfg,
+                        edge,
+                        t,
+                        &mut rng,
+                        &mut heap,
+                        &mut result,
+                        &mut edge_round,
+                        &mut pending,
+                        &mut forced,
+                        &mut first_arrival,
+                    );
                 }
                 Event::EdgeUploadDone { edge } => {
                     edge_done_at[edge] = t;
@@ -490,5 +613,175 @@ mod tests {
         let r2 = simulate(&i, &cfg);
         assert_eq!(r1.total_time_s, r2.total_time_s);
         assert_eq!(r1.dropped_uploads, r2.dropped_uploads);
+    }
+
+    /// One slow straggler: arrivals at t0+0.1 and t0+1.0 each edge round.
+    fn straggler_inst() -> DelayInstance {
+        DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![(0.0, 0.1), (0.0, 1.0)],
+                backhaul_s: 0.05,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        }
+    }
+
+    #[test]
+    fn no_deadline_never_schedules_a_forced_close_bitwise() {
+        // deadline = ∞ and "deadline so large nobody is late" must be the
+        // same simulation, bit for bit, jitter/dropout rng stream
+        // included — the strict-generalization property at the sim level.
+        let i = inst();
+        let base = SimConfig {
+            jitter_sigma: 0.15,
+            dropout_prob: 0.05,
+            seed: 42,
+            ..SimConfig::deterministic(12, 4)
+        };
+        let huge = SimConfig {
+            deadline_s: 1e12,
+            ..base.clone()
+        };
+        let a = simulate(&i, &base);
+        let b = simulate(&i, &huge);
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.dropped_uploads, b.dropped_uploads);
+        assert_eq!(a.ue_barrier_wait_s.to_bits(), b.ue_barrier_wait_s.to_bits());
+        assert_eq!(b.late_uploads, 0);
+        assert_eq!(a.scheduled_uploads, b.scheduled_uploads);
+    }
+
+    #[test]
+    fn straggler_wait_pinned_without_deadline() {
+        // Regression pin of the pre-deadline accounting: the barrier
+        // closes on the slowest scheduled member, and the straggler wait
+        // is (last − first) per edge round.
+        let i = straggler_inst();
+        let cfg = SimConfig {
+            rounds: Some(3),
+            ..SimConfig::deterministic(1, 2)
+        };
+        let res = simulate(&i, &cfg);
+        // τ = max(0.1, 1.0) = 1.0; T = 2·1.0 + 0.05 per cloud round.
+        assert!((res.total_time_s - 3.0 * 2.05).abs() < 1e-9);
+        // Wait = 1.0 − 0.1 = 0.9 per edge round, 2 per cloud round, 3 rounds.
+        assert!((res.ue_barrier_wait_s - 0.9 * 6.0).abs() < 1e-9);
+        assert_eq!(res.late_uploads, 0);
+        assert_eq!(res.scheduled_uploads, 12);
+        assert_eq!(res.delivered_uploads(), 12);
+        assert!((res.participation_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_closes_at_the_deadline() {
+        let i = straggler_inst();
+        let cfg = SimConfig {
+            rounds: Some(3),
+            deadline_s: 0.5,
+            ..SimConfig::deterministic(1, 2)
+        };
+        let res = simulate(&i, &cfg);
+        // The slow member (arrival +1.0) misses τ_dl = 0.5 every round:
+        // the barrier closes at exactly the deadline.
+        assert!((res.total_time_s - 3.0 * (2.0 * 0.5 + 0.05)).abs() < 1e-9);
+        assert_eq!(res.late_uploads, 6, "one late member x 2 edge rounds x 3");
+        assert_eq!(res.dropped_uploads, 0);
+        assert_eq!(res.scheduled_uploads, 12);
+        assert_eq!(res.delivered_uploads(), 6);
+        assert!((res.participation_rate() - 0.5).abs() < 1e-12);
+        // Straggler wait is measured against the barrier that actually
+        // closed (the deadline), NOT the slowest scheduled member:
+        // 0.5 − 0.1 per edge round — not the pre-fix 1.0 − 0.1.
+        assert!((res.ue_barrier_wait_s - 0.4 * 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrival_exactly_on_the_deadline_is_aggregated() {
+        let i = DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![(0.0, 0.5)],
+                backhaul_s: 0.1,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        let cfg = SimConfig {
+            rounds: Some(2),
+            deadline_s: 0.5,
+            ..SimConfig::deterministic(1, 1)
+        };
+        let res = simulate(&i, &cfg);
+        assert_eq!(res.late_uploads, 0, "t == t0 + τ_dl is on time");
+        assert!((res.total_time_s - 2.0 * 0.6).abs() < 1e-9);
+        assert!((res.participation_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_late_round_waits_out_the_deadline_and_continues() {
+        // A round whose only member misses τ_dl: the edge cannot skip
+        // ahead (it only learns the upload is missing at the deadline),
+        // so each edge round costs exactly τ_dl and the stale aggregate
+        // goes up after the b rounds.
+        let i = DelayInstance {
+            per_edge: vec![EdgeDelays {
+                ue: vec![(0.0, 1.0)],
+                backhaul_s: 0.1,
+            }],
+            gamma: 4.0,
+            zeta: 6.0,
+            c_const: 1.0,
+            eps: 0.25,
+        };
+        let cfg = SimConfig {
+            rounds: Some(2),
+            deadline_s: 0.5,
+            ..SimConfig::deterministic(1, 2)
+        };
+        let res = simulate(&i, &cfg);
+        assert!((res.total_time_s - 2.0 * (2.0 * 0.5 + 0.1)).abs() < 1e-9);
+        assert_eq!(res.late_uploads, 4);
+        assert_eq!(res.delivered_uploads(), 0);
+        assert_eq!(res.participation_rate(), 0.0);
+        // Nobody arrived: no straggler wait accrues.
+        assert_eq!(res.ue_barrier_wait_s, 0.0);
+    }
+
+    #[test]
+    fn deadline_with_jitter_and_dropout_reproduces_and_terminates() {
+        // No cross-run makespan comparison here: with a shared rng,
+        // barrier-close order differs between deadline and no-deadline
+        // runs, so later draws land on different edges and the two runs
+        // simulate *different* random worlds (the deadline-shortens-
+        // barriers property only holds per-realization, i.e. in the
+        // deterministic tests above and the jitter-free scenario test).
+        let i = inst();
+        let cfg = SimConfig {
+            jitter_sigma: 0.3,
+            dropout_prob: 0.1,
+            deadline_s: 0.6,
+            seed: 17,
+            ..SimConfig::deterministic(10, 4)
+        };
+        let r1 = simulate(&i, &cfg);
+        let r2 = simulate(&i, &cfg);
+        assert_eq!(r1.total_time_s.to_bits(), r2.total_time_s.to_bits());
+        assert_eq!(r1.late_uploads, r2.late_uploads);
+        assert_eq!(
+            r1.scheduled_uploads,
+            r1.delivered_uploads() + r1.dropped_uploads + r1.late_uploads
+        );
+        assert!(r1.total_time_s.is_finite() && r1.total_time_s > 0.0);
+        // Every edge round is bounded by its deadline, so the makespan is
+        // bounded by rounds·(b·τ_dl + jittered backhaul) — sanity-check a
+        // generous version of that bound instead of a cross-run one.
+        let backhaul_max = i.per_edge.iter().map(|e| e.backhaul_s).fold(0.0, f64::max);
+        let bound = r1.rounds as f64 * (4.0 * 0.6 + 100.0 * backhaul_max);
+        assert!(r1.total_time_s <= bound, "{} > {bound}", r1.total_time_s);
     }
 }

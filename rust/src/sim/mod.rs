@@ -10,6 +10,10 @@
 //! * per-event lognormal jitter (`jitter_sigma`) — straggler modeling;
 //! * per-round UE dropout (`dropout_prob`) — failure injection (the edge
 //!   aggregates whoever arrived, like partial-participation FedAvg);
+//! * deadline-aware aggregation (`deadline_s`): the per-edge barrier
+//!   closes at τ_dl and drops late uploads as partial participation,
+//!   with straggler-wait accounted against the barrier that actually
+//!   closed;
 //! * per-round timelines and barrier-wait accounting (who is the
 //!   bottleneck, how much time edges idle at the cloud barrier);
 //! * an absolute start offset (`SimConfig::start_s`) so the scenario

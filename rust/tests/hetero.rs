@@ -1,0 +1,464 @@
+//! Heterogeneity / outage / deadline fault-surface harness (ISSUE 5).
+//!
+//! Three layers of property tests over the new subsystem:
+//!
+//! 1. **Strict generalization** — a single identity device class, no
+//!    outages and an infinite deadline reproduce the homogeneous stack
+//!    *bitwise* at the delay level (channel tables, `DelayInstance`,
+//!    frontiers), the sim level (event streams) and the scenario level
+//!    (whole `ScenarioOutcome`s).
+//! 2. **Outage equivalence** — failing an edge is observationally the
+//!    same as churn-departing its members and re-associating them with
+//!    the edge masked; warm == masked-cold for every policy.
+//! 3. **Degenerate device classes** — zero-weight classes, one-UE
+//!    fleets and 1000× `f_cpu` spreads keep `τ_max(a)` monotone in `a`,
+//!    which is exactly what the warm integer solver's pruned sweep needs
+//!    to stay exact.
+
+use hfl::assoc::{self, cold_reference_map_masked};
+use hfl::config::AssocStrategy;
+use hfl::delay::{DelayInstance, MaintainedInstance};
+use hfl::net::{Channel, DeviceClassSpec, SystemParams, Topology};
+use hfl::opt::{
+    solve_integer, solve_integer_maintained, solve_integer_warm, IntSolution, SolveOptions,
+};
+use hfl::scenario::{run_instance, ResolveMode, ScenarioOutcome, ScenarioSpec};
+use hfl::sim::{simulate, SimConfig};
+use hfl::util::proptest::check;
+
+/// The identity class spec: one class, every scale 1.0.
+fn identity_devices() -> DeviceClassSpec {
+    DeviceClassSpec::new().class("only", 1.0, 1.0, 1.0, 1.0)
+}
+
+/// A deliberately extreme fleet: flagship + 1000×-slower IoT nodes.
+fn spread_devices() -> DeviceClassSpec {
+    DeviceClassSpec::new()
+        .class("flagship", 1.0, 1.0, 1.0, 1.0)
+        .class("iot", 1.0, 0.001, 0.5, 2.0)
+}
+
+fn world_pair(
+    devices: &DeviceClassSpec,
+    edges: usize,
+    ues: usize,
+    seed: u64,
+) -> (Topology, Channel) {
+    let p = SystemParams::default();
+    let topo = Topology::sample_with_devices(&p, devices, edges, ues, seed);
+    let ch = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    (topo, ch)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Strict generalization: identity classes reproduce homogeneity bitwise.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_identity_class_reproduces_homogeneous_delay_and_sim_bitwise() {
+    check("identity device class == homogeneous, delay+sim", 16, |rng| {
+        let edges = rng.int_range(2, 5) as usize;
+        let ues = rng.int_range(edges as i64, (edges * 18) as i64) as usize;
+        let seed = rng.next_u64();
+        let p = SystemParams::default();
+        let plain = Topology::sample(&p, edges, ues, seed);
+        let single = Topology::sample_with_devices(&p, &identity_devices(), edges, ues, seed);
+        let ch_a = Channel::compute(&p, &plain.ues, &plain.edges);
+        let ch_b = Channel::compute(&p, &single.ues, &single.edges);
+        for (x, y) in ch_a.rate_bps.iter().zip(&ch_b.rate_bps) {
+            assert_eq!(x.to_bits(), y.to_bits(), "channel rates must match bitwise");
+        }
+        let cap = p.edge_capacity();
+        let assoc_a = assoc::time_minimized(&ch_a, cap).unwrap();
+        let assoc_b = assoc::time_minimized(&ch_b, cap).unwrap();
+        assert_eq!(assoc_a.edge_of, assoc_b.edge_of);
+        let ia = DelayInstance::build(&plain, &ch_a, &assoc_a, 0.25);
+        let ib = DelayInstance::build(&single, &ch_b, &assoc_b, 0.25);
+        for (ea, eb) in ia.per_edge.iter().zip(&ib.per_edge) {
+            assert_eq!(ea.ue, eb.ue, "per-UE delay pairs must match bitwise");
+        }
+        for a in [1.0, 7.0, 40.0] {
+            assert_eq!(ia.tau_max(a).to_bits(), ib.tau_max(a).to_bits());
+            for b in [1.0, 5.0] {
+                assert_eq!(ia.round_time(a, b).to_bits(), ib.round_time(a, b).to_bits());
+            }
+        }
+        // Sim level, jitter + dropout + (disabled) deadline: identical
+        // event streams and makespans.
+        let cfg = SimConfig {
+            jitter_sigma: 0.2,
+            dropout_prob: 0.1,
+            seed: seed ^ 0x51,
+            rounds: Some(3),
+            ..SimConfig::deterministic(10, 3)
+        };
+        let ra = simulate(&ia, &cfg);
+        let rb = simulate(&ib, &cfg);
+        assert_eq!(ra.total_time_s.to_bits(), rb.total_time_s.to_bits());
+        assert_eq!(ra.events, rb.events);
+        assert_eq!(ra.dropped_uploads, rb.dropped_uploads);
+        assert_eq!(ra.late_uploads, 0);
+        assert_eq!(rb.late_uploads, 0);
+    });
+}
+
+fn assert_outcomes_identical(x: &ScenarioOutcome, y: &ScenarioOutcome) {
+    assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+    assert_eq!(x.closed_form_s.to_bits(), y.closed_form_s.to_bits());
+    assert_eq!(x.rounds, y.rounds);
+    assert_eq!(x.epochs, y.epochs);
+    assert_eq!(x.converged, y.converged);
+    assert_eq!((x.a, x.b), (y.a, y.b));
+    assert_eq!(x.ab_per_epoch, y.ab_per_epoch);
+    assert_eq!(x.handovers, y.handovers);
+    assert_eq!(x.arrivals, y.arrivals);
+    assert_eq!(x.departures, y.departures);
+    assert_eq!(x.dropped_uploads, y.dropped_uploads);
+    assert_eq!(x.late_uploads, y.late_uploads);
+    assert_eq!(x.scheduled_uploads, y.scheduled_uploads);
+    assert_eq!(x.participation_rate.to_bits(), y.participation_rate.to_bits());
+    assert_eq!(x.events, y.events);
+    assert_eq!(x.ue_barrier_wait_s.to_bits(), y.ue_barrier_wait_s.to_bits());
+    assert_eq!(x.edge_barrier_wait_s.to_bits(), y.edge_barrier_wait_s.to_bits());
+    assert_eq!(x.reassociations, y.reassociations);
+}
+
+#[test]
+fn scenario_single_class_no_outage_no_deadline_is_the_homogeneous_run_bitwise() {
+    // The whole-stack strict-generalization property: a spec that *names*
+    // the new subsystem but configures it to the identity (one identity
+    // class, outage off, deadline = ∞) reproduces the plain spec's
+    // trajectory bit for bit — dynamics, failures and all.
+    let plain = ScenarioSpec::new()
+        .edges(3)
+        .ues(36)
+        .eps(0.1)
+        .seed(13)
+        .mobility(1.0, 4.0)
+        .churn(1.0, 0.08)
+        .jitter(0.15)
+        .dropout(0.05)
+        .epoch_rounds(1)
+        .max_epochs(48);
+    let with_identity = plain
+        .clone()
+        .devices(identity_devices())
+        .outage(0.0, 0.0)
+        .deadline(f64::INFINITY);
+    for seed in [3u64, 1009] {
+        let a = run_instance(&plain, seed).unwrap();
+        let b = run_instance(&with_identity, seed).unwrap();
+        assert_outcomes_identical(&a, &b);
+        assert_eq!(b.outages, 0);
+        assert_eq!(b.down_edge_epochs, 0);
+        assert_eq!(b.late_uploads, 0);
+        assert_eq!(b.participation_rate, a.participation_rate);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Outage equivalence + scenario-level outage behavior.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_outage_warm_equals_masked_cold_for_every_policy_and_hysteresis() {
+    check("outage warm == masked cold", 10, |rng| {
+        let edges = rng.int_range(3, 6) as usize;
+        // Leave an edge's worth of slack so any single outage is feasible.
+        let ues = rng.int_range(edges as i64, ((edges - 1) * 18) as i64) as usize;
+        let seed = rng.next_u64();
+        let hysteresis = if rng.f64() < 0.5 {
+            0.0
+        } else {
+            rng.range(0.1, 1.5)
+        };
+        let (topo, channel) = world_pair(&spread_devices(), edges, ues, seed);
+        let active = vec![true; ues];
+        let victim = rng.below(edges as u64) as usize;
+        let mut up = vec![true; edges];
+        up[victim] = false;
+        for strategy in [AssocStrategy::Proposed, AssocStrategy::Greedy, AssocStrategy::Exact] {
+            let mut ma = assoc::MaintainedAssociation::new(
+                strategy,
+                &topo,
+                &channel,
+                &active,
+                20,
+                hysteresis,
+                20.0,
+            )
+            .unwrap();
+            let before = ma.edge_of_global();
+            ma.sync(
+                &topo,
+                &channel,
+                &active,
+                &assoc::WorldDelta {
+                    downed: vec![victim],
+                    ..Default::default()
+                },
+                20.0,
+            )
+            .unwrap();
+            let cold = cold_reference_map_masked(
+                strategy,
+                &topo,
+                &channel,
+                &active,
+                Some(&up),
+                20,
+                20.0,
+            )
+            .unwrap();
+            assert_eq!(ma.edge_of_global(), cold, "{strategy:?} seed {seed}");
+            assert!(cold.iter().flatten().all(|&e| e != victim));
+            ma.sync(
+                &topo,
+                &channel,
+                &active,
+                &assoc::WorldDelta {
+                    restored: vec![victim],
+                    ..Default::default()
+                },
+                20.0,
+            )
+            .unwrap();
+            assert_eq!(ma.edge_of_global(), before, "{strategy:?} recovery");
+        }
+    });
+}
+
+#[test]
+fn outage_scenario_warm_equals_cold_and_fires() {
+    // Warm (incremental assoc + maintained delay + warm solver) and cold
+    // (from-scratch everything) trajectories must agree bit for bit on an
+    // outage-heavy churning world, and outages must actually happen.
+    let spec = ScenarioSpec::new()
+        .edges(4)
+        .ues(40)
+        .eps(0.02)
+        .seed(7)
+        .churn(0.5, 0.05)
+        .outage(0.4, 0.6)
+        .epoch_rounds(1)
+        .max_epochs(96);
+    for seed in [11u64, 46] {
+        let warm = run_instance(
+            &spec
+                .clone()
+                .resolve(ResolveMode::Warm)
+                .assoc_resolve(ResolveMode::Warm),
+            seed,
+        )
+        .unwrap();
+        let cold = run_instance(
+            &spec
+                .clone()
+                .resolve(ResolveMode::Cold)
+                .assoc_resolve(ResolveMode::Cold),
+            seed,
+        )
+        .unwrap();
+        assert_eq!(warm.ab_per_epoch, cold.ab_per_epoch, "seed {seed}");
+        assert_eq!(warm.makespan_s.to_bits(), cold.makespan_s.to_bits());
+        assert_eq!(warm.closed_form_s.to_bits(), cold.closed_form_s.to_bits());
+        assert_eq!(warm.outages, cold.outages);
+        assert_eq!(warm.recoveries, cold.recoveries);
+        assert_eq!(warm.down_edge_epochs, cold.down_edge_epochs);
+        assert_eq!(warm.handovers, cold.handovers);
+        assert!(
+            warm.outages > 0,
+            "4 edges x 0.4 fail over {} epochs never failed once (seed {seed})",
+            warm.epochs
+        );
+        assert!(warm.down_edge_epochs >= warm.outages);
+    }
+}
+
+#[test]
+fn outage_without_churn_or_mobility_still_fires() {
+    // The outage process alone must force epoching (no explicit
+    // epoch_rounds, no other dynamics) — regression for the chunking
+    // rule that would otherwise run everything in one epoch.
+    let spec = ScenarioSpec::new()
+        .edges(3)
+        .ues(24)
+        .eps(0.05)
+        .seed(5)
+        .outage(0.6, 0.4)
+        .max_epochs(128);
+    let out = run_instance(&spec, 19).unwrap();
+    assert!(out.epochs > 1, "outage spec must epoch round by round");
+    assert!(out.outages > 0, "outages must fire without churn/mobility");
+    assert!(out.converged);
+    // Determinism.
+    let again = run_instance(&spec, 19).unwrap();
+    assert_eq!(out.makespan_s.to_bits(), again.makespan_s.to_bits());
+    assert_eq!(out.outages, again.outages);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Degenerate device classes; τ_max monotonicity; warm-solver exactness.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_weight_class_is_never_sampled() {
+    let p = SystemParams::default();
+    let spec = DeviceClassSpec::new()
+        .class("main", 1.0, 1.0, 1.0, 1.0)
+        .class("ghost", 0.0, 0.001, 0.1, 10.0);
+    let t = Topology::sample_with_devices(&p, &spec, 3, 50, 5);
+    for ue in &t.ues {
+        assert_eq!(ue.cpu_hz.to_bits(), p.f_max_hz.to_bits(), "ghost class leaked");
+    }
+    // And the fleet is bitwise the homogeneous one.
+    let plain = Topology::sample(&p, 3, 50, 5);
+    for (a, b) in plain.ues.iter().zip(&t.ues) {
+        assert_eq!(a.cycles_per_sample.to_bits(), b.cycles_per_sample.to_bits());
+        assert_eq!(a.tx_power_w.to_bits(), b.tx_power_w.to_bits());
+    }
+}
+
+#[test]
+fn one_ue_fleet_with_classes_solves() {
+    let p = SystemParams::default();
+    let t = Topology::sample_with_devices(&p, &spread_devices(), 1, 1, 3);
+    let ch = Channel::compute(&p, &t.ues, &t.edges);
+    let a = assoc::time_minimized(&ch, p.edge_capacity()).unwrap();
+    let inst = DelayInstance::build(&t, &ch, &a, 0.25);
+    let sol = solve_integer(&inst, &SolveOptions::default());
+    assert!(sol.a >= 1 && sol.b >= 1);
+    assert!(sol.objective.is_finite() && sol.objective > 0.0);
+}
+
+#[test]
+fn prop_extreme_spread_keeps_tau_max_monotone_and_warm_solver_exact() {
+    check("1000x f_cpu spread: τ_max monotone, warm == cold", 12, |rng| {
+        let edges = rng.int_range(2, 5) as usize;
+        let ues = rng.int_range(edges as i64, (edges * 15) as i64) as usize;
+        let seed = rng.next_u64();
+        let (topo, channel) = world_pair(&spread_devices(), edges, ues, seed);
+        let cap = topo.params.edge_capacity();
+        let association = assoc::time_minimized(&channel, cap).unwrap();
+        let inst = DelayInstance::build(&topo, &channel, &association, 0.25);
+
+        // τ_max(a) = max over per-UE lines with nonnegative slopes: it
+        // must stay nondecreasing in a no matter how wild the spread —
+        // the premise of the warm integer solver's pruning bounds.
+        let mut prev = f64::NEG_INFINITY;
+        for a in 1..=80u64 {
+            let tau = inst.tau_max(a as f64);
+            assert!(
+                tau >= prev,
+                "τ_max not monotone at a={a}: {tau} < {prev} (seed {seed})"
+            );
+            prev = tau;
+        }
+
+        // Warm integer re-solve stays exactness-preserving on the
+        // heterogeneous instance, from good and garbage seeds alike.
+        let opts = SolveOptions::default();
+        let cold = solve_integer(&inst, &opts);
+        for warm_seed in [
+            (1u64, 1u64),
+            (cold.a, cold.b),
+            (200, 100),
+            (cold.a + 5, cold.b.saturating_sub(2).max(1)),
+        ] {
+            let prev_sol = IntSolution {
+                a: warm_seed.0,
+                b: warm_seed.1,
+                objective: f64::INFINITY,
+                rounds: 1,
+                round_time: 0.0,
+            };
+            let warm = solve_integer_warm(&inst, &opts, &prev_sol);
+            assert_eq!((warm.a, warm.b), (cold.a, cold.b), "seed {seed}");
+            assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+        }
+
+        // The maintained (frontier-cached) evaluation agrees bitwise with
+        // the full per-UE scan on the heterogeneous fleet, and the
+        // maintained warm solver lands on the same cell.
+        let edge_of: Vec<Option<usize>> = association.edge_of.iter().map(|&e| Some(e)).collect();
+        let mut maintained = MaintainedInstance::build(&topo, &channel, &edge_of, 0.25);
+        maintained.refresh();
+        for a in [1.0, 9.0, 33.0, 77.0] {
+            assert_eq!(maintained.tau_max(a).to_bits(), inst.tau_max(a).to_bits());
+            for b in [1.0, 4.0, 21.0] {
+                assert_eq!(
+                    maintained.round_time(a, b).to_bits(),
+                    inst.round_time(a, b).to_bits()
+                );
+            }
+        }
+        let warm = solve_integer_maintained(&mut maintained, &opts, Some((cold.a, cold.b)));
+        assert_eq!((warm.a, warm.b), (cold.a, cold.b));
+        assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+    });
+}
+
+#[test]
+fn hetero_fleet_slows_rounds_relative_to_uniform() {
+    // Same seed, same positions, same association (power scale 1 keeps
+    // SNR untouched): slowing half the fleet's CPUs can only raise τ and
+    // the round time at any fixed (a, b). The 100x slowdown makes the
+    // strict inequality certain as soon as a single UE lands in the slow
+    // class (its compute line alone dwarfs the whole uniform τ_max).
+    let p = SystemParams::default();
+    let devices = DeviceClassSpec::new()
+        .class("fast", 1.0, 1.0, 1.0, 1.0)
+        .class("slow", 1.0, 0.01, 1.0, 1.0);
+    let plain = Topology::sample(&p, 3, 45, 17);
+    let hetero = Topology::sample_with_devices(&p, &devices, 3, 45, 17);
+    let ch_a = Channel::compute(&p, &plain.ues, &plain.edges);
+    let ch_b = Channel::compute(&p, &hetero.ues, &hetero.edges);
+    let cap = p.edge_capacity();
+    let assoc_a = assoc::time_minimized(&ch_a, cap).unwrap();
+    let assoc_b = assoc::time_minimized(&ch_b, cap).unwrap();
+    assert_eq!(assoc_a.edge_of, assoc_b.edge_of, "SNR untouched => same map");
+    let ia = DelayInstance::build(&plain, &ch_a, &assoc_a, 0.25);
+    let ib = DelayInstance::build(&hetero, &ch_b, &assoc_b, 0.25);
+    for a in [5.0, 20.0, 60.0] {
+        assert!(ib.tau_max(a) >= ia.tau_max(a));
+        assert!(ib.round_time(a, 3.0) >= ia.round_time(a, 3.0));
+    }
+    assert!(
+        ib.tau_max(60.0) > ia.tau_max(60.0),
+        "a 100x CPU slowdown on half the fleet must bite at large a"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Deadline-aware aggregation at the scenario level.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_scenario_records_partial_participation() {
+    let base = ScenarioSpec::new()
+        .edges(3)
+        .ues(30)
+        .eps(0.25)
+        .seed(2)
+        .devices(spread_devices());
+    let nodl = run_instance(&base, 5).unwrap();
+    assert_eq!(nodl.late_uploads, 0);
+    assert_eq!(nodl.participation_rate, 1.0);
+    assert!(nodl.scheduled_uploads > 0);
+
+    // τ_max is the slowest member's full round duration at the solved a:
+    // half of it is a deadline some member must miss (the argmax one),
+    // while t > 0 members still make it on a spread fleet.
+    let tight = base.clone().deadline(nodl.tau_max_s * 0.5);
+    let dl = run_instance(&tight, 5).unwrap();
+    assert!(dl.late_uploads > 0, "a τ_max/2 deadline must drop the slowest member");
+    assert!(dl.participation_rate < 1.0);
+    assert!(dl.participation_rate > 0.0, "the fast class still participates");
+    assert_eq!(dl.scheduled_uploads, nodl.scheduled_uploads);
+    // Closing barriers early can only shorten the run.
+    assert!(dl.makespan_s <= nodl.makespan_s + 1e-9);
+    // Deterministic.
+    let again = run_instance(&tight, 5).unwrap();
+    assert_eq!(dl.makespan_s.to_bits(), again.makespan_s.to_bits());
+    assert_eq!(dl.late_uploads, again.late_uploads);
+}

@@ -138,6 +138,12 @@ fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
         assert_eq!(x.arrivals, y.arrivals);
         assert_eq!(x.departures, y.departures);
         assert_eq!(x.dropped_uploads, y.dropped_uploads);
+        assert_eq!(x.late_uploads, y.late_uploads);
+        assert_eq!(x.scheduled_uploads, y.scheduled_uploads);
+        assert_eq!(x.participation_rate.to_bits(), y.participation_rate.to_bits());
+        assert_eq!(x.outages, y.outages);
+        assert_eq!(x.recoveries, y.recoveries);
+        assert_eq!(x.down_edge_epochs, y.down_edge_epochs);
         assert_eq!(x.events, y.events);
         assert_eq!(x.ue_barrier_wait_s.to_bits(), y.ue_barrier_wait_s.to_bits());
         assert_eq!(
