@@ -9,11 +9,16 @@ runners (cold and warm are timed on the same machine in the same run).
 Raw wall-clock metrics such as instances_per_s are printed for context
 but never gate.
 
+Every run (pass or fail) prints a per-metric old -> new delta table so
+the perf trajectory is visible in green CI logs, not only in autopsies.
+
 Skips cleanly (exit 0) when a committed baseline is still a schema stub
 ("generated": false) — the stub era's escape hatch: the first CI run on a
 real toolchain produces measured artifacts, and the gate starts biting
-once a measured baseline is committed. A fresh file that is *itself* a
-stub is an error: it means the real bench run did not happen.
+once a measured baseline is committed. The skip is LOUD (a !!! WARNING
+banner) so stub baselines cannot quietly outlive the toolchain-less
+container era. A fresh file that is *itself* a stub is an error: it
+means the real bench run did not happen.
 
 Usage:
   python3 python/check_bench.py --baseline-dir .bench_baselines \
@@ -65,42 +70,83 @@ def info_metrics_of(doc: dict) -> dict[str, float]:
     return out
 
 
+STUB_BANNER = (
+    '!!! WARNING: {name}: committed baseline is a schema stub ("generated" != true).\n'
+    "!!!          The perf gate is SKIPPED for this bench. Run the bench in full mode\n"
+    "!!!          on a real toolchain and commit the measured BENCH file to arm it."
+)
+
+
+def delta_pct(base_val: float | None, fresh_val: float) -> str:
+    """Signed old -> new percentage change, or n/a without a baseline."""
+    if base_val is None or base_val == 0:
+        return "n/a"
+    return f"{(fresh_val - base_val) / abs(base_val) * 100.0:+.1f}%"
+
+
+def render_table(rows: list[tuple[str, str, str, str, str]]) -> list[str]:
+    widths = [max(len(r[i]) for r in rows) for i in range(5)]
+    return [
+        "  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip() for row in rows
+    ]
+
+
 def compare(baseline: dict, fresh: dict, tolerance: float) -> tuple[list[str], list[str]]:
-    """Returns (regressions, notes) for one baseline/fresh pair."""
+    """Returns (regressions, notes) for one baseline/fresh pair.
+
+    The notes always carry a full old -> new delta table — gated speedup
+    ratios first, then the informational throughput rows — printed on
+    every run, not only on failure.
+    """
     notes: list[str] = []
     name = fresh.get("bench") or baseline.get("bench") or "?"
     if baseline.get("generated") is not True:
-        notes.append(f"{name}: baseline is a schema stub (generated != true) — skipped")
+        notes.append(STUB_BANNER.format(name=name))
         return [], notes
     if fresh.get("generated") is not True:
         return [f"{name}: fresh file is not a measured run (generated != true)"], notes
     base_m = metrics_of(baseline)
     fresh_m = metrics_of(fresh)
     base_info = info_metrics_of(baseline)
-    for key, fresh_val in sorted(info_metrics_of(fresh).items()):
-        base_val = base_info.get(key)
-        base_txt = f"{base_val:.3f}" if base_val is not None else "n/a"
-        notes.append(f"{name}/{key}: baseline {base_txt} fresh {fresh_val:.3f} (info only)")
+    fresh_info = info_metrics_of(fresh)
+
+    rows: list[tuple[str, str, str, str, str]] = [
+        ("metric", "baseline", "fresh", "delta", "status")
+    ]
     regressions: list[str] = []
     for key, base_val in sorted(base_m.items()):
         if base_val <= 0:
-            notes.append(f"{name}/{key}: baseline {base_val} not positive — skipped")
+            rows.append((key, f"{base_val:.3f}", "-", "n/a", "skipped (baseline not positive)"))
             continue
         if key not in fresh_m:
+            rows.append((key, f"{base_val:.3f}", "MISSING", "n/a", "REGRESSION"))
             regressions.append(f"{name}/{key}: metric missing from fresh run")
             continue
         fresh_val = fresh_m[key]
         floor = base_val * (1.0 - tolerance)
-        verdict = "ok" if fresh_val >= floor else "REGRESSION"
-        notes.append(
-            f"{name}/{key}: baseline {base_val:.3f} fresh {fresh_val:.3f} "
-            f"floor {floor:.3f} -> {verdict}"
+        ok = fresh_val >= floor
+        rows.append(
+            (
+                key,
+                f"{base_val:.3f}",
+                f"{fresh_val:.3f}",
+                delta_pct(base_val, fresh_val),
+                "ok (gated)" if ok else "REGRESSION",
+            )
         )
-        if fresh_val < floor:
+        if not ok:
             regressions.append(
                 f"{name}/{key}: {fresh_val:.3f} < {floor:.3f} "
                 f"(baseline {base_val:.3f}, tolerance {tolerance:.0%})"
             )
+    for key, fresh_val in sorted(fresh_info.items()):
+        base_val = base_info.get(key)
+        base_txt = f"{base_val:.3f}" if base_val is not None else "n/a"
+        rows.append(
+            (key, base_txt, f"{fresh_val:.3f}", delta_pct(base_val, fresh_val), "info only")
+        )
+    notes.append(f"{name}: old -> new deltas (gate tolerance {tolerance:.0%}):")
+    notes.extend("  " + line for line in render_table(rows))
     return regressions, notes
 
 
@@ -150,9 +196,14 @@ def self_test() -> int:
     assert metrics_of(hetero) == {"hetero assoc warm speedup": 4.0}
     assert compare(hetero, hetero_slow_world, 0.25)[0] == []  # quality/throughput: info only
     assert compare(hetero, hetero_slow_speedup, 0.25)[0] != []  # 4x -> 1x ratio drop fails
-    assert compare(stub, good, 0.25)[0] == []  # stub baseline skips
+    regs, notes = compare(stub, good, 0.25)
+    assert regs == []  # stub baseline skips...
+    assert any("!!! WARNING" in n and "schema stub" in n for n in notes)  # ...loudly
     assert compare(good, good, 0.25)[0] == []  # equal passes
-    assert compare(good, slow, 0.25)[0] == []  # within tolerance passes
+    regs, notes = compare(good, slow, 0.25)
+    assert regs == []  # within tolerance passes
+    assert any("-20.0%" in n for n in notes)  # ...but the delta table shows the drift
+    assert delta_pct(10.0, 8.0) == "-20.0%" and delta_pct(None, 8.0) == "n/a"
     assert compare(good, bad, 0.25)[0] != []  # 5x drop fails
     assert compare(thr, thr_bad, 0.25)[0] == []  # runner-dependent: info only
     assert compare(good, stub, 0.25)[0] != []  # fresh stub fails

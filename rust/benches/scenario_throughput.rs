@@ -8,7 +8,7 @@
 //! the current directory (run from the repo root to refresh the checked-in
 //! baseline).
 
-use hfl::scenario::{run_batch, shard_count, ScenarioSpec};
+use hfl::scenario::{run_batch, run_batch_traced, shard_count, ScenarioSpec};
 use hfl::util::bench::{section, short_mode};
 use hfl::util::json::Json;
 
@@ -20,33 +20,60 @@ struct Row {
     instances_per_s: f64,
 }
 
-/// Run a batch `repeats` times, keep the best wall-clock.
-fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
+/// Run `run()` `repeats` times, keep the best (wall_s, shards) pair.
+fn measure_by<F: FnMut() -> (f64, usize)>(
+    name: &str,
+    instances: usize,
+    repeats: usize,
+    mut run: F,
+) -> Row {
     let mut best_wall = f64::INFINITY;
     let mut shards = 0;
     for _ in 0..repeats {
-        let batch = run_batch(spec).expect("bench batch must run");
-        if batch.wall_s < best_wall {
-            best_wall = batch.wall_s;
-            shards = batch.shards;
+        let (wall_s, sh) = run();
+        if wall_s < best_wall {
+            best_wall = wall_s;
+            shards = sh;
         }
     }
-    let ips = spec.batch.instances as f64 / best_wall;
+    let ips = instances as f64 / best_wall;
     println!(
         "{name:<44} {:>7} inst  {:>2} shards  {:>8.3}s  {:>10.1} inst/s",
-        spec.batch.instances, shards, best_wall, ips
+        instances, shards, best_wall, ips
     );
     println!(
-        "BENCH_JSON {{\"name\":\"{name}\",\"instances\":{},\"shards\":{shards},\"wall_s\":{best_wall:.4},\"instances_per_s\":{ips:.2}}}",
-        spec.batch.instances
+        "BENCH_JSON {{\"name\":\"{name}\",\"instances\":{instances},\"shards\":{shards},\"wall_s\":{best_wall:.4},\"instances_per_s\":{ips:.2}}}"
     );
     Row {
         name: name.to_string(),
-        instances: spec.batch.instances,
+        instances,
         shards,
         wall_s: best_wall,
         instances_per_s: ips,
     }
+}
+
+/// Run a batch `repeats` times, keep the best wall-clock.
+fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
+    measure_by(name, spec.batch.instances, repeats, || {
+        let batch = run_batch(spec).expect("bench batch must run");
+        (batch.wall_s, batch.shards)
+    })
+}
+
+/// Like [`measure`], but with a live per-instance `JsonlSink` (the
+/// `--trace` path). Info-only row: quantifies sink overhead against the
+/// untraced dynamic row above; the trace-off path itself stays on
+/// `NullSink` and is covered by the rows the gate already watches.
+fn measure_traced(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
+    measure_by(name, spec.batch.instances, repeats, || {
+        let (batch, sinks) = run_batch_traced(spec, |_, _| {}).expect("bench batch must run");
+        assert!(
+            sinks.iter().all(|s| !s.is_empty()),
+            "traced batch must produce per-instance event streams"
+        );
+        (batch.wall_s, batch.shards)
+    })
 }
 
 fn main() {
@@ -96,6 +123,26 @@ fn main() {
     rows.push(measure(
         &format!("dynamic 5x100, {dynamic_inst} inst, {auto} shards (auto)"),
         &dynamic_spec.clone().shards(0),
+        repeats,
+    ));
+
+    section("trace subsystem: JSONL sink overhead (info only)");
+    // Correctness before timing (repo idiom): tracing must not perturb
+    // a single outcome bit.
+    {
+        let spec = dynamic_spec.clone().shards(1);
+        let plain = run_batch(&spec).expect("plain batch must run");
+        let (traced, _) = run_batch_traced(&spec, |_, _| {}).expect("traced batch must run");
+        assert_eq!(plain.outcomes.len(), traced.outcomes.len());
+        for (p, t) in plain.outcomes.iter().zip(traced.outcomes.iter()) {
+            assert_eq!(p.makespan_s.to_bits(), t.makespan_s.to_bits());
+            assert_eq!(p.rounds, t.rounds);
+            assert_eq!(p.phase.counters, t.phase.counters);
+        }
+    }
+    rows.push(measure_traced(
+        &format!("traced dynamic 5x100, {dynamic_inst} inst, 1 shard"),
+        &dynamic_spec.clone().shards(1),
         repeats,
     ));
 

@@ -53,6 +53,7 @@ use super::LatencyTable;
 use crate::config::AssocStrategy;
 use crate::delay::{ue_compute_time, upload_time};
 use crate::net::{Channel, Topology};
+use crate::trace::{Counter, NullSink, TraceSink};
 
 /// Read-only world view the policies score against. `topo` is only
 /// required by the latency-keyed policies (exact / B&B); the SNR-keyed
@@ -660,6 +661,31 @@ impl MaintainedAssociation {
         hysteresis: f64,
         provisional_a: f64,
     ) -> Result<MaintainedAssociation, String> {
+        Self::new_traced(
+            strategy,
+            topo,
+            channel,
+            active,
+            cap,
+            hysteresis,
+            provisional_a,
+            &mut NullSink,
+        )
+    }
+
+    /// [`Self::new`] plus telemetry: dirty-set size / path counters go to
+    /// `sink`. The built association is identical to the untraced call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_traced(
+        strategy: AssocStrategy,
+        topo: &Topology,
+        channel: &Channel,
+        active: &[bool],
+        cap: usize,
+        hysteresis: f64,
+        provisional_a: f64,
+        sink: &mut dyn TraceSink,
+    ) -> Result<MaintainedAssociation, String> {
         let n = topo.num_ues();
         let m = topo.num_edges();
         check_edge_width(m)?;
@@ -701,7 +727,7 @@ impl MaintainedAssociation {
         for ue in 0..n {
             ma.mark_dirty(ue);
         }
-        ma.reassign(topo, channel, provisional_a)?;
+        ma.reassign(topo, channel, provisional_a, sink)?;
         ma.scored_load.copy_from_slice(&ma.load);
         Ok(ma)
     }
@@ -723,6 +749,21 @@ impl MaintainedAssociation {
         active: &[bool],
         delta: &WorldDelta,
         provisional_a: f64,
+    ) -> Result<(), String> {
+        self.sync_traced(topo, channel, active, delta, provisional_a, &mut NullSink)
+    }
+
+    /// [`Self::sync`] plus telemetry. The resulting association (and the
+    /// `reassociations`/`full_rebuilds` bookkeeping) is identical to the
+    /// untraced call — the sink only observes.
+    pub fn sync_traced(
+        &mut self,
+        topo: &Topology,
+        channel: &Channel,
+        active: &[bool],
+        delta: &WorldDelta,
+        provisional_a: f64,
+        sink: &mut dyn TraceSink,
     ) -> Result<(), String> {
         for &ue in &delta.departed {
             self.active[ue] = false;
@@ -777,18 +818,23 @@ impl MaintainedAssociation {
                 }
             }
             if !tripped.is_empty() {
+                let before = self.dirty_list.len();
                 for ue in 0..self.num_ues {
                     let e = self.edge_of[ue];
                     if self.active[ue] && e != usize::MAX && tripped.binary_search(&e).is_ok() {
                         self.mark_dirty(ue);
                     }
                 }
+                let rescored = (self.dirty_list.len() - before) as u64;
+                if rescored > 0 && sink.enabled() {
+                    sink.counter(Counter::AssocRescored, rescored);
+                }
                 for &e in &tripped {
                     self.scored_load[e] = self.load[e];
                 }
             }
         }
-        self.reassign(topo, channel, provisional_a)
+        self.reassign(topo, channel, provisional_a, sink)
     }
 
     /// The current association as the scenario engine consumes it
@@ -810,9 +856,14 @@ impl MaintainedAssociation {
         topo: &Topology,
         channel: &Channel,
         provisional_a: f64,
+        sink: &mut dyn TraceSink,
     ) -> Result<(), String> {
         let m = self.num_edges;
         let cap = self.cap;
+        let traced = sink.enabled();
+        if traced {
+            sink.counter(Counter::AssocDirty, self.dirty_list.len() as u64);
+        }
         let ids: Vec<usize> = (0..self.num_ues).filter(|&u| self.active[u]).collect();
         // `None` when every edge serves, so outage-free worlds take the
         // exact pre-outage paths (and error messages).
@@ -842,6 +893,9 @@ impl MaintainedAssociation {
                         top[ue] = first_up(row, mask);
                     }
                     self.reassociations += self.dirty_list.len() as u64;
+                    if self.mask_changed && traced {
+                        sink.counter(Counter::AssocMaskRetargets, 1);
+                    }
                     if self.mask_changed {
                         // Availability changed but no score did: retarget
                         // every cached argmax to its best *up* edge by
@@ -861,6 +915,9 @@ impl MaintainedAssociation {
                     if argmax_load.iter().all(|&l| l <= cap) {
                         // Fast path: the global sweep would assign every
                         // UE its top candidate (see module docs).
+                        if traced {
+                            sink.counter(Counter::AssocFastPath, 1);
+                        }
                         for x in self.edge_of.iter_mut() {
                             *x = usize::MAX;
                         }
@@ -870,6 +927,9 @@ impl MaintainedAssociation {
                     } else {
                         // Capacity binds somewhere: run the shared merge
                         // sweep over the cached rows.
+                        if traced {
+                            sink.counter(Counter::AssocMergeSweep, 1);
+                        }
                         self.full_rebuilds += 1;
                         self.reassociations += ids.len() as u64;
                         let assigned = merge_assign(&ids, rows, &ids, m, cap, mask, &|ue, e| {
@@ -940,6 +1000,9 @@ impl MaintainedAssociation {
                 WarmState::Cold => {
                     let policy = policy_for(self.strategy, provisional_a)?;
                     let assigned = policy.assign_cold(&ctx, &ids, cap)?;
+                    if traced {
+                        sink.counter(Counter::AssocMergeSweep, 1);
+                    }
                     self.reassociations += ids.len() as u64;
                     self.full_rebuilds += 1;
                     for x in self.edge_of.iter_mut() {

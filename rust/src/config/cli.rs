@@ -1,8 +1,10 @@
 //! Tiny CLI argument parser (offline substitute for `clap`).
 //!
-//! Grammar: `hfl <subcommand> [--key value]... [--flag]...`.
+//! Grammar: `hfl <subcommand> [POSITIONAL]... [--key value]... [--flag]...`.
 //! Values are parsed on demand (`f64`, `u64`, `usize`, `String`), unknown
-//! keys are rejected up front so typos fail fast.
+//! keys and unconsumed positionals are rejected up front so typos fail
+//! fast. A bare token that does not follow a `--key` is a positional
+//! (e.g. the trace file in `hfl trace run.jsonl`).
 
 use std::collections::BTreeMap;
 
@@ -11,7 +13,9 @@ pub struct Args {
     pub subcommand: Option<String>,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
+    positional: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    consumed_pos: std::cell::RefCell<Vec<usize>>,
 }
 
 #[derive(Debug)]
@@ -36,10 +40,13 @@ impl Args {
             }
         }
         while let Some(tok) = it.next() {
-            let key = tok
-                .strip_prefix("--")
-                .ok_or_else(|| CliError(format!("expected --option, got '{tok}'")))?
-                .to_string();
+            let key = match tok.strip_prefix("--") {
+                Some(k) => k.to_string(),
+                None => {
+                    args.positional.push(tok);
+                    continue;
+                }
+            };
             if key.is_empty() {
                 return Err(CliError("empty option name".into()));
             }
@@ -88,6 +95,15 @@ impl Args {
         Ok(self.get(name)?.unwrap_or(default))
     }
 
+    /// The `i`-th positional argument (0-based, after the subcommand).
+    pub fn pos(&self, i: usize) -> Option<String> {
+        let v = self.positional.get(i).cloned();
+        if v.is_some() {
+            self.consumed_pos.borrow_mut().push(i);
+        }
+        v
+    }
+
     /// After all lookups, reject options nobody consumed (typo guard).
     pub fn reject_unknown(&self) -> Result<(), CliError> {
         let consumed = self.consumed.borrow();
@@ -97,10 +113,21 @@ impl Args {
             .chain(self.flags.iter())
             .filter(|k| !consumed.contains(k))
             .collect();
-        if unknown.is_empty() {
+        if !unknown.is_empty() {
+            return Err(CliError(format!("unknown options: {unknown:?}")));
+        }
+        let consumed_pos = self.consumed_pos.borrow();
+        let stray: Vec<&String> = self
+            .positional
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !consumed_pos.contains(i))
+            .map(|(_, p)| p)
+            .collect();
+        if stray.is_empty() {
             Ok(())
         } else {
-            Err(CliError(format!("unknown options: {unknown:?}")))
+            Err(CliError(format!("unexpected arguments: {stray:?}")))
         }
     }
 }
@@ -141,6 +168,26 @@ mod tests {
         let a = parse("x --epss 0.1");
         let _ = a.get::<f64>("eps");
         assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn positionals_are_collected_and_guarded() {
+        let a = parse("trace run.jsonl --top 5");
+        assert_eq!(a.subcommand.as_deref(), Some("trace"));
+        // Unconsumed positional trips the typo guard...
+        let _ = a.get::<usize>("top");
+        assert!(a.reject_unknown().is_err());
+        // ...consuming it clears the guard.
+        assert_eq!(a.pos(0).as_deref(), Some("run.jsonl"));
+        assert_eq!(a.pos(1), None);
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn positional_after_kv_is_a_value_not_positional() {
+        let a = parse("scenario --spec s.toml out.jsonl");
+        assert_eq!(a.str("spec").as_deref(), Some("s.toml"));
+        assert_eq!(a.pos(0).as_deref(), Some("out.jsonl"));
     }
 
     #[test]

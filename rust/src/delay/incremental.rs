@@ -29,6 +29,7 @@
 
 use super::{cloud_rounds_int, ue_compute_time, upload_time, DelayInstance, EdgeDelays};
 use crate::net::{Channel, Topology};
+use crate::trace::{Counter, TraceSink};
 
 /// `max_n (a·cmp_n + com_n)` over a set of delay lines (0 when empty).
 #[inline]
@@ -68,6 +69,10 @@ pub struct MaintainedInstance {
     /// Cached Pareto frontier per edge (valid when not dirty).
     frontier: Vec<Vec<(f64, f64)>>,
     dirty: Vec<bool>,
+    /// Cumulative frontiers rebuilt by [`Self::refresh`] — deterministic
+    /// telemetry (the solver calls `refresh`, so this is a counter the
+    /// scenario loop reads by delta rather than a sink parameter).
+    frontier_rebuilds: u64,
 }
 
 impl MaintainedInstance {
@@ -102,6 +107,7 @@ impl MaintainedInstance {
             member: vec![Vec::new(); m],
             frontier: vec![Vec::new(); m],
             dirty: vec![true; m],
+            frontier_rebuilds: 0,
         };
         for (n, e) in edge_of.iter().enumerate() {
             if let Some(e) = e {
@@ -150,6 +156,22 @@ impl MaintainedInstance {
         for &n in touched {
             self.sync_one(n, edge_of[n], topo, channel);
         }
+    }
+
+    /// [`Self::sync_delta`] plus telemetry: reports the touched-set size
+    /// to `sink`. The maintained state is identical to the untraced call.
+    pub fn sync_delta_traced(
+        &mut self,
+        topo: &Topology,
+        channel: &Channel,
+        edge_of: &[Option<usize>],
+        touched: &[usize],
+        sink: &mut dyn TraceSink,
+    ) {
+        if sink.enabled() {
+            sink.counter(Counter::DelayTouched, touched.len() as u64);
+        }
+        self.sync_delta(topo, channel, edge_of, touched);
     }
 
     /// One UE's sync step, shared by [`Self::sync`] and
@@ -211,8 +233,15 @@ impl MaintainedInstance {
             if *dirty {
                 self.frontier[e] = pareto_frontier(&self.inst.per_edge[e].ue);
                 *dirty = false;
+                self.frontier_rebuilds += 1;
             }
         }
+    }
+
+    /// Cumulative per-edge frontier rebuilds performed by
+    /// [`Self::refresh`] over this instance's lifetime (deterministic).
+    pub fn frontier_rebuilds(&self) -> u64 {
+        self.frontier_rebuilds
     }
 
     #[inline]
@@ -444,6 +473,35 @@ mod tests {
                 assert_eq!(m.round_time(a, b).to_bits(), inst.round_time(a, b).to_bits());
             }
         }
+    }
+
+    #[test]
+    fn refresh_counts_frontier_rebuilds() {
+        let (topo, ch) = world(3);
+        let edge_of: Vec<Option<usize>> = (0..18).map(|i| Some(i % 3)).collect();
+        let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        assert_eq!(m.frontier_rebuilds(), 0);
+        m.refresh();
+        assert_eq!(m.frontier_rebuilds(), 3, "all edges dirty after build");
+        m.refresh();
+        assert_eq!(m.frontier_rebuilds(), 3, "clean refresh rebuilds nothing");
+    }
+
+    #[test]
+    fn sync_delta_traced_matches_untraced_and_counts() {
+        use crate::trace::StatsSink;
+        let (mut topo, mut ch) = world(13);
+        let edge_of: Vec<Option<usize>> = (0..18).map(|i| Some(i % 3)).collect();
+        let mut a = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        let mut b = a.clone();
+        topo.ues[5].pos = Position { x: 99.0, y: 44.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[5], &topo.edges);
+        let touched = vec![5usize, 11];
+        a.sync_delta(&topo, &ch, &edge_of, &touched);
+        let mut sink = StatsSink::default();
+        b.sync_delta_traced(&topo, &ch, &edge_of, &touched, &mut sink);
+        check_equal(&b, a.instance());
+        assert_eq!(sink.stats.count(Counter::DelayTouched), 2);
     }
 
     #[test]

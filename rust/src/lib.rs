@@ -37,6 +37,7 @@ pub mod opt;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Crate version (mirrors Cargo.toml).

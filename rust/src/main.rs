@@ -6,6 +6,8 @@
 //!   simulate   event-driven protocol latency simulation
 //!   scenario   declarative scenario batches (mobility/churn/failures)
 //!              over the parallel fleet runner, with a JSON report
+//!   trace      aggregate a `--trace` JSONL event stream into a per-phase
+//!              profile (time share, engine counters, slowest epochs)
 //!   train      run hierarchical FL training via the PJRT runtime
 //!   info       print scenario + artifact information
 //!
@@ -44,6 +46,7 @@ fn real_main() -> Result<()> {
         "associate" => cmd_associate(&args),
         "simulate" => cmd_simulate(&args),
         "scenario" => cmd_scenario(&args),
+        "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -67,6 +70,8 @@ SUBCOMMANDS
   simulate   event-driven latency simulation (supports --jitter, --dropout)
   scenario   run a declarative scenario batch (TOML spec; mobility, churn,
              failures) on the parallel fleet runner; emits a JSON report
+  trace      profile a scenario trace: `hfl trace run.jsonl` prints phase
+             time shares, engine counters, and the slowest epochs
   train      hierarchical FL training (LeNet via PJRT artifacts)
   info       scenario + artifact summary
 
@@ -126,6 +131,12 @@ SCENARIO OPTIONS
   --assoc-hysteresis H load-drift fraction of capacity that re-scores an
                        edge's members in warm mode (default 0.25)
   --report FILE        JSON report path (default results/scenario_report.json)
+  --trace FILE         write a JSONL trace event stream (per-epoch phase
+                       spans + engine counters; content is seed-deterministic)
+
+TRACE OPTIONS
+  hfl trace FILE       the JSONL file written by `hfl scenario --trace`
+  --top N              slowest epochs to list            (default 10)
 ";
 
 /// Build topology + channel + association for a scenario.
@@ -272,13 +283,30 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 
     let progress_every = (instances / 10).max(1);
     let mut completed = 0usize;
-    let batch = scenario::run_batch_with(&spec, |_, _| {
-        completed += 1;
-        if completed % progress_every == 0 || completed == instances {
+    fn progress(completed: &mut usize, instances: usize, every: usize) {
+        *completed += 1;
+        if *completed % every == 0 || *completed == instances {
             println!("  {completed}/{instances} instances done");
         }
-    })
-    .map_err(|e| anyhow!("{e}"))?;
+    }
+    // Traced batches collect one JSONL stream per instance (slotted by
+    // index, so the concatenation is shard-count independent).
+    let (batch, trace_out) = match spec.trace.file.clone() {
+        Some(path) => {
+            let (batch, sinks) = scenario::run_batch_traced(&spec, |_, _| {
+                progress(&mut completed, instances, progress_every)
+            })
+            .map_err(|e| anyhow!("{e}"))?;
+            (batch, Some((path, sinks)))
+        }
+        None => {
+            let batch = scenario::run_batch_with(&spec, |_, _| {
+                progress(&mut completed, instances, progress_every)
+            })
+            .map_err(|e| anyhow!("{e}"))?;
+            (batch, None)
+        }
+    };
 
     let report = BatchReport::from_outcomes(&batch.outcomes);
     report.print();
@@ -305,6 +333,41 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         results_dir.display(),
         report_path.display()
     );
+
+    if let Some((path, sinks)) = trace_out {
+        let mut stream = String::new();
+        for sink in &sinks {
+            stream.push_str(sink.as_str());
+        }
+        let path = std::path::PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, &stream)?;
+        println!(
+            "wrote trace event stream to {} ({} lines; inspect with `hfl trace {}`)",
+            path.display(),
+            stream.lines().count(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .pos(0)
+        .or_else(|| args.str("file"))
+        .ok_or_else(|| anyhow!("usage: hfl trace <FILE.jsonl> [--top N]"))?;
+    let topk = args.get_or("top", 10usize).map_err(|e| anyhow!("{e}"))?;
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("cannot read trace file '{path}': {e}"))?;
+    let profile = hfl::trace::TraceProfile::parse_jsonl(&text).map_err(|e| anyhow!("{e}"))?;
+    println!("trace file: {path}");
+    profile.print(topk);
     Ok(())
 }
 

@@ -11,11 +11,14 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// A named table: column names + rows.
+/// A named table: column names + rows, with an optional text label per
+/// row (used by `hfl trace` for phase/counter names; empty = unlabeled,
+/// and unlabeled output is byte-identical to the pre-label format).
 #[derive(Debug, Clone, Default)]
 pub struct Series {
     pub columns: Vec<String>,
     pub rows: Vec<Vec<f64>>,
+    pub labels: Vec<String>,
 }
 
 impl Series {
@@ -23,6 +26,7 @@ impl Series {
         Series {
             columns: columns.iter().map(|c| c.to_string()).collect(),
             rows: Vec::new(),
+            labels: Vec::new(),
         }
     }
 
@@ -33,13 +37,44 @@ impl Series {
             "row arity mismatch for columns {:?}",
             self.columns
         );
+        assert!(
+            self.labels.is_empty(),
+            "labeled series requires push_labeled"
+        );
+        self.rows.push(row);
+    }
+
+    /// Push a row with a leading text label. Mixing with [`Series::push`]
+    /// is rejected: a series is either fully labeled or fully unlabeled.
+    pub fn push_labeled(&mut self, label: &str, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row arity mismatch for columns {:?}",
+            self.columns
+        );
+        assert_eq!(
+            self.labels.len(),
+            self.rows.len(),
+            "cannot mix push and push_labeled"
+        );
+        self.labels.push(label.to_string());
         self.rows.push(row);
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out = self.columns.join(",");
+        let labeled = !self.labels.is_empty();
+        let mut out = String::new();
+        if labeled {
+            out.push_str("name,");
+        }
+        out.push_str(&self.columns.join(","));
         out.push('\n');
-        for row in &self.rows {
+        for (i, row) in self.rows.iter().enumerate() {
+            if labeled {
+                out.push_str(&self.labels[i]);
+                out.push(',');
+            }
             let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
             out.push_str(&cells.join(","));
             out.push('\n');
@@ -48,7 +83,7 @@ impl Series {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "columns",
                 Json::arr(self.columns.iter().map(|c| Json::str(c))),
@@ -61,12 +96,19 @@ impl Series {
                         .map(|r| Json::arr(r.iter().map(|&v| Json::num(v)))),
                 ),
             ),
-        ])
+        ];
+        if !self.labels.is_empty() {
+            // Only labeled series carry the extra key (unlabeled JSON is
+            // byte-identical to the pre-label format).
+            fields.push(("labels", Json::arr(self.labels.iter().map(|l| Json::str(l)))));
+        }
+        Json::obj(fields)
     }
 
     /// Pretty-print as an aligned text table (what benches show on stdout).
     pub fn print(&self, title: &str) {
-        println!("\n--- {title} ---");
+        println!("\n--- {title} ---"); // stdout-ok: Series::print is a display API
+        let label_w = self.labels.iter().map(|l| l.len()).max().unwrap_or(0);
         let widths: Vec<usize> = self
             .columns
             .iter()
@@ -80,20 +122,26 @@ impl Series {
                     .unwrap_or(8)
             })
             .collect();
-        let header: Vec<String> = self
+        let mut header: Vec<String> = self
             .columns
             .iter()
             .zip(&widths)
             .map(|(c, w)| format!("{c:>w$}"))
             .collect();
-        println!("{}", header.join("  "));
-        for row in &self.rows {
-            let cells: Vec<String> = row
+        if label_w > 0 {
+            header.insert(0, " ".repeat(label_w));
+        }
+        println!("{}", header.join("  ")); // stdout-ok
+        for (i, row) in self.rows.iter().enumerate() {
+            let mut cells: Vec<String> = row
                 .iter()
                 .zip(&widths)
                 .map(|(v, w)| format!("{:>w$}", format_cell(*v)))
                 .collect();
-            println!("{}", cells.join("  "));
+            if label_w > 0 {
+                cells.insert(0, format!("{:<label_w$}", self.labels[i]));
+            }
+            println!("{}", cells.join("  ")); // stdout-ok
         }
     }
 }
@@ -152,14 +200,19 @@ impl Timer {
         }
     }
 
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Stop and return the elapsed seconds. Silent: recording belongs to
+    /// the caller (a [`Series`] row, a `trace::TraceSink` span, ...) —
+    /// library code must not write to stdout.
     pub fn stop(self) -> f64 {
-        let dt = self.elapsed_s();
-        println!("[timer] {}: {:.3}s", self.label, dt);
-        dt
+        self.elapsed_s()
     }
 }
 
@@ -195,6 +248,32 @@ mod tests {
         let json = std::fs::read_to_string(dir.join("results.json")).unwrap();
         assert!(Json::parse(&json).is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn labeled_series_csv_has_name_column() {
+        let mut s = Series::new(&["x"]);
+        s.push_labeled("alpha", vec![1.0]);
+        s.push_labeled("beta", vec![2.0]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("name,x\n"));
+        assert!(csv.contains("alpha,1\n") && csv.contains("beta,2\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot mix")]
+    fn mixing_push_and_push_labeled_panics() {
+        let mut s = Series::new(&["x"]);
+        s.push(vec![1.0]);
+        s.push_labeled("a", vec![2.0]);
+    }
+
+    #[test]
+    fn timer_stop_is_silent_and_returns_elapsed() {
+        let t = Timer::start("quiet");
+        assert_eq!(t.label(), "quiet");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.stop() >= 0.001);
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::opt::{
     Solution, SolveOptions, SubgradientSolver,
 };
 use crate::sim::{simulate, SimConfig};
+use crate::trace::{Counter, NullSink, Phase, PhaseStats, Tee, TraceSink};
 use crate::util::Rng;
 
 /// Everything one scenario instance produced.
@@ -97,8 +98,9 @@ pub struct ScenarioOutcome {
     /// Cumulative edge idle time at the cloud barrier.
     pub edge_barrier_wait_s: f64,
     /// Wall-clock spent in per-epoch (a, b) re-solves (instance
-    /// maintenance + solver), cumulative. Measured, so *not* part of the
-    /// bitwise-determinism contract.
+    /// maintenance + solver), cumulative. Derived from the phase spans
+    /// (`phase`: delay + resolve) — one timing source of truth. Measured,
+    /// so *not* part of the bitwise-determinism contract.
     pub resolve_time_s: f64,
     /// (a, b) re-solves performed (epochs executed + the final solve that
     /// discovers convergence).
@@ -113,7 +115,8 @@ pub struct ScenarioOutcome {
     /// the warm/cold cross-check compares.
     pub ab_per_epoch: Vec<(u64, u64)>,
     /// Wall-clock spent in per-epoch association (engine maintenance or
-    /// cold policy runs), cumulative. Measured, so *not* part of the
+    /// cold policy runs), cumulative. Derived from the phase spans
+    /// (`phase`: assoc). Measured, so *not* part of the
     /// bitwise-determinism contract.
     pub assoc_time_s: f64,
     /// UEs whose association state was reprocessed, cumulative: the
@@ -121,6 +124,11 @@ pub struct ScenarioOutcome {
     /// counts on merge/cold fallbacks), the full active count per epoch
     /// under `"cold"`. Deterministic within one mode.
     pub reassociations: u64,
+    /// Per-phase wall-time + engine-counter breakdown (the trace
+    /// subsystem's always-on aggregate). `phase.counters` is
+    /// deterministic within one resolve mode; `phase.wall_s` is measured
+    /// and excluded from the bitwise contract.
+    pub phase: PhaseStats,
 }
 
 /// Random-waypoint state: one target + speed per UE.
@@ -506,6 +514,19 @@ fn solve_ab_epoch(
 /// `(spec, seed)` — the batch runner relies on that for shard-count
 /// independence.
 pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, String> {
+    run_instance_traced(spec, seed, &mut NullSink)
+}
+
+/// [`run_instance`] with a trace sink observing per-epoch phase spans,
+/// engine counters, and simulated round clocks. The trajectory is
+/// bitwise-identical to the untraced run for every sink — the sink only
+/// observes (tested in `tests/scenario.rs`); a disabled sink
+/// (`enabled() == false`, e.g. [`NullSink`]) receives zero calls.
+pub fn run_instance_traced(
+    spec: &ScenarioSpec,
+    seed: u64,
+    sink: &mut dyn TraceSink,
+) -> Result<ScenarioOutcome, String> {
     // Direct builder users get the same guardrails as the batch runner
     // (notably the Rayleigh-fading × dynamics rejection).
     spec.validate()?;
@@ -568,7 +589,18 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         ab_per_epoch: Vec::new(),
         assoc_time_s: 0.0,
         reassociations: 0,
+        phase: PhaseStats::default(),
     };
+
+    // The phase aggregate is always collected (it feeds the outcome's
+    // breakdown); the user sink behind the tee only sees events when
+    // enabled — NullSink costs one bool check per span, nothing per UE.
+    let mut pstats = PhaseStats::default();
+    let mut tee = Tee {
+        stats: &mut pstats,
+        inner: sink,
+    };
+    tee.instance(seed);
 
     let mut now = 0.0f64;
     let mut provisional_a = 20.0f64;
@@ -601,6 +633,8 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
     let mut delta = WorldDelta::default();
     let mut last_assoc: Vec<Option<usize>> = vec![None; n];
     loop {
+        let ep = out.epochs;
+        tee.begin_epoch(ep, now);
         // (1) Association for the current world. Warm mode keeps the
         // incremental engine alive across epochs and reprocesses only
         // the delta's dirty set; cold mode re-runs the policy from
@@ -611,9 +645,9 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         let t_assoc = Instant::now();
         let edge_of = if warm_assoc {
             if let Some(ma) = massoc.as_mut() {
-                ma.sync(&topo, &channel, &active, &delta, provisional_a)?;
+                ma.sync_traced(&topo, &channel, &active, &delta, provisional_a, &mut tee)?;
             } else {
-                massoc = Some(MaintainedAssociation::new(
+                massoc = Some(MaintainedAssociation::new_traced(
                     base.assoc,
                     &topo,
                     &channel,
@@ -621,6 +655,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                     cap,
                     spec.assoc_hysteresis,
                     provisional_a,
+                    &mut tee,
                 )?);
             }
             let ma = massoc.as_ref().expect("maintained association initialized above");
@@ -637,10 +672,13 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                 provisional_a,
                 &mut assoc_rng,
             )?;
-            out.reassociations += active.iter().filter(|&&on| on).count() as u64;
+            let n_active = active.iter().filter(|&&on| on).count() as u64;
+            out.reassociations += n_active;
+            tee.counter(Counter::AssocDirty, n_active);
+            tee.counter(Counter::AssocMergeSweep, 1);
             cold
         };
-        out.assoc_time_s += t_assoc.elapsed().as_secs_f64();
+        tee.span(ep, Phase::Assoc, t_assoc.elapsed().as_secs_f64());
 
         // (2) Re-solve (a, b) for this epoch's world. Warm mode maintains
         // the delay instance in place (dirty-row deltas + cached τ
@@ -648,13 +686,23 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         // mode is the from-scratch baseline (full rebuild + unseeded
         // solve — what every epoch cost before the incremental pipeline),
         // kept bit-compatible so the two modes produce identical
-        // trajectories.
-        let t_resolve = Instant::now();
+        // trajectories. Instance maintenance and the solve itself are
+        // separate trace phases (delay vs resolve).
+        let t_delay = Instant::now();
         let mut cold_inst: Option<DelayInstance> = None;
         let (a, b, cold) = if spec.resolve == ResolveMode::Cold {
             let built = build_instance(&topo, &channel, &edge_of, base.eps);
+            tee.counter(
+                Counter::DelayTouched,
+                edge_of.iter().filter(|e| e.is_some()).count() as u64,
+            );
+            tee.span(ep, Phase::Delay, t_delay.elapsed().as_secs_f64());
+            let t_resolve = Instant::now();
             let (a, b) = solve_ab(spec, &built);
+            let resolve_w = t_resolve.elapsed().as_secs_f64();
             cold_inst = Some(built);
+            tee.counter(Counter::ColdResolves, 1);
+            tee.span(ep, Phase::Resolve, resolve_w);
             (a, b, true)
         } else {
             if let Some(m) = maint.as_mut() {
@@ -667,14 +715,32 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
                         touched.push(ue);
                     }
                 }
-                m.sync_delta(&topo, &channel, &edge_of, &touched);
+                m.sync_delta_traced(&topo, &channel, &edge_of, &touched, &mut tee);
             } else {
                 maint = Some(MaintainedInstance::build(&topo, &channel, &edge_of, base.eps));
+                tee.counter(
+                    Counter::DelayTouched,
+                    edge_of.iter().filter(|e| e.is_some()).count() as u64,
+                );
             }
+            tee.span(ep, Phase::Delay, t_delay.elapsed().as_secs_f64());
             let m = maint.as_mut().expect("maintained instance initialized above");
-            solve_ab_epoch(spec, m, &opts, &mut prev_int, &mut prev_cont)
+            let t_resolve = Instant::now();
+            let fr_before = m.frontier_rebuilds();
+            let (a, b, cold) = solve_ab_epoch(spec, m, &opts, &mut prev_int, &mut prev_cont);
+            let resolve_w = t_resolve.elapsed().as_secs_f64();
+            tee.counter(Counter::FrontierRebuilds, m.frontier_rebuilds() - fr_before);
+            tee.counter(
+                if cold {
+                    Counter::ColdResolves
+                } else {
+                    Counter::WarmResolves
+                },
+                1,
+            );
+            tee.span(ep, Phase::Resolve, resolve_w);
+            (a, b, cold)
         };
-        out.resolve_time_s += t_resolve.elapsed().as_secs_f64();
         out.resolves += 1;
         if cold {
             out.cold_resolves += 1;
@@ -731,7 +797,13 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             start_s: now,
             deadline_s: spec.failure.deadline_s,
         };
+        let t_sim = Instant::now();
         let res = simulate(inst, &cfg);
+        let sim_w = t_sim.elapsed().as_secs_f64();
+        res.trace_rounds(ep, &mut tee);
+        tee.counter(Counter::SimRounds, res.rounds);
+        tee.counter(Counter::SimEvents, res.events);
+        tee.span(ep, Phase::Sim, sim_w);
         let dt = res.total_time_s - now;
         now = res.total_time_s;
 
@@ -763,9 +835,14 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         // as the delta the incremental association + delay paths consume.
         delta = WorldDelta::default();
         if spec.dynamics.mobility_enabled() {
+            let t_mob = Instant::now();
             delta.moved = mobility.step(dt, &active, &mut topo, &mut channel);
+            let w = t_mob.elapsed().as_secs_f64();
+            tee.counter(Counter::MovedUes, delta.moved.len() as u64);
+            tee.span(ep, Phase::Mobility, w);
         }
         if spec.dynamics.churn_enabled() {
+            let t_churn = Instant::now();
             // Arrivals are capped by the *serving* capacity: edges that
             // are down host nobody.
             let up_capacity = cap.saturating_mul(edge_up.iter().filter(|&&u| u).count());
@@ -786,8 +863,10 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             }
             delta.arrived = arrived;
             delta.departed = departed;
+            tee.span(ep, Phase::Churn, t_churn.elapsed().as_secs_f64());
         }
         if spec.outage.enabled() {
+            let t_outage = Instant::now();
             let active_count = active.iter().filter(|&&on| on).count();
             let (downed, restored) = outage_step(
                 &mut outage_rng,
@@ -801,6 +880,7 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
             out.recoveries += restored.len() as u64;
             delta.downed = downed;
             delta.restored = restored;
+            tee.span(ep, Phase::Outage, t_outage.elapsed().as_secs_f64());
         }
     }
     out.makespan_s = now;
@@ -810,5 +890,10 @@ pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, S
         (out.scheduled_uploads - out.dropped_uploads - out.late_uploads) as f64
             / out.scheduled_uploads as f64
     };
+    // One timing source of truth: the legacy totals are views of the
+    // phase spans (delay maintenance + solver = "resolve time").
+    out.phase = pstats;
+    out.assoc_time_s = out.phase.wall(Phase::Assoc);
+    out.resolve_time_s = out.phase.wall(Phase::Delay) + out.phase.wall(Phase::Resolve);
     Ok(out)
 }

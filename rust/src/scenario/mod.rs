@@ -32,9 +32,12 @@ pub mod report;
 pub mod runner;
 pub mod spec;
 
-pub use dynamics::{run_instance, ScenarioOutcome};
+pub use dynamics::{run_instance, run_instance_traced, ScenarioOutcome};
 pub use report::{record_batch, BatchReport, SummaryStat};
-pub use runner::{instance_seeds, run_batch, run_batch_with, shard_count, BatchResult};
+pub use runner::{
+    instance_seeds, run_batch, run_batch_traced, run_batch_with, shard_count, BatchResult,
+};
 pub use spec::{
     BatchSpec, DynamicsSpec, FailureSpec, OptimizerMode, OutageSpec, ResolveMode, ScenarioSpec,
+    TraceSpec,
 };

@@ -8,6 +8,7 @@ use std::path::Path;
 use super::dynamics::ScenarioOutcome;
 use super::spec::ScenarioSpec;
 use crate::metrics::Recorder;
+use crate::trace::{Counter, Phase};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile, std};
 
@@ -104,6 +105,12 @@ pub struct BatchReport {
     pub outages: SummaryStat,
     /// Per-instance Σ over epochs of down-edge counts (outage exposure).
     pub down_edge_epochs: SummaryStat,
+    /// Per-phase cumulative wall time (seconds), one entry per
+    /// [`Phase`] in `Phase::ALL` order (name, distribution).
+    pub phase_wall: Vec<(&'static str, SummaryStat)>,
+    /// Per-counter totals, one entry per [`Counter`] in `Counter::ALL`
+    /// order (name, distribution across instances).
+    pub phase_counters: Vec<(&'static str, SummaryStat)>,
 }
 
 fn column<F: Fn(&ScenarioOutcome) -> f64>(outcomes: &[ScenarioOutcome], f: F) -> SummaryStat {
@@ -138,6 +145,14 @@ impl BatchReport {
             late_uploads: column(outcomes, |o| o.late_uploads as f64),
             outages: column(outcomes, |o| o.outages as f64),
             down_edge_epochs: column(outcomes, |o| o.down_edge_epochs as f64),
+            phase_wall: Phase::ALL
+                .iter()
+                .map(|&p| (p.name(), column(outcomes, |o| o.phase.wall(p))))
+                .collect(),
+            phase_counters: Counter::ALL
+                .iter()
+                .map(|&c| (c.name(), column(outcomes, |o| o.phase.count(c) as f64)))
+                .collect(),
         }
     }
 
@@ -164,6 +179,24 @@ impl BatchReport {
             ("outages", self.outages.to_json()),
             ("down_edge_epochs", self.down_edge_epochs.to_json()),
         ];
+        fields.push((
+            "phases",
+            Json::obj(
+                self.phase_wall
+                    .iter()
+                    .map(|(name, s)| (*name, s.to_json()))
+                    .collect(),
+            ),
+        ));
+        fields.push((
+            "phase_counters",
+            Json::obj(
+                self.phase_counters
+                    .iter()
+                    .map(|(name, s)| (*name, s.to_json()))
+                    .collect(),
+            ),
+        ));
         if let Some(spec) = spec {
             fields.insert(0, ("spec", Json::str(&spec.summary())));
         }
@@ -181,18 +214,21 @@ impl BatchReport {
         f.write_all(self.to_json(spec).to_string().as_bytes())
     }
 
-    /// Human summary on stdout.
+    /// Human summary on stdout (the CLI's user-facing report — the
+    /// `stdout-ok` markers exempt these lines from the CI print gate).
     pub fn print(&self) {
-        println!(
+        let head = format!(
             "batch: {} instances, {:.1}% converged",
             self.instances,
             self.converged_frac * 100.0
         );
+        println!("{head}"); // stdout-ok: display API
         let row = |name: &str, s: &SummaryStat| {
-            println!(
+            let line = format!(
                 "  {name:<18} mean {:>10.4}  ±{:>9.4}  p50 {:>10.4}  p90 {:>10.4}  p99 {:>10.4}  max {:>10.4}",
                 s.mean, s.std, s.p50, s.p90, s.p99, s.max
             );
+            println!("{line}"); // stdout-ok: display API
         };
         row("makespan_s", &self.makespan_s);
         row("rounds", &self.rounds);
@@ -206,43 +242,50 @@ impl BatchReport {
         row("resolve_s", &self.resolve_time_s);
         row("assoc_s", &self.assoc_time_s);
         row("reassociations", &self.reassociations);
+        for (name, s) in &self.phase_wall {
+            if s.max > 0.0 {
+                row(&format!("phase_{name}_s"), s);
+            }
+        }
     }
 }
 
 /// Stream per-instance rows into a [`Recorder`] series named
 /// `scenario_instances` (one row per instance, instance order).
 pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
-    let series = rec.series(
-        "scenario_instances",
-        &[
-            "instance",
-            "makespan_s",
-            "closed_form_s",
-            "rounds",
-            "epochs",
-            "a",
-            "b",
-            "handovers",
-            "arrivals",
-            "departures",
-            "dropped_uploads",
-            "late_uploads",
-            "scheduled_uploads",
-            "participation_rate",
-            "outages",
-            "recoveries",
-            "down_edge_epochs",
-            "events",
-            "converged",
-            "resolve_time_s",
-            "resolves",
-            "cold_resolves",
-            "assoc_time_s",
-            "reassociations",
-        ],
-    );
+    // Existing 24 columns first (byte-compatible with earlier CSVs),
+    // then the per-phase wall and counter columns appended at the end.
+    let mut columns: Vec<&str> = vec![
+        "instance",
+        "makespan_s",
+        "closed_form_s",
+        "rounds",
+        "epochs",
+        "a",
+        "b",
+        "handovers",
+        "arrivals",
+        "departures",
+        "dropped_uploads",
+        "late_uploads",
+        "scheduled_uploads",
+        "participation_rate",
+        "outages",
+        "recoveries",
+        "down_edge_epochs",
+        "events",
+        "converged",
+        "resolve_time_s",
+        "resolves",
+        "cold_resolves",
+        "assoc_time_s",
+        "reassociations",
+    ];
+    columns.extend(Phase::ALL.iter().map(|p| p.col()));
+    columns.extend(Counter::ALL.iter().map(|c| c.col()));
+    let series = rec.series("scenario_instances", &columns);
     for o in outcomes {
-        series.push(vec![
+        let mut row = vec![
             o.instance as f64,
             o.makespan_s,
             o.closed_form_s,
@@ -267,7 +310,10 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
             o.cold_resolves as f64,
             o.assoc_time_s,
             o.reassociations as f64,
-        ]);
+        ];
+        row.extend(Phase::ALL.iter().map(|&p| o.phase.wall(p)));
+        row.extend(Counter::ALL.iter().map(|&c| o.phase.count(c) as f64));
+        series.push(row);
     }
 }
 
@@ -307,6 +353,7 @@ mod tests {
             ab_per_epoch: vec![(10, 3)],
             assoc_time_s: 0.0,
             reassociations: 1,
+            phase: crate::trace::PhaseStats::default(),
         }
     }
 

@@ -15,8 +15,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use super::dynamics::{run_instance, ScenarioOutcome};
+use super::dynamics::{run_instance_traced, ScenarioOutcome};
 use super::spec::ScenarioSpec;
+use crate::trace::{JsonlSink, NullSink, TraceSink};
 use crate::util::Rng;
 
 /// Output of a batch run.
@@ -59,13 +60,21 @@ pub fn instance_seeds(base_seed: u64, instances: usize) -> Vec<u64> {
     (0..instances).map(|_| rng.next_u64()).collect()
 }
 
-/// Run the spec's batch, invoking `on_done(index, outcome)` on the calling
-/// thread as each instance completes (completion order — use it for
-/// progress, not for ordering-sensitive logic).
-pub fn run_batch_with<F: FnMut(usize, &ScenarioOutcome)>(
+/// Shared executor: each worker builds its instance's sink via
+/// `mk_sink(index)`, runs the instance through it, and ships both back.
+/// Sinks are slotted by instance index exactly like outcomes, so traced
+/// batches inherit the shard-count independence of the runner (the
+/// concatenated per-instance streams never depend on scheduling).
+fn run_batch_sinked<S, G, F>(
     spec: &ScenarioSpec,
+    mk_sink: G,
     mut on_done: F,
-) -> Result<BatchResult, String> {
+) -> Result<(BatchResult, Vec<S>), String>
+where
+    S: TraceSink + Send,
+    G: Fn(usize) -> S + Sync,
+    F: FnMut(usize, &ScenarioOutcome),
+{
     spec.validate()?;
     let instances = spec.batch.instances;
     let shards = shard_count(spec.batch.shards).min(instances.max(1));
@@ -73,50 +82,86 @@ pub fn run_batch_with<F: FnMut(usize, &ScenarioOutcome)>(
     let next = AtomicUsize::new(0);
     let t0 = std::time::Instant::now();
 
-    let outcomes = std::thread::scope(|scope| -> Result<Vec<ScenarioOutcome>, String> {
-        let (tx, rx) = mpsc::channel::<(usize, Result<ScenarioOutcome, String>)>();
-        for _ in 0..shards {
-            let tx = tx.clone();
-            let next = &next;
-            let seeds = &seeds;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= instances {
-                    break;
-                }
-                let result = run_instance(spec, seeds[i]).map(|mut o| {
-                    o.instance = i;
-                    o
+    type Slot<S> = (usize, Result<ScenarioOutcome, String>, S);
+    let (outcomes, sinks) =
+        std::thread::scope(|scope| -> Result<(Vec<ScenarioOutcome>, Vec<S>), String> {
+            let (tx, rx) = mpsc::channel::<Slot<S>>();
+            for _ in 0..shards {
+                let tx = tx.clone();
+                let next = &next;
+                let seeds = &seeds;
+                let mk_sink = &mk_sink;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= instances {
+                        break;
+                    }
+                    let mut sink = mk_sink(i);
+                    let result = run_instance_traced(spec, seeds[i], &mut sink).map(|mut o| {
+                        o.instance = i;
+                        o
+                    });
+                    // Receiver gone (error path) — stop claiming work.
+                    if tx.send((i, result, sink)).is_err() {
+                        break;
+                    }
                 });
-                // Receiver gone (error path) — stop claiming work.
-                if tx.send((i, result)).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(tx);
-
-        let mut slots: Vec<Option<ScenarioOutcome>> = (0..instances).map(|_| None).collect();
-        for (i, result) in rx {
-            match result {
-                Ok(outcome) => {
-                    on_done(i, &outcome);
-                    slots[i] = Some(outcome);
-                }
-                Err(e) => return Err(format!("scenario instance {i}: {e}")),
             }
-        }
-        Ok(slots
-            .into_iter()
-            .map(|slot| slot.expect("runner: instance never reported"))
-            .collect())
-    })?;
+            drop(tx);
 
-    Ok(BatchResult {
-        outcomes,
-        wall_s: t0.elapsed().as_secs_f64(),
-        shards,
-    })
+            let mut slots: Vec<Option<ScenarioOutcome>> = (0..instances).map(|_| None).collect();
+            let mut sink_slots: Vec<Option<S>> = (0..instances).map(|_| None).collect();
+            for (i, result, sink) in rx {
+                match result {
+                    Ok(outcome) => {
+                        on_done(i, &outcome);
+                        slots[i] = Some(outcome);
+                        sink_slots[i] = Some(sink);
+                    }
+                    Err(e) => return Err(format!("scenario instance {i}: {e}")),
+                }
+            }
+            Ok((
+                slots
+                    .into_iter()
+                    .map(|slot| slot.expect("runner: instance never reported"))
+                    .collect(),
+                sink_slots
+                    .into_iter()
+                    .map(|slot| slot.expect("runner: instance sink never reported"))
+                    .collect(),
+            ))
+        })?;
+
+    Ok((
+        BatchResult {
+            outcomes,
+            wall_s: t0.elapsed().as_secs_f64(),
+            shards,
+        },
+        sinks,
+    ))
+}
+
+/// Run the spec's batch, invoking `on_done(index, outcome)` on the calling
+/// thread as each instance completes (completion order — use it for
+/// progress, not for ordering-sensitive logic).
+pub fn run_batch_with<F: FnMut(usize, &ScenarioOutcome)>(
+    spec: &ScenarioSpec,
+    on_done: F,
+) -> Result<BatchResult, String> {
+    run_batch_sinked(spec, |_| NullSink, on_done).map(|(batch, _)| batch)
+}
+
+/// [`run_batch_with`] with a [`JsonlSink`] per instance: returns the
+/// batch plus the per-instance event streams, in instance order (ready
+/// to concatenate into one `--trace` file — the content is identical for
+/// every shard count).
+pub fn run_batch_traced<F: FnMut(usize, &ScenarioOutcome)>(
+    spec: &ScenarioSpec,
+    on_done: F,
+) -> Result<(BatchResult, Vec<JsonlSink>), String> {
+    run_batch_sinked(spec, JsonlSink::for_instance, on_done)
 }
 
 /// [`run_batch_with`] without a progress callback.

@@ -200,6 +200,22 @@ impl DynamicsSpec {
     }
 }
 
+/// Trace capture: where (if anywhere) to write the per-epoch JSONL
+/// event stream (`[trace]` TOML table / `--trace FILE` CLI). The
+/// stream's content is seed-deterministic except the measured `wall_s`
+/// fields; inspect it with `hfl trace <file>`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// JSONL output path (`None` = tracing off — the zero-cost default).
+    pub file: Option<String>,
+}
+
+impl TraceSpec {
+    pub fn enabled(&self) -> bool {
+        self.file.is_some()
+    }
+}
+
 /// Batch shape for the parallel fleet runner.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchSpec {
@@ -245,6 +261,8 @@ pub struct ScenarioSpec {
     pub outage: OutageSpec,
     pub dynamics: DynamicsSpec,
     pub batch: BatchSpec,
+    /// Trace capture (off by default; `--trace FILE` / `[trace] file`).
+    pub trace: TraceSpec,
 }
 
 impl Default for ScenarioSpec {
@@ -260,6 +278,7 @@ impl Default for ScenarioSpec {
             outage: OutageSpec::default(),
             dynamics: DynamicsSpec::default(),
             batch: BatchSpec::default(),
+            trace: TraceSpec::default(),
         }
     }
 }
@@ -406,6 +425,12 @@ impl ScenarioSpec {
         self
     }
 
+    /// Write the per-epoch JSONL event stream to `path`.
+    pub fn trace_file(mut self, path: &str) -> Self {
+        self.trace.file = Some(path.to_string());
+        self
+    }
+
     // -- loading -----------------------------------------------------------
 
     /// Load from a TOML file (if given) then apply CLI overrides, exactly
@@ -494,6 +519,10 @@ impl ScenarioSpec {
         if let Some(v) = doc.i64("batch", "shards") {
             self.batch.shards = v.max(0) as usize;
         }
+        // [trace]
+        if let Some(s) = doc.str("trace", "file") {
+            self.trace.file = Some(s.to_string());
+        }
         Ok(())
     }
 
@@ -552,6 +581,9 @@ impl ScenarioSpec {
         }
         if let Some(v) = args.get::<usize>("shards")? {
             self.batch.shards = v;
+        }
+        if let Some(s) = args.str("trace") {
+            self.trace.file = Some(s);
         }
         Ok(())
     }
@@ -636,6 +668,11 @@ impl ScenarioSpec {
                 "assoc_hysteresis must be >= 0, got {}",
                 self.assoc_hysteresis
             ));
+        }
+        if let Some(f) = &self.trace.file {
+            if f.is_empty() {
+                return Err("trace file path must be non-empty (omit [trace] to disable)".into());
+            }
         }
         Ok(())
     }

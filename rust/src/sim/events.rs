@@ -128,6 +128,15 @@ impl SimResult {
             self.delivered_uploads() as f64 / self.scheduled_uploads as f64
         }
     }
+
+    /// Emit this chunk's per-round completion clocks as one trace record.
+    /// The clocks are *simulated* time — deterministic trace content, not
+    /// measured wall time.
+    pub fn trace_rounds(&self, epoch: u64, sink: &mut dyn crate::trace::TraceSink) {
+        if sink.enabled() && !self.round_end_s.is_empty() {
+            sink.rounds(epoch, &self.round_end_s);
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]

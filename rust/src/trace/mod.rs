@@ -1,0 +1,756 @@
+//! Zero-cost epoch telemetry for the scenario engine and warm engines.
+//!
+//! The scenario hot loop ([`crate::scenario::dynamics`]) and the two
+//! incremental engines ([`crate::assoc::MaintainedAssociation`],
+//! [`crate::delay::MaintainedInstance`]) emit *spans* (per-epoch,
+//! per-phase wall time) and *counters* (dirty-set sizes, fast-path hits,
+//! frontier rebuilds, ...) through a non-generic `&mut dyn TraceSink`
+//! handle. Three sinks are provided:
+//!
+//! * [`NullSink`] — `enabled() == false`; every emission site checks
+//!   `enabled()` first (via [`Tee`]), so a disabled sink receives **zero**
+//!   calls and the hot loop does no formatting or allocation for it.
+//! * [`JsonlSink`] — buffers one JSON object per line in memory; the
+//!   *content* (event kinds, epochs, phases, counters, simulated clocks)
+//!   is seed-deterministic, only the `wall_s` fields are measured. Use
+//!   [`strip_walls`] to compare traces across runs.
+//! * [`StatsSink`] — in-memory aggregation into [`PhaseStats`].
+//!
+//! Determinism rules: counters and event ordering are part of the
+//! deterministic trajectory (warm == cold bookkeeping is *not* implied —
+//! warm and cold paths legitimately count different work — but the same
+//! seed + spec always yields the same counters). Wall-clock spans are
+//! measured and therefore excluded from any bitwise contract, exactly
+//! like `resolve_time_s`/`assoc_time_s` in `ScenarioOutcome` (which are
+//! now *derived from* these spans — one timing source of truth).
+
+use crate::metrics::Series;
+use crate::util::json::Json;
+
+/// A phase of one scenario epoch, in hot-loop order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Association build / dirty-set maintenance (`assoc/incremental.rs`).
+    Assoc,
+    /// Delay-instance build / `sync_delta` maintenance (`delay/incremental.rs`).
+    Delay,
+    /// The (a, b) re-solve (warm-started or cold).
+    Resolve,
+    /// Event-driven round simulation (`sim/events.rs`).
+    Sim,
+    /// Random-waypoint mobility step + channel recompute.
+    Mobility,
+    /// Poisson arrivals / departures.
+    Churn,
+    /// Edge failure / recovery process.
+    Outage,
+}
+
+/// Number of [`Phase`] variants (array sizing).
+pub const NUM_PHASES: usize = 7;
+
+impl Phase {
+    /// All phases, in hot-loop order (also the report column order).
+    pub const ALL: [Phase; NUM_PHASES] = [
+        Phase::Assoc,
+        Phase::Delay,
+        Phase::Resolve,
+        Phase::Sim,
+        Phase::Mobility,
+        Phase::Churn,
+        Phase::Outage,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Assoc => "assoc",
+            Phase::Delay => "delay",
+            Phase::Resolve => "resolve",
+            Phase::Sim => "sim",
+            Phase::Mobility => "mobility",
+            Phase::Churn => "churn",
+            Phase::Outage => "outage",
+        }
+    }
+
+    /// Report / CSV column name (`phase_<name>_s`).
+    pub fn col(&self) -> &'static str {
+        match self {
+            Phase::Assoc => "phase_assoc_s",
+            Phase::Delay => "phase_delay_s",
+            Phase::Resolve => "phase_resolve_s",
+            Phase::Sim => "phase_sim_s",
+            Phase::Mobility => "phase_mobility_s",
+            Phase::Churn => "phase_churn_s",
+            Phase::Outage => "phase_outage_s",
+        }
+    }
+
+    pub fn idx(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn from_name(name: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// A deterministic engine counter. Values are *part of the trajectory*:
+/// same seed + spec ⇒ same counts, independent of tracing or shard count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// UEs in the association dirty set when `reassign` ran.
+    AssocDirty,
+    /// Proposed-strategy argmax fast path taken (per reassign).
+    AssocFastPath,
+    /// Proposed-strategy merge-sweep fallback / cold full assignment.
+    AssocMergeSweep,
+    /// UEs re-scored because a hysteresis threshold tripped.
+    AssocRescored,
+    /// Outage-mask retarget passes (rows pointing at downed edges).
+    AssocMaskRetargets,
+    /// UEs re-synced into the maintained delay instance.
+    DelayTouched,
+    /// Per-edge Pareto frontiers rebuilt during solver refresh.
+    FrontierRebuilds,
+    /// Warm-seeded (a, b) re-solves.
+    WarmResolves,
+    /// Cold (from-scratch) (a, b) resolves.
+    ColdResolves,
+    /// Simulated FL rounds executed.
+    SimRounds,
+    /// Discrete events processed by the round simulator.
+    SimEvents,
+    /// UEs moved by the mobility step.
+    MovedUes,
+}
+
+/// Number of [`Counter`] variants (array sizing).
+pub const NUM_COUNTERS: usize = 12;
+
+impl Counter {
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::AssocDirty,
+        Counter::AssocFastPath,
+        Counter::AssocMergeSweep,
+        Counter::AssocRescored,
+        Counter::AssocMaskRetargets,
+        Counter::DelayTouched,
+        Counter::FrontierRebuilds,
+        Counter::WarmResolves,
+        Counter::ColdResolves,
+        Counter::SimRounds,
+        Counter::SimEvents,
+        Counter::MovedUes,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Counter::AssocDirty => "assoc_dirty",
+            Counter::AssocFastPath => "assoc_fast_path",
+            Counter::AssocMergeSweep => "assoc_merge_sweep",
+            Counter::AssocRescored => "assoc_rescored",
+            Counter::AssocMaskRetargets => "assoc_mask_retargets",
+            Counter::DelayTouched => "delay_touched",
+            Counter::FrontierRebuilds => "frontier_rebuilds",
+            Counter::WarmResolves => "warm_resolves",
+            Counter::ColdResolves => "cold_resolves",
+            Counter::SimRounds => "sim_rounds",
+            Counter::SimEvents => "sim_events",
+            Counter::MovedUes => "moved_ues",
+        }
+    }
+
+    /// Report / CSV column name (`ctr_<name>`).
+    pub fn col(&self) -> &'static str {
+        match self {
+            Counter::AssocDirty => "ctr_assoc_dirty",
+            Counter::AssocFastPath => "ctr_assoc_fast_path",
+            Counter::AssocMergeSweep => "ctr_assoc_merge_sweep",
+            Counter::AssocRescored => "ctr_assoc_rescored",
+            Counter::AssocMaskRetargets => "ctr_assoc_mask_retargets",
+            Counter::DelayTouched => "ctr_delay_touched",
+            Counter::FrontierRebuilds => "ctr_frontier_rebuilds",
+            Counter::WarmResolves => "ctr_warm_resolves",
+            Counter::ColdResolves => "ctr_cold_resolves",
+            Counter::SimRounds => "ctr_sim_rounds",
+            Counter::SimEvents => "ctr_sim_events",
+            Counter::MovedUes => "ctr_moved_ues",
+        }
+    }
+
+    pub fn idx(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn from_name(name: &str) -> Option<Counter> {
+        Counter::ALL.iter().copied().find(|c| c.name() == name)
+    }
+}
+
+/// Aggregated per-phase wall time + counter totals for one instance.
+///
+/// `wall_s` entries are measured (excluded from bitwise contracts);
+/// `counters` entries are deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseStats {
+    pub wall_s: [f64; NUM_PHASES],
+    pub counters: [u64; NUM_COUNTERS],
+}
+
+impl PhaseStats {
+    pub fn wall(&self, p: Phase) -> f64 {
+        self.wall_s[p.idx()]
+    }
+
+    pub fn count(&self, c: Counter) -> u64 {
+        self.counters[c.idx()]
+    }
+
+    pub fn add_span(&mut self, p: Phase, wall_s: f64) {
+        self.wall_s[p.idx()] += wall_s;
+    }
+
+    pub fn add_count(&mut self, c: Counter, v: u64) {
+        self.counters[c.idx()] += v;
+    }
+
+    /// Total traced wall time across all phases.
+    pub fn total_wall_s(&self) -> f64 {
+        self.wall_s.iter().sum()
+    }
+}
+
+/// Receiver for trace events. All methods default to no-ops; emission
+/// sites (via [`Tee`]) skip calls entirely when `enabled()` is false,
+/// so an inert sink costs one virtual bool check per span — nothing in
+/// the per-UE inner loops.
+pub trait TraceSink {
+    /// Whether this sink wants events at all.
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// Instance header: scenario RNG seed (emitted once, before epoch 0).
+    fn instance(&mut self, _seed: u64) {}
+
+    /// An epoch begins at simulated clock `clock_s`.
+    fn begin_epoch(&mut self, _epoch: u64, _clock_s: f64) {}
+
+    /// A deterministic engine counter increment (attributed to the
+    /// next `span` by [`JsonlSink`]).
+    fn counter(&mut self, _c: Counter, _v: u64) {}
+
+    /// A phase of `epoch` took `wall_s` seconds of measured wall time.
+    fn span(&mut self, _epoch: u64, _phase: Phase, _wall_s: f64) {}
+
+    /// Per-round simulated completion clocks for `epoch` (deterministic).
+    fn rounds(&mut self, _epoch: u64, _end_s: &[f64]) {}
+}
+
+/// The disabled sink: `enabled() == false`, every method a no-op.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// In-memory aggregating sink: sums spans/counters into [`PhaseStats`].
+#[derive(Debug, Clone, Default)]
+pub struct StatsSink {
+    pub stats: PhaseStats,
+    /// Epochs begun (≥ completed epochs; the final partial epoch counts).
+    pub epochs: u64,
+}
+
+impl TraceSink for StatsSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn begin_epoch(&mut self, _epoch: u64, _clock_s: f64) {
+        self.epochs += 1;
+    }
+
+    fn counter(&mut self, c: Counter, v: u64) {
+        self.stats.add_count(c, v);
+    }
+
+    fn span(&mut self, _epoch: u64, phase: Phase, wall_s: f64) {
+        self.stats.add_span(phase, wall_s);
+    }
+}
+
+/// Buffers a JSONL event stream in memory (one JSON object per line).
+///
+/// Counters emitted between spans are attached to the *next* span record
+/// as flat fields, so one line carries a phase's wall time and the work
+/// it did. Everything except `wall_s` is seed-deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct JsonlSink {
+    out: String,
+    pending: Vec<(Counter, u64)>,
+}
+
+impl JsonlSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A sink whose first line is an instance header carrying the batch
+    /// slot index (the seed follows via [`TraceSink::instance`]).
+    pub fn for_instance(instance: usize) -> Self {
+        let mut s = Self::default();
+        s.out.push_str(&format!(
+            "{{\"ev\":\"begin\",\"instance\":{instance}}}\n"
+        ));
+        s
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.out
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn instance(&mut self, seed: u64) {
+        self.out.push_str(&format!("{{\"ev\":\"instance\",\"seed\":{seed}}}\n"));
+    }
+
+    fn begin_epoch(&mut self, epoch: u64, clock_s: f64) {
+        self.out.push_str(&format!(
+            "{{\"ev\":\"epoch\",\"epoch\":{epoch},\"clock_s\":{}}}\n",
+            fmt_f64(clock_s)
+        ));
+    }
+
+    fn counter(&mut self, c: Counter, v: u64) {
+        // Merge repeats of the same counter within a phase.
+        if let Some(slot) = self.pending.iter_mut().find(|(pc, _)| *pc == c) {
+            slot.1 += v;
+        } else {
+            self.pending.push((c, v));
+        }
+    }
+
+    fn span(&mut self, epoch: u64, phase: Phase, wall_s: f64) {
+        self.out.push_str(&format!(
+            "{{\"ev\":\"span\",\"epoch\":{epoch},\"phase\":\"{}\",\"wall_s\":{}",
+            phase.name(),
+            fmt_f64(wall_s)
+        ));
+        for (c, v) in self.pending.drain(..) {
+            self.out.push_str(&format!(",\"{}\":{v}", c.name()));
+        }
+        self.out.push_str("}\n");
+    }
+
+    fn rounds(&mut self, epoch: u64, end_s: &[f64]) {
+        self.out
+            .push_str(&format!("{{\"ev\":\"rounds\",\"epoch\":{epoch},\"end_s\":["));
+        for (i, t) in end_s.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            self.out.push_str(&fmt_f64(*t));
+        }
+        self.out.push_str("]}\n");
+    }
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Fan-out used by the hot loop: *always* accumulates into the local
+/// [`PhaseStats`] (that is how `ScenarioOutcome` gets its phase
+/// breakdown) and forwards to the user sink only when it is enabled —
+/// so a [`NullSink`] behind a `Tee` receives zero calls.
+pub struct Tee<'a> {
+    pub stats: &'a mut PhaseStats,
+    pub inner: &'a mut dyn TraceSink,
+}
+
+impl TraceSink for Tee<'_> {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn instance(&mut self, seed: u64) {
+        if self.inner.enabled() {
+            self.inner.instance(seed);
+        }
+    }
+
+    fn begin_epoch(&mut self, epoch: u64, clock_s: f64) {
+        if self.inner.enabled() {
+            self.inner.begin_epoch(epoch, clock_s);
+        }
+    }
+
+    fn counter(&mut self, c: Counter, v: u64) {
+        self.stats.add_count(c, v);
+        if self.inner.enabled() {
+            self.inner.counter(c, v);
+        }
+    }
+
+    fn span(&mut self, epoch: u64, phase: Phase, wall_s: f64) {
+        self.stats.add_span(phase, wall_s);
+        if self.inner.enabled() {
+            self.inner.span(epoch, phase, wall_s);
+        }
+    }
+
+    fn rounds(&mut self, epoch: u64, end_s: &[f64]) {
+        if self.inner.enabled() {
+            self.inner.rounds(epoch, end_s);
+        }
+    }
+}
+
+/// Remove every measured `wall_s` field from a JSONL trace, returning
+/// the deterministic content (canonically re-serialized). Two same-seed
+/// runs must produce identical output here.
+pub fn strip_walls(jsonl: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(jsonl.len());
+    for (lineno, line) in jsonl.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let v = match v {
+            Json::Obj(mut m) => {
+                m.remove("wall_s");
+                Json::Obj(m)
+            }
+            other => other,
+        };
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Per-counter aggregate across span records (for the profile table).
+#[derive(Debug, Clone, Copy, Default)]
+struct CounterAgg {
+    total: u64,
+    max: u64,
+    records: u64,
+}
+
+/// Aggregated view of a JSONL trace: time share per phase, counter
+/// stats, and the top-k slowest epochs. Built by `hfl trace`.
+#[derive(Debug, Clone)]
+pub struct TraceProfile {
+    pub instances: u64,
+    pub epochs: u64,
+    pub spans: u64,
+    phase_wall: [f64; NUM_PHASES],
+    phase_spans: [u64; NUM_PHASES],
+    counters: [CounterAgg; NUM_COUNTERS],
+    /// (instance, epoch, summed span wall) — all epoch records.
+    epoch_walls: Vec<(u64, u64, f64)>,
+}
+
+impl TraceProfile {
+    /// Parse a JSONL trace (as written by `--trace` / [`JsonlSink`]).
+    pub fn parse_jsonl(text: &str) -> Result<TraceProfile, String> {
+        let mut p = TraceProfile {
+            instances: 0,
+            epochs: 0,
+            spans: 0,
+            phase_wall: [0.0; NUM_PHASES],
+            phase_spans: [0; NUM_PHASES],
+            counters: [CounterAgg::default(); NUM_COUNTERS],
+            epoch_walls: Vec::new(),
+        };
+        let mut cur_instance: u64 = 0;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| format!("line {}: {msg}", lineno + 1);
+            let v = Json::parse(line).map_err(|e| err(&e.to_string()))?;
+            let ev = v
+                .get("ev")
+                .and_then(|e| e.as_str())
+                .ok_or_else(|| err("missing \"ev\" field"))?;
+            match ev {
+                "begin" => {
+                    p.instances += 1;
+                    cur_instance = v
+                        .get("instance")
+                        .and_then(|x| x.as_f64())
+                        .map(|x| x as u64)
+                        .unwrap_or(p.instances - 1);
+                }
+                "instance" => {
+                    // Seed header; counted via "begin" (standalone sinks
+                    // without a begin line still profile fine).
+                    if p.instances == 0 {
+                        p.instances = 1;
+                    }
+                }
+                "epoch" => {
+                    p.epochs += 1;
+                    let epoch = v
+                        .get("epoch")
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| err("epoch record without epoch number"))?
+                        as u64;
+                    p.epoch_walls.push((cur_instance, epoch, 0.0));
+                }
+                "span" => {
+                    p.spans += 1;
+                    let phase = v
+                        .get("phase")
+                        .and_then(|x| x.as_str())
+                        .and_then(Phase::from_name)
+                        .ok_or_else(|| err("span record without known phase"))?;
+                    let wall = v.get("wall_s").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                    p.phase_wall[phase.idx()] += wall;
+                    p.phase_spans[phase.idx()] += 1;
+                    if let Some((_, _, w)) = p.epoch_walls.last_mut() {
+                        *w += wall;
+                    }
+                    if let Json::Obj(m) = &v {
+                        for (k, val) in m {
+                            if let (Some(c), Some(x)) = (Counter::from_name(k), val.as_f64()) {
+                                let agg = &mut p.counters[c.idx()];
+                                let x = x as u64;
+                                agg.total += x;
+                                agg.max = agg.max.max(x);
+                                agg.records += 1;
+                            }
+                        }
+                    }
+                }
+                "rounds" => {}
+                other => return Err(err(&format!("unknown event kind {other:?}"))),
+            }
+        }
+        if p.spans == 0 {
+            return Err("no span records found (is this a --trace JSONL file?)".into());
+        }
+        Ok(p)
+    }
+
+    /// Total traced wall time across phases.
+    pub fn total_wall_s(&self) -> f64 {
+        self.phase_wall.iter().sum()
+    }
+
+    pub fn phase_wall(&self, p: Phase) -> f64 {
+        self.phase_wall[p.idx()]
+    }
+
+    pub fn counter_total(&self, c: Counter) -> u64 {
+        self.counters[c.idx()].total
+    }
+
+    /// The `k` slowest epochs by summed span wall time, descending.
+    pub fn slowest_epochs(&self, k: usize) -> Vec<(u64, u64, f64)> {
+        let mut v = self.epoch_walls.clone();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        v.truncate(k);
+        v
+    }
+
+    /// Print the profile: phase time-share table, counter stats, and the
+    /// top-k slowest epochs (all via `metrics::Series::print`).
+    pub fn print(&self, topk: usize) {
+        let total = self.total_wall_s();
+        let head = format!(
+            "trace: {} instance(s), {} epoch record(s), {} span(s), {:.3}s traced wall time",
+            self.instances, self.epochs, self.spans, total
+        );
+        println!("{head}"); // stdout-ok: this *is* the `hfl trace` display surface
+
+        let mut phases = Series::new(&["wall_s", "share_pct", "spans", "mean_ms"]);
+        for p in Phase::ALL {
+            let w = self.phase_wall[p.idx()];
+            let n = self.phase_spans[p.idx()];
+            let share = if total > 0.0 { 100.0 * w / total } else { 0.0 };
+            let mean_ms = if n > 0 { 1e3 * w / n as f64 } else { 0.0 };
+            phases.push_labeled(p.name(), vec![w, share, n as f64, mean_ms]);
+        }
+        phases.print("phase profile");
+
+        let mut ctrs = Series::new(&["total", "records", "mean_per_rec", "max_per_rec"]);
+        for c in Counter::ALL {
+            let a = self.counters[c.idx()];
+            if a.records == 0 {
+                continue;
+            }
+            let mean = a.total as f64 / a.records as f64;
+            ctrs.push_labeled(
+                c.name(),
+                vec![a.total as f64, a.records as f64, mean, a.max as f64],
+            );
+        }
+        ctrs.print("engine counters");
+
+        let slow = self.slowest_epochs(topk);
+        if !slow.is_empty() {
+            let mut s = Series::new(&["instance", "epoch", "wall_ms"]);
+            for (inst, ep, w) in slow {
+                s.push(vec![inst as f64, ep as f64, 1e3 * w]);
+            }
+            s.print(&format!("top {} slowest epochs", s.rows.len()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_and_counter_tables_are_consistent() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+            assert_eq!(Phase::from_name(p.name()), Some(*p));
+            assert!(p.col().starts_with("phase_"));
+        }
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i);
+            assert_eq!(Counter::from_name(c.name()), Some(*c));
+            assert!(c.col().starts_with("ctr_"));
+        }
+    }
+
+    #[test]
+    fn null_sink_is_disabled() {
+        assert!(!NullSink.enabled());
+    }
+
+    #[test]
+    fn tee_accumulates_and_skips_disabled_inner() {
+        struct Counting {
+            on: bool,
+            calls: u64,
+        }
+        impl TraceSink for Counting {
+            fn enabled(&self) -> bool {
+                self.on
+            }
+            fn instance(&mut self, _s: u64) {
+                self.calls += 1;
+            }
+            fn begin_epoch(&mut self, _e: u64, _c: f64) {
+                self.calls += 1;
+            }
+            fn counter(&mut self, _c: Counter, _v: u64) {
+                self.calls += 1;
+            }
+            fn span(&mut self, _e: u64, _p: Phase, _w: f64) {
+                self.calls += 1;
+            }
+            fn rounds(&mut self, _e: u64, _r: &[f64]) {
+                self.calls += 1;
+            }
+        }
+        for on in [false, true] {
+            let mut stats = PhaseStats::default();
+            let mut inner = Counting { on, calls: 0 };
+            let mut tee = Tee {
+                stats: &mut stats,
+                inner: &mut inner,
+            };
+            tee.instance(7);
+            tee.begin_epoch(0, 0.0);
+            tee.counter(Counter::AssocDirty, 3);
+            tee.span(0, Phase::Assoc, 0.5);
+            tee.rounds(0, &[1.0]);
+            assert_eq!(stats.count(Counter::AssocDirty), 3);
+            assert_eq!(stats.wall(Phase::Assoc), 0.5);
+            assert_eq!(inner.calls, if on { 5 } else { 0 });
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_attaches_pending_counters_to_next_span() {
+        let mut s = JsonlSink::for_instance(2);
+        s.instance(42);
+        s.begin_epoch(0, 0.0);
+        s.counter(Counter::AssocDirty, 4);
+        s.counter(Counter::AssocDirty, 2); // merged
+        s.counter(Counter::AssocFastPath, 1);
+        s.span(0, Phase::Assoc, 1.5e-4);
+        s.rounds(0, &[0.25, 0.5]);
+        s.span(0, Phase::Sim, 2.0);
+        let text = s.as_str();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].contains("\"ev\":\"begin\"") && lines[0].contains("\"instance\":2"));
+        assert!(lines[1].contains("\"seed\":42"));
+        assert!(lines[3].contains("\"assoc_dirty\":6"));
+        assert!(lines[3].contains("\"assoc_fast_path\":1"));
+        assert!(lines[4].contains("\"end_s\":[0.25,0.5]"));
+        // Second span carries no counters.
+        assert!(!lines[5].contains("assoc_dirty"));
+        // Every line parses as JSON.
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn strip_walls_removes_only_wall_fields() {
+        let mut a = JsonlSink::new();
+        a.span(0, Phase::Assoc, 0.123);
+        let mut b = JsonlSink::new();
+        b.span(0, Phase::Assoc, 0.456);
+        assert_ne!(a.as_str(), b.as_str());
+        assert_eq!(strip_walls(a.as_str()).unwrap(), strip_walls(b.as_str()).unwrap());
+        assert!(strip_walls(a.as_str()).unwrap().contains("\"phase\":\"assoc\""));
+    }
+
+    #[test]
+    fn profile_aggregates_spans_and_counters() {
+        let mut s = JsonlSink::for_instance(0);
+        s.instance(7);
+        s.begin_epoch(0, 0.0);
+        s.counter(Counter::AssocDirty, 5);
+        s.span(0, Phase::Assoc, 0.25);
+        s.span(0, Phase::Sim, 0.75);
+        s.begin_epoch(1, 10.0);
+        s.counter(Counter::AssocDirty, 3);
+        s.span(1, Phase::Assoc, 1.0);
+        let p = TraceProfile::parse_jsonl(s.as_str()).unwrap();
+        assert_eq!(p.instances, 1);
+        assert_eq!(p.epochs, 2);
+        assert_eq!(p.spans, 3);
+        assert!((p.phase_wall(Phase::Assoc) - 1.25).abs() < 1e-12);
+        assert!((p.total_wall_s() - 2.0).abs() < 1e-12);
+        assert_eq!(p.counter_total(Counter::AssocDirty), 8);
+        let slow = p.slowest_epochs(1);
+        assert_eq!(slow.len(), 1);
+        assert_eq!((slow[0].0, slow[0].1), (0, 1));
+        assert!((slow[0].2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_rejects_garbage() {
+        assert!(TraceProfile::parse_jsonl("not json\n").is_err());
+        assert!(TraceProfile::parse_jsonl("{\"ev\":\"mystery\"}\n").is_err());
+        assert!(TraceProfile::parse_jsonl("").is_err());
+    }
+}

@@ -8,8 +8,10 @@ use hfl::delay::DelayInstance;
 use hfl::net::{Channel, SystemParams, Topology};
 use hfl::opt::{solve_integer, SolveOptions};
 use hfl::scenario::{
-    run_batch, run_instance, BatchReport, ResolveMode, ScenarioOutcome, ScenarioSpec,
+    run_batch, run_batch_traced, run_instance, run_instance_traced, BatchReport, ResolveMode,
+    ScenarioOutcome, ScenarioSpec,
 };
+use hfl::trace::{strip_walls, Counter, JsonlSink, Phase, StatsSink, TraceProfile, TraceSink};
 use hfl::util::proptest::check;
 
 fn rel_close(a: f64, b: f64, tol: f64) -> bool {
@@ -156,6 +158,9 @@ fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
         assert_eq!(x.resolves, y.resolves);
         assert_eq!(x.cold_resolves, y.cold_resolves);
         assert_eq!(x.reassociations, y.reassociations);
+        // Trace counters are part of the trajectory; wall_s spans are
+        // measured and exempt.
+        assert_eq!(x.phase.counters, y.phase.counters);
     }
 }
 
@@ -359,6 +364,148 @@ fn fixed_iters_override_optimizer() {
         .fixed_iters(13, 4);
     let out = run_instance(&spec, 8).unwrap();
     assert_eq!((out.a, out.b), (13, 4));
+}
+
+#[test]
+fn tracing_does_not_perturb_outcomes() {
+    // The acceptance contract of the trace subsystem: running with a live
+    // JSONL sink yields bit-identical trajectories to running without one,
+    // in both resolve modes.
+    for resolve in [ResolveMode::Warm, ResolveMode::Cold] {
+        let spec = dynamic_spec().resolve(resolve);
+        let plain = run_instance(&spec, 77).unwrap();
+        let mut sink = JsonlSink::new();
+        let traced = run_instance_traced(&spec, 77, &mut sink).unwrap();
+        assert_outcomes_bitwise_equal(
+            std::slice::from_ref(&plain),
+            std::slice::from_ref(&traced),
+        );
+        assert!(!sink.is_empty(), "a live sink must record events");
+    }
+}
+
+#[test]
+fn jsonl_content_is_seed_deterministic() {
+    let spec = dynamic_spec();
+    let mut a = JsonlSink::new();
+    let mut b = JsonlSink::new();
+    run_instance_traced(&spec, 42, &mut a).unwrap();
+    run_instance_traced(&spec, 42, &mut b).unwrap();
+    // wall_s fields are measured; everything else must reproduce exactly.
+    assert_eq!(
+        strip_walls(a.as_str()).unwrap(),
+        strip_walls(b.as_str()).unwrap(),
+        "same seed must produce identical trace content"
+    );
+    let mut c = JsonlSink::new();
+    run_instance_traced(&spec, 43, &mut c).unwrap();
+    assert_ne!(
+        strip_walls(a.as_str()).unwrap(),
+        strip_walls(c.as_str()).unwrap(),
+        "different seeds must diverge"
+    );
+}
+
+#[test]
+fn traced_batch_is_shard_count_independent() {
+    let spec = dynamic_spec().instances(6);
+    let (one, sinks_one) = run_batch_traced(&spec.clone().shards(1), |_, _| {}).unwrap();
+    let (four, sinks_four) = run_batch_traced(&spec.clone().shards(4), |_, _| {}).unwrap();
+    assert_outcomes_bitwise_equal(&one.outcomes, &four.outcomes);
+    let concat = |sinks: &[JsonlSink]| {
+        let mut s = String::new();
+        for sink in sinks {
+            s.push_str(sink.as_str());
+        }
+        strip_walls(&s).unwrap()
+    };
+    assert_eq!(
+        concat(&sinks_one),
+        concat(&sinks_four),
+        "concatenated trace content must not depend on shard count"
+    );
+}
+
+/// A sink that counts every call it receives — used to prove the
+/// disabled path never crosses the sink boundary.
+struct CountingSink {
+    on: bool,
+    calls: u64,
+}
+
+impl TraceSink for CountingSink {
+    fn enabled(&self) -> bool {
+        self.on
+    }
+    fn instance(&mut self, _seed: u64) {
+        self.calls += 1;
+    }
+    fn begin_epoch(&mut self, _epoch: u64, _clock_s: f64) {
+        self.calls += 1;
+    }
+    fn counter(&mut self, _c: Counter, _v: u64) {
+        self.calls += 1;
+    }
+    fn span(&mut self, _epoch: u64, _phase: Phase, _wall_s: f64) {
+        self.calls += 1;
+    }
+    fn rounds(&mut self, _epoch: u64, _end_s: &[f64]) {
+        self.calls += 1;
+    }
+}
+
+#[test]
+fn disabled_sink_receives_no_events() {
+    let spec = dynamic_spec();
+    let mut off = CountingSink { on: false, calls: 0 };
+    run_instance_traced(&spec, 5, &mut off).unwrap();
+    assert_eq!(off.calls, 0, "a disabled sink must receive zero calls");
+    let mut on = CountingSink { on: true, calls: 0 };
+    run_instance_traced(&spec, 5, &mut on).unwrap();
+    assert!(on.calls > 0, "an enabled sink must receive the stream");
+}
+
+#[test]
+fn phase_counters_cross_check_outcome_bookkeeping() {
+    let spec = dynamic_spec();
+    let mut sink = StatsSink::default();
+    let out = run_instance_traced(&spec, 13, &mut sink).unwrap();
+    // The sink saw exactly what the outcome accumulated.
+    assert_eq!(sink.stats.counters, out.phase.counters);
+    // The final epoch begins, discovers convergence, and breaks without
+    // completing — begun = completed + 1.
+    assert_eq!(sink.epochs, out.epochs + 1);
+    // Counters agree with the outcome's own bookkeeping.
+    assert_eq!(out.phase.count(Counter::ColdResolves), out.cold_resolves);
+    assert_eq!(
+        out.phase.count(Counter::WarmResolves) + out.phase.count(Counter::ColdResolves),
+        out.resolves
+    );
+    assert_eq!(out.phase.count(Counter::SimRounds), out.rounds);
+    // Derived timing: the legacy columns are the phase spans.
+    assert_eq!(
+        out.assoc_time_s.to_bits(),
+        out.phase.wall(Phase::Assoc).to_bits()
+    );
+    assert_eq!(
+        out.resolve_time_s.to_bits(),
+        (out.phase.wall(Phase::Delay) + out.phase.wall(Phase::Resolve)).to_bits()
+    );
+}
+
+#[test]
+fn trace_profile_parses_engine_output() {
+    let spec = dynamic_spec();
+    let mut sink = JsonlSink::new();
+    let out = run_instance_traced(&spec, 3, &mut sink).unwrap();
+    let profile = TraceProfile::parse_jsonl(sink.as_str()).unwrap();
+    assert_eq!(profile.instances, 1);
+    // Epoch records count begun epochs (completed + the final partial one).
+    assert_eq!(profile.epochs, out.epochs + 1);
+    assert_eq!(profile.counter_total(Counter::SimRounds), out.rounds);
+    assert!(profile.spans > 0);
+    // Garbage is rejected, not mis-parsed.
+    assert!(TraceProfile::parse_jsonl("not json\n").is_err());
 }
 
 #[test]
