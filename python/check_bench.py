@@ -190,12 +190,38 @@ def self_test() -> int:
         "generated": True,
         "rows": [{"name": "hetero assoc warm speedup", "value": 1.0}],
     }
+    # BENCH_scale.json shape: per-epoch wall-clock rows (never gated), one
+    # gated maintenance-speedup ratio, and plain scalar "ratio" rows
+    # (build / frontier refresh) that stay informational by name.
+    scale = {
+        "bench": "scale_parallel",
+        "generated": True,
+        "rows": [
+            {"name": "scale serial maintenance", "per_epoch_ms": 120.0, "epochs": 4},
+            {"name": "scale sharded maintenance", "per_epoch_ms": 30.0, "epochs": 4},
+            {"name": "scale parallel maintenance speedup", "value": 4.0, "target": 2.0},
+            {"name": "maintenance threads", "value": 4.0},
+            {"name": "cold build ratio", "value": 3.5},
+            {"name": "frontier refresh ratio", "value": 2.0},
+        ],
+    }
+    scale_slow = {
+        "bench": "scale_parallel",
+        "generated": True,
+        "rows": [
+            {"name": "scale parallel maintenance speedup", "value": 1.1},
+            {"name": "cold build ratio", "value": 0.1},
+        ],
+    }
     assert metrics_of(good) == {"s speedup": 10.0}
     assert metrics_of(thr) == {}  # raw throughput is not gated...
     assert info_metrics_of(thr) == {"static": 100.0}  # ...only reported
     assert metrics_of(hetero) == {"hetero assoc warm speedup": 4.0}
     assert compare(hetero, hetero_slow_world, 0.25)[0] == []  # quality/throughput: info only
     assert compare(hetero, hetero_slow_speedup, 0.25)[0] != []  # 4x -> 1x ratio drop fails
+    assert metrics_of(scale) == {"scale parallel maintenance speedup": 4.0}
+    assert compare(scale, scale, 0.25)[0] == []  # equal passes
+    assert compare(scale, scale_slow, 0.25)[0] != []  # 4x -> 1.1x maintenance drop fails
     regs, notes = compare(stub, good, 0.25)
     assert regs == []  # stub baseline skips...
     assert any("!!! WARNING" in n and "schema stub" in n for n in notes)  # ...loudly

@@ -1,0 +1,297 @@
+//! Serial vs SoA-sharded epoch maintenance at the 1M-UE x 256-edge scale
+//! (`configs/scenario_scale.toml`).
+//!
+//!   cargo bench --bench scale_parallel            # full 1M workload
+//!   cargo bench --bench scale_parallel -- --test  # CI smoke shape
+//!
+//! Two warm association engines — one at `intra_threads = 1`, one at the
+//! machine's core count — receive the identical epoch deltas. Every
+//! epoch both maps are asserted bitwise-identical (and likewise the cold
+//! builds, and the delay engine's frontiers) *before* any timing is
+//! reported, so the speedup below can never come from divergent work.
+//! Full mode rewrites `BENCH_scale.json`; the gated row is "scale
+//! parallel maintenance speedup" (acceptance: >= 2x at 4+ threads —
+//! asserted here, gated against the committed baseline by
+//! `python/check_bench.py`).
+
+use std::time::Instant;
+
+use hfl::assoc::{MaintainedAssociation, WorldDelta};
+use hfl::config::{Args, AssocStrategy};
+use hfl::delay::MaintainedInstance;
+use hfl::net::{Channel, Position, Topology};
+use hfl::scenario::ScenarioSpec;
+use hfl::trace::NullSink;
+use hfl::util::bench::{section, short_mode};
+use hfl::util::json::Json;
+use hfl::util::{Rng, ShardPool};
+
+/// Load the checked-in scale spec (repo root or rust/ cwd), falling back
+/// to an identical inline shape.
+fn scale_spec() -> ScenarioSpec {
+    for path in [
+        "configs/scenario_scale.toml",
+        "../configs/scenario_scale.toml",
+    ] {
+        if std::path::Path::new(path).exists() {
+            match ScenarioSpec::load(Some(path), &Args::default()) {
+                Ok(spec) => return spec,
+                Err(e) => println!("note: could not load {path}: {e}"),
+            }
+        }
+    }
+    let mut spec = ScenarioSpec::new()
+        .edges(256)
+        .ues(1_000_000)
+        .eps(0.25)
+        .seed(42)
+        .churn(2000.0, 0.002)
+        .epoch_rounds(1)
+        .max_epochs(6)
+        .intra_threads(0);
+    spec.base.system.edge_bandwidth_hz = 2.0e9;
+    spec.base.system.ue_bandwidth_hz = 4.0e5;
+    spec
+}
+
+fn main() {
+    let short = short_mode();
+    let spec = scale_spec();
+    let (num_edges, num_ues, epochs, churn_per_epoch) = if short {
+        (16usize, 20_000usize, 3usize, 50usize)
+    } else {
+        (
+            spec.base.num_edges,
+            spec.base.num_ues,
+            4usize,
+            spec.dynamics.arrival_rate.round() as usize,
+        )
+    };
+    // Smoke shape pins 2 workers (any machine can run it); full mode uses
+    // the config's intra_threads (0 = one per core).
+    let par_threads = if short {
+        2
+    } else {
+        ShardPool::new(spec.intra_threads).threads()
+    };
+    let cap = spec.base.system.edge_capacity();
+    let seed = spec.base.seed;
+    let moved_per_epoch = churn_per_epoch;
+    let strategy = AssocStrategy::Proposed;
+    let a0 = 20.0;
+
+    section("scale_parallel: serial vs sharded epoch maintenance");
+    println!(
+        "world: {num_edges} edges x {num_ues} UEs, cap {cap}, {epochs} epochs, \
+         ~{churn_per_epoch} arrivals/departures + {moved_per_epoch} moved rows per epoch, \
+         {par_threads} maintenance threads"
+    );
+
+    let mut topo = Topology::sample(&spec.base.system, num_edges, num_ues, seed);
+    let mut channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+    let mut active = vec![true; num_ues];
+    let mut inactive_pool: Vec<usize> = Vec::new();
+    let area = topo.params.area_m;
+
+    // Cold builds: same world, thread counts 1 and N. Bitwise equality of
+    // the built maps is the first acceptance assert.
+    let t0 = Instant::now();
+    let mut serial = MaintainedAssociation::new(
+        strategy,
+        &topo,
+        &channel,
+        &active,
+        cap,
+        spec.assoc_hysteresis,
+        a0,
+    )
+    .expect("serial build");
+    let serial_build_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut par = MaintainedAssociation::new_sharded(
+        strategy,
+        &topo,
+        &channel,
+        &active,
+        cap,
+        spec.assoc_hysteresis,
+        a0,
+        par_threads,
+        &mut NullSink,
+    )
+    .expect("sharded build");
+    let par_build_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        serial.edge_of_global(),
+        par.edge_of_global(),
+        "cold build maps must be bitwise-identical across thread counts"
+    );
+    let build_ratio = serial_build_s / par_build_s.max(1e-12);
+    println!(
+        "cold build: serial {:.2} s  sharded {:.2} s  ({build_ratio:.1}x)",
+        serial_build_s, par_build_s
+    );
+
+    // Delay engine: all-dirty frontier refresh, serial vs edge-parallel,
+    // equality asserted per edge before the ratio is reported.
+    let edge_of = serial.edge_of_global();
+    let mut dserial = MaintainedInstance::build(&topo, &channel, &edge_of, spec.base.eps);
+    let mut dpar = dserial.clone();
+    dpar.set_intra_threads(par_threads);
+    let t0 = Instant::now();
+    dserial.refresh();
+    let refresh_serial_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    dpar.refresh();
+    let refresh_par_s = t0.elapsed().as_secs_f64();
+    for e in 0..num_edges {
+        assert_eq!(
+            dserial.frontier_of(e),
+            dpar.frontier_of(e),
+            "frontier of edge {e} diverged across thread counts"
+        );
+    }
+    let refresh_ratio = refresh_serial_s / refresh_par_s.max(1e-12);
+    println!(
+        "frontier refresh (all edges dirty): serial {:.1} ms  sharded {:.1} ms  \
+         ({refresh_ratio:.1}x)",
+        refresh_serial_s * 1e3,
+        refresh_par_s * 1e3
+    );
+
+    // Epoch loop: identical churn + mobility deltas into both engines;
+    // the map equality assert runs every epoch, before any timing is
+    // reported.
+    let mut rng = Rng::new(seed ^ 0x5CA1_E0DE);
+    let mut serial_s = 0.0f64;
+    let mut par_s = 0.0f64;
+    for epoch in 0..epochs {
+        let mut delta = WorldDelta::default();
+        for _ in 0..churn_per_epoch {
+            let ue = rng.below(num_ues as u64) as usize;
+            if active[ue] {
+                active[ue] = false;
+                inactive_pool.push(ue);
+                delta.departed.push(ue);
+            }
+        }
+        for _ in 0..churn_per_epoch.min(inactive_pool.len()) {
+            let slot = rng.below(inactive_pool.len() as u64) as usize;
+            let ue = inactive_pool.swap_remove(slot);
+            active[ue] = true;
+            topo.ues[ue].pos = Position {
+                x: rng.range(0.0, area),
+                y: rng.range(0.0, area),
+            };
+            channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+            delta.arrived.push(ue);
+        }
+        for _ in 0..moved_per_epoch {
+            let ue = rng.below(num_ues as u64) as usize;
+            if active[ue] {
+                topo.ues[ue].pos = Position {
+                    x: rng.range(0.0, area),
+                    y: rng.range(0.0, area),
+                };
+                channel.recompute_ue(&topo.params, &topo.ues[ue], &topo.edges);
+                delta.moved.push(ue);
+            }
+        }
+
+        let t_serial = Instant::now();
+        serial
+            .sync(&topo, &channel, &active, &delta, a0)
+            .expect("serial sync");
+        serial_s += t_serial.elapsed().as_secs_f64();
+
+        let t_par = Instant::now();
+        par.sync(&topo, &channel, &active, &delta, a0)
+            .expect("sharded sync");
+        par_s += t_par.elapsed().as_secs_f64();
+
+        assert_eq!(
+            serial.edge_of_global(),
+            par.edge_of_global(),
+            "maps diverged across thread counts at epoch {epoch}"
+        );
+    }
+    let serial_ms = serial_s / epochs as f64 * 1e3;
+    let par_ms = par_s / epochs as f64 * 1e3;
+    let speedup = serial_ms / par_ms.max(1e-9);
+    println!(
+        "epoch maintenance: serial {serial_ms:.2} ms/epoch  sharded {par_ms:.2} ms/epoch  \
+         speedup {speedup:.2}x on {par_threads} threads"
+    );
+    println!(
+        "BENCH_JSON {{\"name\":\"scale serial maintenance\",\"per_epoch_ms\":{serial_ms:.3}}}"
+    );
+    println!("BENCH_JSON {{\"name\":\"scale sharded maintenance\",\"per_epoch_ms\":{par_ms:.3}}}");
+    println!(
+        "BENCH_JSON {{\"name\":\"scale parallel maintenance speedup\",\"value\":{speedup:.2}}}"
+    );
+
+    if short {
+        println!("\nshort mode: BENCH_scale.json left untouched");
+        return;
+    }
+    // Acceptance: >= 2x at 4+ threads. On narrower runners the ratio is
+    // still reported (and gated against the committed baseline), but the
+    // hard floor only makes sense with real parallelism available.
+    if par_threads >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "acceptance: sharded maintenance must be >= 2x serial at \
+             {par_threads} threads, got {speedup:.2}x"
+        );
+    }
+    let json = Json::obj(vec![
+        ("bench", Json::str("scale_parallel")),
+        ("generated", Json::Bool(true)),
+        ("command", Json::str("cargo bench --bench scale_parallel")),
+        (
+            "workload",
+            Json::str(&format!(
+                "configs/scenario_scale.toml shape: {num_edges} edges x {num_ues} UEs, \
+                 ~{churn_per_epoch} arrivals/departures + {moved_per_epoch} moved rows per \
+                 epoch, cap {cap}, {par_threads} maintenance threads"
+            )),
+        ),
+        (
+            "rows",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("scale serial maintenance")),
+                    ("per_epoch_ms", Json::num(serial_ms)),
+                    ("epochs", Json::num(epochs as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("scale sharded maintenance")),
+                    ("per_epoch_ms", Json::num(par_ms)),
+                    ("epochs", Json::num(epochs as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("scale parallel maintenance speedup")),
+                    ("value", Json::num(speedup)),
+                    ("target", Json::num(2.0)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("maintenance threads")),
+                    ("value", Json::num(par_threads as f64)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("cold build ratio")),
+                    ("value", Json::num(build_ratio)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("frontier refresh ratio")),
+                    ("value", Json::num(refresh_ratio)),
+                ]),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_scale.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

@@ -54,6 +54,7 @@ use crate::config::AssocStrategy;
 use crate::delay::{ue_compute_time, upload_time};
 use crate::net::{Channel, Topology};
 use crate::trace::{Counter, NullSink, TraceSink};
+use crate::util::ShardPool;
 
 /// Read-only world view the policies score against. `topo` is only
 /// required by the latency-keyed policies (exact / B&B); the SNR-keyed
@@ -277,21 +278,38 @@ fn merge_assign(
     num_edges: usize,
     cap: usize,
     edge_up: Option<&[bool]>,
-    score: &dyn Fn(usize, usize) -> f64,
+    pool: ShardPool,
+    score: &(dyn Fn(usize, usize) -> f64 + Sync),
 ) -> Result<Vec<usize>, String> {
     let k = ids.len();
     check_feasible_masked(k, num_edges, edge_up, cap)?;
     let mut edge_of = vec![usize::MAX; k];
     let mut load = vec![0usize; num_edges];
-    let mut heap: BinaryHeap<Head> = BinaryHeap::with_capacity(k);
-    for i in 0..k {
-        let e = rows[row_of[i] * num_edges] as usize;
-        heap.push(Head {
-            score: score(ids[i], e),
-            ue: i as u32,
-            cursor: 0,
-        });
-    }
+    // The heap is *seeded* shard-parallel (each head's key is a pure
+    // per-UE score) and built with one heapify. The pop loop stays
+    // serial, but its output is a pure function of the heap's *content*:
+    // the `Head` order is strict (distinct `ue` indices break every score
+    // tie), so each pop returns the unique maximum of the current set no
+    // matter how the heap was assembled — bitwise-identical to the old
+    // push-seeded sweep for any thread count.
+    let w = pool.shard_width(k);
+    let ranges: Vec<(usize, usize)> = (0..k)
+        .step_by(w.max(1))
+        .map(|lo| (lo, (lo + w).min(k)))
+        .collect();
+    let seeds: Vec<Vec<Head>> = pool.map(ranges, |_, (lo, hi)| {
+        (lo..hi)
+            .map(|i| {
+                let e = rows[row_of[i] * num_edges] as usize;
+                Head {
+                    score: score(ids[i], e),
+                    ue: i as u32,
+                    cursor: 0,
+                }
+            })
+            .collect()
+    });
+    let mut heap = BinaryHeap::from(seeds.concat());
     let mut assigned = 0usize;
     while let Some(h) = heap.pop() {
         let i = h.ue as usize;
@@ -320,6 +338,26 @@ fn merge_assign(
         return Err("merge sweep left UEs unassigned".to_string());
     }
     Ok(edge_of)
+}
+
+/// Split ascending `ids` at the boundaries of a `width`-wide UE-id range
+/// partition: slice `s` holds exactly the ids in `[s·width, (s+1)·width)`
+/// — the ids shard `s` owns. Because the partition is by id *range*, the
+/// per-shard slices concatenated in shard order are `ids` itself, which
+/// is what makes every shard-order fold below equal its serial
+/// counterpart.
+fn shard_id_slices<'a>(ids: &'a [usize], width: usize, nshards: usize) -> Vec<&'a [usize]> {
+    let mut slices = Vec::with_capacity(nshards);
+    let mut rest = ids;
+    for s in 0..nshards {
+        let bound = (s + 1) * width;
+        let cut = rest.partition_point(|&u| u < bound);
+        let (head, tail) = rest.split_at(cut);
+        slices.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "ids outside the shard partition");
+    slices
 }
 
 /// Visitor fed one ranked UE at a time; return `false` to stop the edge.
@@ -427,9 +465,16 @@ impl AssocPolicy for ProposedPolicy {
             fill_candidate_row(self, ctx, ue, &mut scratch, &mut rows[i * m..(i + 1) * m]);
         }
         let row_of: Vec<usize> = (0..ids.len()).collect();
-        merge_assign(ids, &rows, &row_of, m, cap, ctx.edge_up, &|ue, e| {
-            self.score(ctx, ue, e)
-        })
+        merge_assign(
+            ids,
+            &rows,
+            &row_of,
+            m,
+            cap,
+            ctx.edge_up,
+            ShardPool::serial(),
+            &|ue, e| self.score(ctx, ue, e),
+        )
     }
 }
 
@@ -641,6 +686,11 @@ pub struct MaintainedAssociation {
     mask_changed: bool,
     dirty: Vec<bool>,
     dirty_list: Vec<usize>,
+    /// Intra-instance fork/join pool. The resolved thread count is the
+    /// engine's shard count (UE-id range partition); it is purely a speed
+    /// knob — every maintenance pass produces bitwise-identical state for
+    /// any value (see `util::par` and the module docs).
+    pool: ShardPool,
     state: WarmState,
     /// Cumulative UEs whose candidate state was reprocessed (the
     /// dirty-set sizes; cold fallbacks add the full active count).
@@ -686,6 +736,35 @@ impl MaintainedAssociation {
         provisional_a: f64,
         sink: &mut dyn TraceSink,
     ) -> Result<MaintainedAssociation, String> {
+        Self::new_sharded(
+            strategy,
+            topo,
+            channel,
+            active,
+            cap,
+            hysteresis,
+            provisional_a,
+            1,
+            sink,
+        )
+    }
+
+    /// [`Self::new_traced`] with the maintenance pool sized up front
+    /// (`intra_threads`; 0 = one per core), so the initial full-fleet
+    /// build itself runs shard-parallel. The built association is
+    /// bitwise-identical for every thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_sharded(
+        strategy: AssocStrategy,
+        topo: &Topology,
+        channel: &Channel,
+        active: &[bool],
+        cap: usize,
+        hysteresis: f64,
+        provisional_a: f64,
+        intra_threads: usize,
+        sink: &mut dyn TraceSink,
+    ) -> Result<MaintainedAssociation, String> {
         let n = topo.num_ues();
         let m = topo.num_edges();
         check_edge_width(m)?;
@@ -720,6 +799,7 @@ impl MaintainedAssociation {
             mask_changed: false,
             dirty: vec![false; n],
             dirty_list: Vec::new(),
+            pool: ShardPool::new(intra_threads),
             state,
             reassociations: 0,
             full_rebuilds: 0,
@@ -737,6 +817,18 @@ impl MaintainedAssociation {
             self.dirty[ue] = true;
             self.dirty_list.push(ue);
         }
+    }
+
+    /// Set the maintenance thread count (0 = one per core). Purely a
+    /// speed knob: every later pass produces bitwise-identical state for
+    /// any value (property-tested in `tests/parallel.rs`).
+    pub fn set_intra_threads(&mut self, threads: usize) {
+        self.pool = ShardPool::new(threads);
+    }
+
+    /// Resolved maintenance thread count.
+    pub fn intra_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Apply one epoch's [`WorldDelta`] and recompute the association.
@@ -851,6 +943,24 @@ impl MaintainedAssociation {
         &self.load
     }
 
+    /// Recompute the association from the dirty set — the shard-parallel
+    /// epoch maintenance pass.
+    ///
+    /// **Why any thread count is bitwise-identical.** The per-UE state is
+    /// struct-of-arrays (`rows`/`top`/`scores`/`edge_of`/`active` are flat
+    /// arrays indexed by global UE id), partitioned into `pool.threads()`
+    /// contiguous id-range shards of width `ceil(N / threads)`. Every
+    /// parallel phase either (a) writes only its own shard's slice
+    /// (`chunks_mut`), with each element a pure function of that UE's
+    /// inputs — so the array contents never depend on scheduling — or
+    /// (b) returns a per-shard partial (id list, load histogram, head
+    /// seeds) that is folded **in ascending shard order**: concatenating
+    /// range-sharded id lists yields the globally ascending id order, and
+    /// integer histogram sums are order-free anyway. The one sequential
+    /// stage left, the merge sweep's heap pop loop, is a pure function of
+    /// the heap's content (strict `Head` order), not of seeding order.
+    /// Trace counters are folded from per-shard counts the same way, so a
+    /// sink observes identical streams for every thread count.
     fn reassign(
         &mut self,
         topo: &Topology,
@@ -859,12 +969,36 @@ impl MaintainedAssociation {
         sink: &mut dyn TraceSink,
     ) -> Result<(), String> {
         let m = self.num_edges;
+        let n = self.num_ues;
         let cap = self.cap;
+        let pool = self.pool;
+        let width = pool.shard_width(n);
+        let nshards = if n == 0 { 1 } else { n.div_ceil(width) };
         let traced = sink.enabled();
-        if traced {
-            sink.counter(Counter::AssocDirty, self.dirty_list.len() as u64);
+        // Per-shard dirty sets (UE-id range partition). The shard-order
+        // fold of their sizes is the serial dirty count — the counter the
+        // sink sees is identical for every thread count.
+        let mut dirty_shards: Vec<Vec<usize>> = vec![Vec::new(); nshards];
+        for &ue in &self.dirty_list {
+            dirty_shards[ue / width].push(ue);
         }
-        let ids: Vec<usize> = (0..self.num_ues).filter(|&u| self.active[u]).collect();
+        let dirty_total: u64 = dirty_shards.iter().map(|b| b.len() as u64).sum();
+        debug_assert_eq!(dirty_total, self.dirty_list.len() as u64);
+        if traced {
+            sink.counter(Counter::AssocDirty, dirty_total);
+        }
+        let dirty_shards = &dirty_shards;
+        // Active ids, ascending: per-shard collects concatenated in shard
+        // order are already globally sorted (range sharding).
+        let id_parts: Vec<Vec<usize>> =
+            pool.map(self.active.chunks(width).collect(), |s, chunk| {
+                chunk
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(j, &a)| if a { Some(s * width + j) } else { None })
+                    .collect()
+            });
+        let ids: Vec<usize> = id_parts.concat();
         // `None` when every edge serves, so outage-free worlds take the
         // exact pre-outage paths (and error messages).
         let mask: Option<&[bool]> = if self.edge_up.iter().all(|&u| u) {
@@ -878,6 +1012,7 @@ impl MaintainedAssociation {
             topo: Some(topo),
             edge_up: mask,
         };
+        let ctx = &ctx;
         if ids.is_empty() {
             for x in self.edge_of.iter_mut() {
                 *x = usize::MAX;
@@ -886,13 +1021,24 @@ impl MaintainedAssociation {
             match &mut self.state {
                 WarmState::Proposed { rows, top } => {
                     let policy = ProposedPolicy;
-                    let mut scratch = Vec::with_capacity(m);
-                    for &ue in self.dirty_list.iter() {
-                        let row = &mut rows[ue * m..(ue + 1) * m];
-                        fill_candidate_row(&policy, &ctx, ue, &mut scratch, row);
-                        top[ue] = first_up(row, mask);
-                    }
-                    self.reassociations += self.dirty_list.len() as u64;
+                    // Shard-parallel dirty re-scoring: each shard owns a
+                    // disjoint rows/top slice and walks only its own
+                    // dirty bucket.
+                    let work: Vec<(&mut [u16], &mut [u16])> = rows
+                        .chunks_mut(width * m)
+                        .zip(top.chunks_mut(width))
+                        .collect();
+                    let processed: Vec<u64> = pool.map(work, |s, (row_chunk, top_chunk)| {
+                        let mut scratch = Vec::with_capacity(m);
+                        for &ue in &dirty_shards[s] {
+                            let local = ue - s * width;
+                            let row = &mut row_chunk[local * m..(local + 1) * m];
+                            fill_candidate_row(&policy, ctx, ue, &mut scratch, row);
+                            top_chunk[local] = first_up(row, mask);
+                        }
+                        dirty_shards[s].len() as u64
+                    });
+                    self.reassociations += processed.iter().sum::<u64>();
                     if self.mask_changed && traced {
                         sink.counter(Counter::AssocMaskRetargets, 1);
                     }
@@ -902,39 +1048,66 @@ impl MaintainedAssociation {
                         // walking the cached rows — integer work only, no
                         // re-scoring, no re-sorting. This is what keeps an
                         // outage epoch incremental instead of a cold
-                        // rebuild.
-                        for ue in 0..self.num_ues {
-                            let row = &rows[ue * m..(ue + 1) * m];
-                            top[ue] = first_up(row, mask);
-                        }
+                        // rebuild. Shard-parallel: each shard rewrites its
+                        // own top slice from its own (read-only) rows.
+                        let work: Vec<(&[u16], &mut [u16])> = rows
+                            .chunks(width * m)
+                            .zip(top.chunks_mut(width))
+                            .collect();
+                        pool.map(work, |_, (row_chunk, top_chunk)| {
+                            for (local, t) in top_chunk.iter_mut().enumerate() {
+                                *t = first_up(&row_chunk[local * m..(local + 1) * m], mask);
+                            }
+                        });
                     }
+                    // Per-shard argmax-load histograms, folded edge-wise
+                    // in shard order (integer sums).
+                    let top_ro: &[u16] = top;
+                    let partial: Vec<Vec<u32>> =
+                        pool.map(shard_id_slices(&ids, width, nshards), |_, slice| {
+                            let mut counts = vec![0u32; m];
+                            for &ue in slice {
+                                counts[top_ro[ue] as usize] += 1;
+                            }
+                            counts
+                        });
                     let mut argmax_load = vec![0usize; m];
-                    for &ue in &ids {
-                        argmax_load[top[ue] as usize] += 1;
+                    for p in &partial {
+                        for (acc, &c) in argmax_load.iter_mut().zip(p) {
+                            *acc += c as usize;
+                        }
                     }
                     if argmax_load.iter().all(|&l| l <= cap) {
                         // Fast path: the global sweep would assign every
-                        // UE its top candidate (see module docs).
+                        // UE its top candidate (see module docs). Each
+                        // shard rewrites its own edge_of range.
                         if traced {
                             sink.counter(Counter::AssocFastPath, 1);
                         }
-                        for x in self.edge_of.iter_mut() {
-                            *x = usize::MAX;
-                        }
-                        for &ue in &ids {
-                            self.edge_of[ue] = top[ue] as usize;
-                        }
+                        let work: Vec<((&mut [usize], &[bool]), &[u16])> = self
+                            .edge_of
+                            .chunks_mut(width)
+                            .zip(self.active.chunks(width))
+                            .zip(top_ro.chunks(width))
+                            .collect();
+                        pool.map(work, |_, ((eo, act), tp)| {
+                            for ((e, &a), &t) in eo.iter_mut().zip(act).zip(tp) {
+                                *e = if a { t as usize } else { usize::MAX };
+                            }
+                        });
                     } else {
                         // Capacity binds somewhere: run the shared merge
-                        // sweep over the cached rows.
+                        // sweep over the cached rows (parallel-seeded,
+                        // content-deterministic pop loop).
                         if traced {
                             sink.counter(Counter::AssocMergeSweep, 1);
                         }
                         self.full_rebuilds += 1;
                         self.reassociations += ids.len() as u64;
-                        let assigned = merge_assign(&ids, rows, &ids, m, cap, mask, &|ue, e| {
-                            policy.score(&ctx, ue, e)
-                        })?;
+                        let assigned =
+                            merge_assign(&ids, rows, &ids, m, cap, mask, pool, &|ue, e| {
+                                policy.score(ctx, ue, e)
+                            })?;
                         for x in self.edge_of.iter_mut() {
                             *x = usize::MAX;
                         }
@@ -945,43 +1118,69 @@ impl MaintainedAssociation {
                 }
                 WarmState::Greedy { scores, rank } => {
                     let policy = GreedyPolicy;
-                    let mut scratch = Vec::with_capacity(m);
+                    let dirty_list: &[usize] = &self.dirty_list;
                     if rank.is_empty() {
-                        // First pass: bulk-build the per-edge rankings
-                        // from sorted vectors (covers the all-dirty set).
-                        for ue in 0..self.num_ues {
-                            policy.fill_scores(&ctx, ue, &mut scratch);
-                            scores[ue * m..(ue + 1) * m].copy_from_slice(&scratch);
-                        }
-                        for e in 0..m {
-                            let mut order: Vec<RankKey> = (0..self.num_ues)
+                        // First pass: bulk build. Phase 1 (shard-parallel)
+                        // scores every UE row into the shard's slice.
+                        let chunks: Vec<&mut [f64]> = scores.chunks_mut(width * m).collect();
+                        pool.map(chunks, |s, chunk| {
+                            let mut scratch = Vec::with_capacity(m);
+                            for local in 0..chunk.len() / m {
+                                policy.fill_scores(ctx, s * width + local, &mut scratch);
+                                chunk[local * m..(local + 1) * m].copy_from_slice(&scratch);
+                            }
+                        });
+                        // Phase 2 (edge-parallel): each edge's ranking is
+                        // a pure function of its score column.
+                        let scores_ro: &[f64] = scores;
+                        *rank = pool.map((0..m).collect(), |_, e| {
+                            let mut order: Vec<RankKey> = (0..n)
                                 .map(|ue| RankKey {
-                                    score: scores[ue * m + e],
+                                    score: scores_ro[ue * m + e],
                                     ue: ue as u32,
                                 })
                                 .collect();
                             order.sort_unstable();
-                            rank.push(order.into_iter().collect());
-                        }
+                            order.into_iter().collect()
+                        });
                     } else {
-                        for &ue in self.dirty_list.iter() {
-                            for e in 0..m {
-                                rank[e].remove(&RankKey {
-                                    score: scores[ue * m + e],
+                        // Incremental pass in three barriers, parallel
+                        // along two axes. A (edge-parallel): drop the
+                        // dirty UEs' stale keys — each worker owns whole
+                        // BTreeSets, and set contents are order-free.
+                        let scores_ro: &[f64] = scores;
+                        let sets: Vec<&mut BTreeSet<RankKey>> = rank.iter_mut().collect();
+                        pool.map(sets, |e, set| {
+                            for &ue in dirty_list {
+                                set.remove(&RankKey {
+                                    score: scores_ro[ue * m + e],
                                     ue: ue as u32,
                                 });
                             }
-                            policy.fill_scores(&ctx, ue, &mut scratch);
-                            scores[ue * m..(ue + 1) * m].copy_from_slice(&scratch);
-                            for e in 0..m {
-                                rank[e].insert(RankKey {
-                                    score: scores[ue * m + e],
+                        });
+                        // B (shard-parallel): re-score the dirty rows.
+                        let chunks: Vec<&mut [f64]> = scores.chunks_mut(width * m).collect();
+                        pool.map(chunks, |s, chunk| {
+                            let mut scratch = Vec::with_capacity(m);
+                            for &ue in &dirty_shards[s] {
+                                let local = ue - s * width;
+                                policy.fill_scores(ctx, ue, &mut scratch);
+                                chunk[local * m..(local + 1) * m].copy_from_slice(&scratch);
+                            }
+                        });
+                        // C (edge-parallel): insert the fresh keys.
+                        let scores_ro: &[f64] = scores;
+                        let sets: Vec<&mut BTreeSet<RankKey>> = rank.iter_mut().collect();
+                        pool.map(sets, |e, set| {
+                            for &ue in dirty_list {
+                                set.insert(RankKey {
+                                    score: scores_ro[ue * m + e],
                                     ue: ue as u32,
                                 });
                             }
-                        }
+                        });
                     }
-                    self.reassociations += self.dirty_list.len() as u64;
+                    self.reassociations += dirty_total;
                     let mut feed = |e: usize, visit: &mut dyn FnMut(usize) -> bool| {
                         for key in rank[e].iter() {
                             if !visit(key.ue as usize) {
@@ -989,7 +1188,7 @@ impl MaintainedAssociation {
                             }
                         }
                     };
-                    let assigned = edgewise_take(&ids, self.num_ues, m, cap, mask, &mut feed)?;
+                    let assigned = edgewise_take(&ids, n, m, cap, mask, &mut feed)?;
                     for x in self.edge_of.iter_mut() {
                         *x = usize::MAX;
                     }
@@ -999,7 +1198,7 @@ impl MaintainedAssociation {
                 }
                 WarmState::Cold => {
                     let policy = policy_for(self.strategy, provisional_a)?;
-                    let assigned = policy.assign_cold(&ctx, &ids, cap)?;
+                    let assigned = policy.assign_cold(ctx, &ids, cap)?;
                     if traced {
                         sink.counter(Counter::AssocMergeSweep, 1);
                     }
@@ -1019,11 +1218,25 @@ impl MaintainedAssociation {
         }
         self.dirty_list.clear();
         self.mask_changed = false;
+        // Load recount: per-shard histograms folded edge-wise in shard
+        // order (integer sums — identical for any thread count).
+        let load_partial: Vec<Vec<u32>> =
+            pool.map(self.edge_of.chunks(width).collect(), |_, chunk| {
+                let mut counts = vec![0u32; m];
+                for &e in chunk {
+                    if e != usize::MAX {
+                        counts[e] += 1;
+                    }
+                }
+                counts
+            });
         for l in self.load.iter_mut() {
             *l = 0;
         }
-        for &ue in &ids {
-            self.load[self.edge_of[ue]] += 1;
+        for p in &load_partial {
+            for (acc, &c) in self.load.iter_mut().zip(p) {
+                *acc += c as usize;
+            }
         }
         debug_assert!(
             self.load

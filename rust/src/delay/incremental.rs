@@ -30,6 +30,7 @@
 use super::{cloud_rounds_int, ue_compute_time, upload_time, DelayInstance, EdgeDelays};
 use crate::net::{Channel, Topology};
 use crate::trace::{Counter, TraceSink};
+use crate::util::ShardPool;
 
 /// `max_n (a·cmp_n + com_n)` over a set of delay lines (0 when empty).
 #[inline]
@@ -66,9 +67,19 @@ pub struct MaintainedInstance {
     slot: Vec<Option<(usize, usize)>>,
     /// Global UE id held at `inst.per_edge[e].ue[s]` (sorted ascending).
     member: Vec<Vec<usize>>,
-    /// Cached Pareto frontier per edge (valid when not dirty).
-    frontier: Vec<Vec<(f64, f64)>>,
+    /// Flat Pareto-frontier store (struct-of-arrays): edge `e`'s cached
+    /// frontier is `frontier_store[frontier_off[e]..frontier_off[e + 1]]`.
+    /// One allocation instead of one per edge — the layout [`Self::refresh`]
+    /// rebuilds as an edge-ordered concatenation, so the bytes are a pure
+    /// function of the world regardless of how many threads computed the
+    /// per-edge frontiers.
+    frontier_store: Vec<(f64, f64)>,
+    /// `m + 1` offsets into `frontier_store` (edge-ordered prefix sums).
+    frontier_off: Vec<usize>,
     dirty: Vec<bool>,
+    /// Intra-instance fork/join pool for [`Self::refresh`] — purely a
+    /// speed knob, every thread count yields bitwise-identical frontiers.
+    pool: ShardPool,
     /// Cumulative frontiers rebuilt by [`Self::refresh`] — deterministic
     /// telemetry (the solver calls `refresh`, so this is a counter the
     /// scenario loop reads by delta rather than a sink parameter).
@@ -105,8 +116,10 @@ impl MaintainedInstance {
             inst,
             slot: vec![None; edge_of.len()],
             member: vec![Vec::new(); m],
-            frontier: vec![Vec::new(); m],
+            frontier_store: Vec::new(),
+            frontier_off: vec![0; m + 1],
             dirty: vec![true; m],
+            pool: ShardPool::serial(),
             frontier_rebuilds: 0,
         };
         for (n, e) in edge_of.iter().enumerate() {
@@ -226,16 +239,67 @@ impl MaintainedInstance {
         self.dirty[e] = true;
     }
 
+    /// Set the refresh thread count (0 = one per core). Purely a speed
+    /// knob: every thread count yields bitwise-identical frontiers
+    /// (property-tested in `tests/parallel.rs`).
+    pub fn set_intra_threads(&mut self, threads: usize) {
+        self.pool = ShardPool::new(threads);
+    }
+
+    /// Resolved refresh thread count.
+    pub fn intra_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Edge `e`'s cached Pareto frontier (valid after [`Self::refresh`]).
+    #[inline]
+    pub fn frontier_of(&self, e: usize) -> &[(f64, f64)] {
+        &self.frontier_store[self.frontier_off[e]..self.frontier_off[e + 1]]
+    }
+
     /// Rebuild the frontiers of edges whose membership or delays changed
     /// since the last refresh. Call once before a batch of evaluations.
+    ///
+    /// The dirty edges' frontiers are computed edge-parallel (each is a
+    /// pure function of its edge's member lines), then spliced back into
+    /// the flat store serially in ascending edge order — so the store's
+    /// bytes never depend on the thread count.
     pub fn refresh(&mut self) {
-        for (e, dirty) in self.dirty.iter_mut().enumerate() {
-            if *dirty {
-                self.frontier[e] = pareto_frontier(&self.inst.per_edge[e].ue);
-                *dirty = false;
-                self.frontier_rebuilds += 1;
-            }
+        let dirty_edges: Vec<usize> = (0..self.dirty.len()).filter(|&e| self.dirty[e]).collect();
+        if dirty_edges.is_empty() {
+            return;
         }
+        let pool = self.pool;
+        let fresh: Vec<Vec<(f64, f64)>> = pool.map(
+            dirty_edges
+                .iter()
+                .map(|&e| self.inst.per_edge[e].ue.as_slice())
+                .collect(),
+            |_, lines| pareto_frontier(lines),
+        );
+        let m = self.dirty.len();
+        let mut store = Vec::with_capacity(self.frontier_store.len());
+        let mut off = Vec::with_capacity(m + 1);
+        off.push(0);
+        let mut next_fresh = dirty_edges.iter().zip(&fresh).peekable();
+        for e in 0..m {
+            match next_fresh.peek() {
+                Some(&(&d, f)) if d == e => {
+                    store.extend_from_slice(f);
+                    next_fresh.next();
+                }
+                _ => store.extend_from_slice(
+                    &self.frontier_store[self.frontier_off[e]..self.frontier_off[e + 1]],
+                ),
+            }
+            off.push(store.len());
+        }
+        self.frontier_store = store;
+        self.frontier_off = off;
+        for &e in &dirty_edges {
+            self.dirty[e] = false;
+        }
+        self.frontier_rebuilds += dirty_edges.len() as u64;
     }
 
     /// Cumulative per-edge frontier rebuilds performed by
@@ -255,9 +319,8 @@ impl MaintainedInstance {
     /// `max_m τ_m(a)` via the cached frontiers (memberless edges give 0).
     pub fn tau_max(&self, a: f64) -> f64 {
         self.assert_fresh();
-        self.frontier
-            .iter()
-            .map(|f| tau_lines(f, a))
+        (0..self.frontier_off.len() - 1)
+            .map(|e| tau_lines(self.frontier_of(e), a))
             .fold(0.0, f64::max)
     }
 
@@ -265,11 +328,9 @@ impl MaintainedInstance {
     /// bitwise equal to [`DelayInstance::round_time`].
     pub fn round_time(&self, a: f64, b: f64) -> f64 {
         self.assert_fresh();
-        self.frontier
-            .iter()
-            .zip(&self.inst.per_edge)
-            .filter(|(f, _)| !f.is_empty())
-            .map(|(f, e)| b * tau_lines(f, a) + e.backhaul_s)
+        (0..self.inst.per_edge.len())
+            .filter(|&e| self.frontier_off[e] < self.frontier_off[e + 1])
+            .map(|e| b * tau_lines(self.frontier_of(e), a) + self.inst.per_edge[e].backhaul_s)
             .fold(0.0, f64::max)
     }
 
@@ -418,19 +479,47 @@ mod tests {
     }
 
     #[test]
+    fn refresh_is_bitwise_identical_for_any_thread_count() {
+        let (mut topo, mut ch) = world(6);
+        let edge_of: Vec<Option<usize>> = (0..18).map(|i| Some(i % 3)).collect();
+        let mut serial = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+        serial.refresh();
+        for threads in [2usize, 8] {
+            let mut par = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+            par.set_intra_threads(threads);
+            assert_eq!(par.intra_threads(), threads);
+            par.refresh();
+            assert_eq!(par.frontier_store, serial.frontier_store, "threads={threads}");
+            assert_eq!(par.frontier_off, serial.frontier_off);
+        }
+        // Partial refresh (only one edge dirty) splices, not rebuilds.
+        topo.ues[4].pos = Position { x: 312.0, y: 18.0 };
+        ch.recompute_ue(&topo.params, &topo.ues[4], &topo.edges);
+        serial.sync_delta(&topo, &ch, &edge_of, &[4]);
+        serial.refresh();
+        for threads in [2usize, 8] {
+            let mut par = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
+            par.set_intra_threads(threads);
+            par.refresh();
+            assert_eq!(par.frontier_store, serial.frontier_store, "threads={threads}");
+            assert_eq!(par.frontier_off, serial.frontier_off);
+        }
+    }
+
+    #[test]
     fn frontier_prunes_dominated_members() {
         let (topo, ch) = world(7);
         // Pile everyone on edge 0: plenty of dominated lines.
         let edge_of: Vec<Option<usize>> = (0..18).map(|_| Some(0)).collect();
         let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
         m.refresh();
-        assert!(!m.frontier[0].is_empty());
+        assert!(!m.frontier_of(0).is_empty());
         assert!(
-            m.frontier[0].len() <= m.inst.per_edge[0].ue.len(),
+            m.frontier_of(0).len() <= m.inst.per_edge[0].ue.len(),
             "frontier cannot exceed the member count"
         );
         // Frontier intercepts strictly increase as slopes decrease.
-        for w in m.frontier[0].windows(2) {
+        for w in m.frontier_of(0).windows(2) {
             assert!(w[0].0 >= w[1].0 && w[0].1 < w[1].1);
         }
     }
@@ -444,7 +533,7 @@ mod tests {
             .collect();
         let mut m = MaintainedInstance::build(&topo, &ch, &edge_of, 0.25);
         m.refresh();
-        assert!(m.frontier[1].is_empty());
+        assert!(m.frontier_of(1).is_empty());
         let inst = rebuild(&topo, &ch, &edge_of, 0.25);
         assert_eq!(m.round_time(10.0, 4.0).to_bits(), inst.round_time(10.0, 4.0).to_bits());
     }

@@ -130,6 +130,9 @@ SCENARIO OPTIONS
                        identical maps either way)
   --assoc-hysteresis H load-drift fraction of capacity that re-scores an
                        edge's members in warm mode (default 0.25)
+  --intra-threads N    maintenance threads / engine shards inside one
+                       instance (0 = one per core; results are bitwise-
+                       identical for any value)          (default 1)
   --report FILE        JSON report path (default results/scenario_report.json)
   --trace FILE         write a JSONL trace event stream (per-epoch phase
                        spans + engine counters; content is seed-deterministic)

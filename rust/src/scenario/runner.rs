@@ -12,7 +12,7 @@
 //! bit-for-bit identical for any shard count (property-tested in
 //! `tests/scenario.rs` for 1 vs 8 shards).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use super::dynamics::{run_instance_traced, ScenarioOutcome};
@@ -68,18 +68,51 @@ pub fn instance_seeds(base_seed: u64, instances: usize) -> Vec<u64> {
 fn run_batch_sinked<S, G, F>(
     spec: &ScenarioSpec,
     mk_sink: G,
-    mut on_done: F,
+    on_done: F,
 ) -> Result<(BatchResult, Vec<S>), String>
 where
     S: TraceSink + Send,
     G: Fn(usize) -> S + Sync,
     F: FnMut(usize, &ScenarioOutcome),
 {
+    run_batch_core(spec, mk_sink, on_done, |_, seed, sink| {
+        run_instance_traced(spec, seed, sink)
+    })
+}
+
+/// The executor behind [`run_batch_sinked`], generic over the per-instance
+/// run function so the failure-reporting contract is directly testable.
+///
+/// **Error reporting is schedule-independent.** On failure the batch
+/// reports the *lowest-index* failing instance, for any shard count. The
+/// old code returned the first error *received* — completion order, so
+/// which error surfaced depended on shard scheduling. The argument for the
+/// fix: workers claim indices from one atomic counter, so claims are
+/// handed out in increasing order; the abort flag is only set *after* an
+/// error for some claimed index `j` arrives, by which point every index
+/// `< j` — in particular the globally lowest failing index — was already
+/// claimed; claimed instances always run to completion (the flag is
+/// checked before claiming, never mid-run) and the receiver drains the
+/// channel until every worker is done. The minimum over received errors is
+/// therefore the minimum over all errors the serial run would hit.
+fn run_batch_core<S, G, F, R>(
+    spec: &ScenarioSpec,
+    mk_sink: G,
+    mut on_done: F,
+    run_one: R,
+) -> Result<(BatchResult, Vec<S>), String>
+where
+    S: TraceSink + Send,
+    G: Fn(usize) -> S + Sync,
+    F: FnMut(usize, &ScenarioOutcome),
+    R: Fn(usize, u64, &mut S) -> Result<ScenarioOutcome, String> + Sync,
+{
     spec.validate()?;
     let instances = spec.batch.instances;
     let shards = shard_count(spec.batch.shards).min(instances.max(1));
     let seeds = instance_seeds(spec.base.seed, instances);
     let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
 
     type Slot<S> = (usize, Result<ScenarioOutcome, String>, S);
@@ -89,19 +122,29 @@ where
             for _ in 0..shards {
                 let tx = tx.clone();
                 let next = &next;
+                let abort = &abort;
                 let seeds = &seeds;
                 let mk_sink = &mk_sink;
+                let run_one = &run_one;
                 scope.spawn(move || loop {
+                    // Checked before claiming only: once an index is
+                    // claimed it always runs and reports (the lowest-index
+                    // failure argument above depends on this). Relaxed is
+                    // enough — the flag is a stop-claiming hint, the
+                    // channel carries all the data.
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= instances {
                         break;
                     }
                     let mut sink = mk_sink(i);
-                    let result = run_instance_traced(spec, seeds[i], &mut sink).map(|mut o| {
+                    let result = run_one(i, seeds[i], &mut sink).map(|mut o| {
                         o.instance = i;
                         o
                     });
-                    // Receiver gone (error path) — stop claiming work.
+                    // Receiver gone — stop claiming work.
                     if tx.send((i, result, sink)).is_err() {
                         break;
                     }
@@ -111,15 +154,26 @@ where
 
             let mut slots: Vec<Option<ScenarioOutcome>> = (0..instances).map(|_| None).collect();
             let mut sink_slots: Vec<Option<S>> = (0..instances).map(|_| None).collect();
+            let mut first_err: Option<(usize, String)> = None;
             for (i, result, sink) in rx {
                 match result {
                     Ok(outcome) => {
-                        on_done(i, &outcome);
+                        if first_err.is_none() {
+                            on_done(i, &outcome);
+                        }
                         slots[i] = Some(outcome);
                         sink_slots[i] = Some(sink);
                     }
-                    Err(e) => return Err(format!("scenario instance {i}: {e}")),
+                    Err(e) => {
+                        abort.store(true, Ordering::Relaxed);
+                        if first_err.as_ref().map_or(true, |(j, _)| i < *j) {
+                            first_err = Some((i, e));
+                        }
+                    }
                 }
+            }
+            if let Some((i, e)) = first_err {
+                return Err(format!("scenario instance {i}: {e}"));
             }
             Ok((
                 slots
@@ -208,6 +262,38 @@ mod tests {
             assert!(o.converged);
         }
         assert!(batch.instances_per_s() > 0.0);
+    }
+
+    #[test]
+    fn failing_batch_reports_lowest_index_for_any_shard_count() {
+        // Regression: the runner used to surface the first error *received*
+        // (completion order), so the reported instance depended on shard
+        // scheduling. With injected failures at indices 3 and 5, every
+        // shard count must report instance 3.
+        let spec = crate::scenario::ScenarioSpec::new()
+            .edges(2)
+            .ues(6)
+            .instances(8);
+        for shards in [1usize, 8] {
+            let spec = spec.clone().shards(shards);
+            let err = run_batch_core(
+                &spec,
+                |_| NullSink,
+                |_, _| {},
+                |i, seed, sink| {
+                    if i == 3 || i == 5 {
+                        Err("injected failure".to_string())
+                    } else {
+                        run_instance_traced(&spec, seed, sink)
+                    }
+                },
+            )
+            .unwrap_err();
+            assert!(
+                err.starts_with("scenario instance 3:"),
+                "shards={shards}: reported '{err}', want instance 3"
+            );
+        }
     }
 
     #[test]

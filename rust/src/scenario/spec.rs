@@ -254,6 +254,12 @@ pub struct ScenarioSpec {
     /// under the paper's load-independent metric; bounds cache staleness
     /// for load-coupled scoring extensions).
     pub assoc_hysteresis: f64,
+    /// Intra-instance maintenance threads: the deterministic shard count
+    /// for the SoA-sharded engines (`assoc::MaintainedAssociation`,
+    /// `delay::MaintainedInstance`). `0` = one shard per available core;
+    /// any value yields bitwise-identical results (a speed knob, not a
+    /// semantics knob — property-tested in `tests/parallel.rs`).
+    pub intra_threads: usize,
     pub failure: FailureSpec,
     /// Heterogeneous device classes (empty = the paper's uniform fleet).
     pub devices: DeviceClassSpec,
@@ -273,6 +279,7 @@ impl Default for ScenarioSpec {
             resolve: ResolveMode::default(),
             assoc_resolve: ResolveMode::default(),
             assoc_hysteresis: 0.25,
+            intra_threads: 1,
             failure: FailureSpec::default(),
             devices: DeviceClassSpec::default(),
             outage: OutageSpec::default(),
@@ -337,6 +344,13 @@ impl ScenarioSpec {
     /// that triggers member re-scoring.
     pub fn assoc_hysteresis(mut self, h: f64) -> Self {
         self.assoc_hysteresis = h;
+        self
+    }
+
+    /// Intra-instance maintenance threads / engine shard count
+    /// (0 = one per core; bitwise-identical results for any value).
+    pub fn intra_threads(mut self, threads: usize) -> Self {
+        self.intra_threads = threads;
         self
     }
 
@@ -512,6 +526,9 @@ impl ScenarioSpec {
         if let Some(v) = doc.f64("optimizer", "assoc_hysteresis") {
             self.assoc_hysteresis = v;
         }
+        if let Some(v) = doc.i64("optimizer", "intra_threads") {
+            self.intra_threads = v.max(0) as usize;
+        }
         // [batch]
         if let Some(v) = doc.i64("batch", "instances") {
             self.batch.instances = v.max(1) as usize;
@@ -575,6 +592,9 @@ impl ScenarioSpec {
         }
         if let Some(v) = args.get::<f64>("assoc-hysteresis")? {
             self.assoc_hysteresis = v;
+        }
+        if let Some(v) = args.get::<usize>("intra-threads")? {
+            self.intra_threads = v;
         }
         if let Some(v) = args.get::<usize>("instances")? {
             self.batch.instances = v.max(1);
@@ -706,8 +726,13 @@ impl ScenarioSpec {
         } else {
             String::new()
         };
+        let intra = if self.intra_threads != 1 {
+            format!(", intra_threads={}", self.intra_threads)
+        } else {
+            String::new()
+        };
         format!(
-            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}, \
+            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}{intra}, \
              jitter={}, dropout={}{deadline}{outage}, devices={devices}, {}",
             self.base.num_edges,
             self.base.num_ues,
@@ -913,6 +938,33 @@ assoc_hysteresis = 0.5
         spec.validate().unwrap();
         assert!(ScenarioSpec::new().assoc_hysteresis(-1.0).validate().is_err());
         assert!(ScenarioSpec::new().assoc_hysteresis(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn intra_threads_knob_toml_cli_builder() {
+        // Default: serial maintenance (one shard).
+        let d = ScenarioSpec::default();
+        assert_eq!(d.intra_threads, 1);
+        assert!(!d.summary().contains("intra_threads"), "default stays silent");
+        // TOML (negative values clamp to auto).
+        let spec = ScenarioSpec::parse_toml(
+            r#"
+[optimizer]
+intra_threads = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.intra_threads, 4);
+        let spec = ScenarioSpec::parse_toml("[optimizer]\nintra_threads = -3\n").unwrap();
+        assert_eq!(spec.intra_threads, 0, "negative clamps to 0 = auto");
+        // CLI override.
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args("scenario --intra-threads 8")).unwrap();
+        assert_eq!(spec.intra_threads, 8);
+        assert!(spec.summary().contains("intra_threads=8"));
+        // Builder + validation: any usize is valid (0 = auto).
+        ScenarioSpec::new().intra_threads(0).validate().unwrap();
+        ScenarioSpec::new().intra_threads(64).validate().unwrap();
     }
 
     #[test]

@@ -4,9 +4,11 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod toml;
 
+pub use par::ShardPool;
 pub use rng::Rng;

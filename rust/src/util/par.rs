@@ -1,0 +1,189 @@
+//! Deterministic fork/join executor for intra-instance data parallelism.
+//!
+//! The maintained engines (`assoc::MaintainedAssociation`,
+//! `delay::MaintainedInstance`) partition their per-UE state into UE-id
+//! **range shards** and run each epoch's maintenance shard-parallel. The
+//! contract mirrors the batch runner's shard-count independence, one level
+//! down: results must be **bitwise-identical for any thread count**. The
+//! executor guarantees the structural half of that contract —
+//!
+//! * work items are mapped by a pure function of the item (workers share
+//!   no mutable state), and
+//! * results are returned **in input order**, regardless of which worker
+//!   ran which item or in what order they finished —
+//!
+//! so any reduction the caller folds over the returned Vec is a fixed
+//! shard-order reduction. The callers supply the other half: per-shard
+//! outputs that depend only on that shard's inputs (disjoint `chunks_mut`
+//! slices, per-shard counters summed in shard order).
+//!
+//! No work stealing and no channels: items are assigned round-robin to at
+//! most `threads` scoped workers, each returns its `(index, result)` pairs
+//! on join, and the pairs are slotted back by index. With `threads <= 1`
+//! (or a single item) the map runs inline on the caller's stack — the
+//! serial path *is* the parallel path with one worker, not separate code.
+
+use std::thread;
+
+/// A fixed-width pool descriptor. Copy-cheap (just the resolved thread
+/// count); the OS threads are scoped to each [`ShardPool::map`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPool {
+    threads: usize,
+}
+
+impl ShardPool {
+    /// `requested == 0` resolves to the machine's available parallelism
+    /// (same convention as the batch runner's `shards = 0`). The resolved
+    /// count is only a *speed* knob: outputs are bitwise-identical for
+    /// every value, so auto-resolution does not hurt reproducibility.
+    pub fn new(requested: usize) -> Self {
+        let threads = if requested == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            requested
+        };
+        ShardPool { threads: threads.max(1) }
+    }
+
+    /// A pool that always runs inline.
+    pub fn serial() -> Self {
+        ShardPool { threads: 1 }
+    }
+
+    /// Resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Width of a UE-id range shard for `n` items: `ceil(n / threads)`,
+    /// at least 1. Shard `s` owns ids `[s * width, (s + 1) * width)`; the
+    /// shard of id `i` is `i / width`. Range sharding (not modulo) keeps
+    /// each shard's ids contiguous, so per-shard outputs concatenated in
+    /// shard order are already in global id order — the property the
+    /// deterministic reductions lean on.
+    pub fn shard_width(&self, n: usize) -> usize {
+        n.div_ceil(self.threads).max(1)
+    }
+
+    /// Map `f` over owned work items on up to `threads()` scoped workers;
+    /// results come back **in input order**. `f` receives `(index, item)`.
+    ///
+    /// Items may carry `&mut` slices (e.g. disjoint `chunks_mut` views of
+    /// a flat array) — ownership moves into exactly one worker, so the
+    /// borrows stay exclusive. A panic in any worker propagates.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(usize, I) -> T + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        let workers = self.threads.min(n);
+        let mut buckets: Vec<Vec<(usize, I)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, x) in items.into_iter().enumerate() {
+            buckets[i % workers].push((i, x));
+        }
+        let f = &f;
+        let done: Vec<Vec<(usize, T)>> = thread::scope(|scope| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    scope.spawn(move || {
+                        bucket
+                            .into_iter()
+                            .map(|(i, x)| (i, f(i, x)))
+                            .collect::<Vec<(usize, T)>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for pairs in done {
+            for (i, t) in pairs {
+                debug_assert!(slots[i].is_none());
+                slots[i] = Some(t);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every work item produces a result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_resolves_to_at_least_one() {
+        assert!(ShardPool::new(0).threads() >= 1);
+        assert_eq!(ShardPool::new(3).threads(), 3);
+        assert_eq!(ShardPool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn shard_width_covers_all_ids() {
+        for threads in 1..=9usize {
+            let pool = ShardPool::new(threads);
+            for n in [0usize, 1, 7, 64, 1000] {
+                let w = pool.shard_width(n);
+                assert!(w >= 1);
+                // Every id lands in a shard index < threads.
+                for i in 0..n {
+                    assert!(i / w < threads, "n={n} threads={threads} id={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_returns_results_in_input_order_for_any_thread_count() {
+        let serial: Vec<u64> = (0..97u64).map(|x| x * x + 1).collect();
+        for threads in [1usize, 2, 3, 8, 16] {
+            let pool = ShardPool::new(threads);
+            let got = pool.map((0..97u64).collect(), |i, x| {
+                assert_eq!(i as u64, x);
+                x * x + 1
+            });
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_supports_disjoint_mutable_chunks() {
+        // The engines' idiom: chunk a flat array by shard width, ship each
+        // chunk to a worker, fold per-shard counters in shard order.
+        let mut data = vec![0u32; 1000];
+        let pool = ShardPool::new(4);
+        let width = pool.shard_width(data.len());
+        let chunks: Vec<&mut [u32]> = data.chunks_mut(width).collect();
+        let counts = pool.map(chunks, |s, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (s * width + j) as u32;
+            }
+            chunk.len() as u64
+        });
+        assert_eq!(counts.iter().sum::<u64>(), 1000);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let pool = ShardPool::new(8);
+        let empty: Vec<u8> = pool.map(Vec::<u8>::new(), |_, x| x);
+        assert!(empty.is_empty());
+        assert_eq!(pool.map(vec![5u8], |i, x| x + i as u8), vec![5]);
+    }
+}

@@ -69,9 +69,13 @@ impl Rng {
     }
 
     /// Uniform integer in [0, n) (Lemire's method, unbiased).
+    ///
+    /// Panics on `n == 0` in every build profile: an empty range has no
+    /// uniform sample, and the release-mode fallback of "return 0" would
+    /// silently hand callers an index into nothing.
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::below(0): cannot sample an empty range");
         let mut x = self.next_u64();
         let mut m = (x as u128) * (n as u128);
         let mut l = m as u64;
@@ -184,8 +188,10 @@ impl Rng {
         p
     }
 
-    /// Pick one element uniformly.
+    /// Pick one element uniformly. Panics with an explicit message on an
+    /// empty slice (previously an opaque index-out-of-bounds via `below`).
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Rng::choose: cannot pick from an empty slice");
         &xs[self.below(xs.len() as u64) as usize]
     }
 }
@@ -277,6 +283,67 @@ mod tests {
         }
         assert_eq!(r.poisson(0.0), 0);
         assert_eq!(r.poisson(-1.0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::below(0)")]
+    fn below_zero_panics_explicitly() {
+        // Must panic in release builds too (a plain assert!, not a
+        // debug_assert!): cfg(test) binaries honor the profile's
+        // debug-assertions flag, so this test pins the message either way.
+        Rng::new(1).below(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::choose")]
+    fn choose_empty_panics_explicitly() {
+        let empty: [u8; 0] = [];
+        Rng::new(1).choose(&empty);
+    }
+
+    /// Knuth's product method, transcribed independently of `poisson` so
+    /// the branch-boundary tests below detect any drift in either arm.
+    fn knuth_reference(rng: &mut Rng, lambda: f64) -> u64 {
+        let limit = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0f64;
+        loop {
+            p *= rng.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    #[test]
+    fn poisson_branch_boundary_is_pinned_at_lambda_30() {
+        // λ = 30 exactly must take the Knuth arm (the switch is a strict
+        // `> 30.0`); the next representable λ above 30 must take the
+        // rounded-normal arm. Pinning both sides means the approximation
+        // switch cannot silently move and shift every churn stream.
+        for seed in [1u64, 77, 901] {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            assert_eq!(
+                a.poisson(30.0),
+                knuth_reference(&mut b, 30.0),
+                "lambda=30.0 must use Knuth's method (seed {seed})"
+            );
+            // Same draw count consumed -> streams stay aligned afterwards.
+            assert_eq!(a.next_u64(), b.next_u64(), "stream alignment after Knuth arm");
+
+            let above = f64::from_bits(30.0f64.to_bits() + 1);
+            let mut c = Rng::new(seed);
+            let mut d = Rng::new(seed);
+            let expect = d.normal_ms(above, above.sqrt()).round().max(0.0) as u64;
+            assert_eq!(
+                c.poisson(above),
+                expect,
+                "lambda just above 30 must use the rounded-normal arm (seed {seed})"
+            );
+            assert_eq!(c.next_u64(), d.next_u64(), "stream alignment after normal arm");
+        }
     }
 
     #[test]

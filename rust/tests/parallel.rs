@@ -1,0 +1,152 @@
+//! Intra-instance parallelism tests: epoch maintenance over the
+//! SoA-sharded engines must be bitwise-identical for every
+//! `intra_threads` value — warm and cold, plain and fully loaded (hetero
+//! device classes, edge outages, aggregation deadlines) — and the trace
+//! counters folded from per-shard partials must equal the serial totals.
+
+use hfl::config::AssocStrategy;
+use hfl::net::DeviceClassSpec;
+use hfl::scenario::{run_instance, run_instance_traced, ResolveMode, ScenarioOutcome, ScenarioSpec};
+use hfl::trace::{Counter, StatsSink};
+use hfl::util::proptest::check;
+
+fn dynamic_spec() -> ScenarioSpec {
+    ScenarioSpec::new()
+        .edges(3)
+        .ues(40)
+        .eps(0.1)
+        .seed(17)
+        .mobility(1.0, 5.0)
+        .churn(1.0, 0.1)
+        .jitter(0.1)
+        .dropout(0.05)
+        .epoch_rounds(1)
+        .max_epochs(48)
+}
+
+/// Every optional subsystem on at once: heterogeneous device classes,
+/// Markov edge outages, and an aggregation deadline. The parallel
+/// maintenance pass must stay bitwise-exact under all of them.
+fn loaded_spec() -> ScenarioSpec {
+    dynamic_spec()
+        .devices(
+            DeviceClassSpec::new()
+                .class("fast", 3.0, 1.0, 1.0, 1.0)
+                .class("slow", 1.0, 0.3, 0.7, 1.5),
+        )
+        .outage(0.05, 0.5)
+        .deadline(2.5)
+}
+
+fn assert_bitwise(x: &ScenarioOutcome, y: &ScenarioOutcome, what: &str) {
+    assert_eq!(x.seed, y.seed, "{what}");
+    assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits(), "{what}");
+    assert_eq!(x.closed_form_s.to_bits(), y.closed_form_s.to_bits(), "{what}");
+    assert_eq!(x.rounds, y.rounds, "{what}");
+    assert_eq!(x.epochs, y.epochs, "{what}");
+    assert_eq!(x.converged, y.converged, "{what}");
+    assert_eq!((x.a, x.b), (y.a, y.b), "{what}");
+    assert_eq!(x.handovers, y.handovers, "{what}");
+    assert_eq!(x.arrivals, y.arrivals, "{what}");
+    assert_eq!(x.departures, y.departures, "{what}");
+    assert_eq!(x.dropped_uploads, y.dropped_uploads, "{what}");
+    assert_eq!(x.late_uploads, y.late_uploads, "{what}");
+    assert_eq!(x.scheduled_uploads, y.scheduled_uploads, "{what}");
+    assert_eq!(
+        x.participation_rate.to_bits(),
+        y.participation_rate.to_bits(),
+        "{what}"
+    );
+    assert_eq!(x.outages, y.outages, "{what}");
+    assert_eq!(x.recoveries, y.recoveries, "{what}");
+    assert_eq!(x.down_edge_epochs, y.down_edge_epochs, "{what}");
+    assert_eq!(x.events, y.events, "{what}");
+    assert_eq!(x.ab_per_epoch, y.ab_per_epoch, "{what}");
+    assert_eq!(x.resolves, y.resolves, "{what}");
+    assert_eq!(x.cold_resolves, y.cold_resolves, "{what}");
+    assert_eq!(x.reassociations, y.reassociations, "{what}");
+    // Trace counters are part of the trajectory (folded from per-shard
+    // partials in shard order); wall_s spans are measured and exempt.
+    assert_eq!(x.phase.counters, y.phase.counters, "{what}");
+}
+
+#[test]
+fn epoch_maintenance_is_bitwise_identical_across_intra_threads() {
+    for (name, spec) in [("plain", dynamic_spec()), ("loaded", loaded_spec())] {
+        for strategy in [AssocStrategy::Proposed, AssocStrategy::Greedy] {
+            for mode in [ResolveMode::Warm, ResolveMode::Cold] {
+                let base = spec.clone().assoc(strategy).assoc_resolve(mode);
+                let serial = run_instance(&base.clone().intra_threads(1), 23).unwrap();
+                assert!(serial.epochs > 1, "dynamic run must span epochs");
+                for threads in [2usize, 8] {
+                    let par = run_instance(&base.clone().intra_threads(threads), 23).unwrap();
+                    assert_bitwise(
+                        &serial,
+                        &par,
+                        &format!("{name} {strategy:?} {mode:?} threads={threads}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_thread_count_is_bitwise_identical_too() {
+    // `intra_threads = 0` resolves to the machine's core count — whatever
+    // that is here, the trajectory must match the serial one.
+    let spec = loaded_spec();
+    let serial = run_instance(&spec.clone().intra_threads(1), 29).unwrap();
+    let auto = run_instance(&spec.clone().intra_threads(0), 29).unwrap();
+    assert_bitwise(&serial, &auto, "auto thread count");
+}
+
+#[test]
+fn sharded_counters_fold_to_serial_totals() {
+    // The engines emit counters folded from per-shard partials; a sink
+    // must observe the exact serial stream for any thread count.
+    let spec = loaded_spec();
+    let mut s1 = StatsSink::default();
+    let one = run_instance_traced(&spec.clone().intra_threads(1), 31, &mut s1).unwrap();
+    let mut s8 = StatsSink::default();
+    let eight = run_instance_traced(&spec.clone().intra_threads(8), 31, &mut s8).unwrap();
+    assert_eq!(s1.stats.counters, s8.stats.counters);
+    assert_eq!(one.phase.counters, eight.phase.counters);
+    assert!(
+        one.phase.count(Counter::AssocDirty) >= 40,
+        "the first epoch marks the whole fleet dirty"
+    );
+    assert!(one.phase.count(Counter::DelayTouched) > 0);
+}
+
+#[test]
+fn prop_intra_threads_never_perturbs_trajectories() {
+    check("intra_threads bitwise invariance", 12, |rng| {
+        let edges = rng.int_range(2, 4) as usize;
+        // <= 13 UEs per edge keeps the default capacity feasible.
+        let ues = rng.int_range(8, edges as i64 * 13) as usize;
+        let mut spec = ScenarioSpec::new()
+            .edges(edges)
+            .ues(ues)
+            .eps(rng.range(0.05, 0.4))
+            .mobility(0.5, rng.range(1.0, 6.0))
+            .churn(rng.range(0.0, 2.0), rng.range(0.0, 0.2))
+            .epoch_rounds(1)
+            .max_epochs(24);
+        if rng.f64() < 0.5 {
+            spec = spec.assoc(AssocStrategy::Greedy);
+        }
+        if rng.f64() < 0.5 {
+            spec = spec.outage(0.1, 0.5);
+        }
+        if rng.f64() < 0.5 {
+            spec = spec.deadline(rng.range(0.5, 5.0));
+        }
+        let seed = rng.next_u64();
+        let serial = run_instance(&spec.clone().intra_threads(1), seed).unwrap();
+        for threads in [2usize, 8] {
+            let par = run_instance(&spec.clone().intra_threads(threads), seed).unwrap();
+            assert_bitwise(&serial, &par, &format!("seed {seed} threads {threads}"));
+        }
+    });
+}
