@@ -77,6 +77,17 @@ STUB_BANNER = (
 )
 
 
+def gh_warning(path: str, bench: str) -> str:
+    """GitHub Actions annotation for a stub baseline: surfaces the skipped
+    gate on the PR's checks page, not only in the job log. The line is
+    plain text outside Actions, so emitting it unconditionally is safe."""
+    return (
+        f"::warning file={path},title=stub bench baseline::"
+        f"{bench}: committed baseline has \"generated\": false; the perf gate is "
+        f"skipped until a measured BENCH file is committed"
+    )
+
+
 def delta_pct(base_val: float | None, fresh_val: float) -> str:
     """Signed old -> new percentage change, or n/a without a baseline."""
     if base_val is None or base_val == 0:
@@ -225,6 +236,9 @@ def self_test() -> int:
     regs, notes = compare(stub, good, 0.25)
     assert regs == []  # stub baseline skips...
     assert any("!!! WARNING" in n and "schema stub" in n for n in notes)  # ...loudly
+    ann = gh_warning("BENCH_resolve.json", "resolve_warm")
+    assert ann.startswith("::warning file=BENCH_resolve.json,title=")  # Actions syntax
+    assert "resolve_warm" in ann and "perf gate is skipped" in ann
     assert compare(good, good, 0.25)[0] == []  # equal passes
     regs, notes = compare(good, slow, 0.25)
     assert regs == []  # within tolerance passes
@@ -268,6 +282,10 @@ def main() -> int:
         regressions, notes = compare(baseline, fresh, args.tolerance)
         for note in notes:
             print(note)
+        if baseline.get("generated") is not True:
+            # fresh_path is the repo-relative committed file (the baseline
+            # copy in --baseline-dir is a CI-local snapshot of it).
+            print(gh_warning(fresh_path, baseline.get("bench") or fresh_path))
         all_regressions.extend(regressions)
 
     if all_regressions:

@@ -1,0 +1,6 @@
+// Marker hygiene must fire: an allow-marker without a reason silences
+// nothing and is itself a finding (the allowlist stays self-auditing).
+pub fn sort_desc(v: &mut Vec<f64>) {
+    // hfl-lint: allow(R2)
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}

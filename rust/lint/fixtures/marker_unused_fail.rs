@@ -1,0 +1,12 @@
+// Marker hygiene must fire twice: an allow-marker on a clean line is
+// dead weight (left behind after a refactor), and a marker naming an
+// unknown rule is a typo that would otherwise silence nothing forever.
+pub fn fine(v: &mut Vec<f64>) {
+    // hfl-lint: allow(R2, this sort was rewritten to total_cmp long ago)
+    v.sort_by(|a, b| b.total_cmp(a));
+}
+
+pub fn typoed(v: &mut Vec<f64>) {
+    // hfl-lint: allow(R9, no such rule)
+    v.sort_by(|a, b| a.total_cmp(b));
+}

@@ -1,0 +1,11 @@
+// R1 must fire: hash-ordered collections anywhere in a semantic path.
+use std::collections::HashMap;
+
+pub fn tally(xs: &[(u64, f64)]) -> Vec<(u64, f64)> {
+    let mut acc: HashMap<u64, f64> = HashMap::new();
+    for &(k, v) in xs {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    // Iteration order here is seed-random: the fold output depends on it.
+    acc.into_iter().collect()
+}

@@ -1,0 +1,12 @@
+// R1 must stay quiet: ordered collections, and "HashMap" only inside
+// strings and comments (the lexer strips both).
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[(u64, f64)]) -> Vec<(u64, f64)> {
+    let mut acc: BTreeMap<u64, f64> = BTreeMap::new();
+    for &(k, v) in xs {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    let _doc = "a HashMap would be wrong here";
+    acc.into_iter().collect()
+}

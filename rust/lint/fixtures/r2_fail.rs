@@ -1,0 +1,12 @@
+// R2 must fire: partial_cmp on floats is not a total order under NaN —
+// both the panicky unwrap form and the silently-wrong unwrap_or form.
+pub fn sort_desc(v: &mut Vec<(u64, f64)>) {
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+}
+
+pub fn max_latency(xs: &[f64]) -> f64 {
+    xs.iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+        .unwrap_or(0.0)
+}

@@ -1,0 +1,26 @@
+// R2 must stay quiet: total_cmp calls, and a PartialOrd impl that
+// delegates to a total Ord (the sanctioned `fn partial_cmp` shape).
+use std::cmp::Ordering;
+
+pub struct OrdF64(pub f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for OrdF64 {}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub fn sort_desc(v: &mut Vec<(u64, f64)>) {
+    v.sort_by(|a, b| b.1.total_cmp(&a.1));
+}

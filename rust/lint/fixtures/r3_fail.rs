@@ -1,0 +1,16 @@
+// R3 must fire: wall-clock reads in unmarked library code.
+use std::time::{Instant, SystemTime};
+
+pub fn jitter_seed() -> u64 {
+    // A classic determinism bug: seeding anything from the clock.
+    SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

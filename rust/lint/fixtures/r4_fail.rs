@@ -1,0 +1,12 @@
+// R4 must fire: ad-hoc RNG construction mid-engine. Every such site is a
+// stream the seed-stability tests cannot see until it drifts.
+pub fn noisy_scores(n: usize, magic: u64) -> Vec<f64> {
+    let mut rng = crate::util::Rng::new(magic ^ 0xABCD);
+    (0..n).map(|_| rng.f64()).collect()
+}
+
+pub fn entropy_seeded() -> u64 {
+    // Idiomatic `rand` constructions are equally banned.
+    let rng = thread_rng();
+    rng.gen()
+}

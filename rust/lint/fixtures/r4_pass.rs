@@ -1,0 +1,14 @@
+// R4 must stay quiet: streams derive from a caller-provided generator by
+// forking (the documented pattern), and a genuine stream-root site
+// carries a reasoned marker.
+use crate::util::Rng;
+
+pub fn noisy_scores(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut local = rng.fork(0xA550);
+    (0..n).map(|_| local.f64()).collect()
+}
+
+pub fn instance_streams(seed: u64) -> (Rng, Rng) {
+    let mut master = Rng::new(seed ^ 0x5EED); // hfl-lint: allow(R4, documented stream root: forks the instance seed)
+    (master.fork(1), master.fork(2))
+}

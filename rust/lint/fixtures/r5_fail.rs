@@ -1,0 +1,10 @@
+// R5 must fire: unmarked prints in library code, including the legacy
+// `stdout-ok` marker *without* a reason (reason-less markers fail too).
+pub fn report(x: f64) {
+    println!("value = {x}");
+    eprintln!("warning: {x}");
+}
+
+pub fn legacy_marked(x: f64) {
+    println!("value = {x}"); // stdout-ok
+}

@@ -1,0 +1,11 @@
+// R5 must stay quiet: a reasoned legacy `stdout-ok` marker (absorbed
+// from the old CI grep gate) and a reasoned hfl-lint marker both work.
+pub fn show(x: f64) {
+    println!("value = {x}"); // stdout-ok: this is the display surface
+}
+
+pub fn show_more(x: f64) {
+    // hfl-lint: allow(R5, bench harness table output)
+    println!("row = {x}");
+    let _not_a_macro = "println! inside a string";
+}

@@ -1,0 +1,23 @@
+// R6 must fire: folding channel results in arrival order — the classic
+// way a parallel reduction stops being bitwise-reproducible.
+use std::sync::mpsc;
+
+pub fn sum_of_workers(parts: Vec<Vec<f64>>) -> f64 {
+    let (tx, rx) = mpsc::channel::<f64>();
+    std::thread::scope(|scope| {
+        for part in parts {
+            let tx = tx.clone();
+            scope.spawn(move || tx.send(part.iter().sum::<f64>()).unwrap());
+        }
+    });
+    drop(tx);
+    let mut total = 0.0;
+    for partial in rx {
+        total += partial; // float addition is not associative
+    }
+    total
+}
+
+pub fn first_done(rx: &mpsc::Receiver<u64>) -> u64 {
+    rx.recv().unwrap()
+}

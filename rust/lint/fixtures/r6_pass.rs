@@ -1,0 +1,25 @@
+// R6 must stay quiet: results slotted by input index (the util/par
+// pattern) involve no channel at all, and a genuinely order-insensitive
+// drain carries a reasoned marker.
+use std::sync::mpsc;
+
+pub fn sum_in_index_order(parts: Vec<Vec<f64>>) -> f64 {
+    let partials: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .into_iter()
+            .map(|p| scope.spawn(move || p.iter().sum::<f64>()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.iter().sum()
+}
+
+pub fn drain_slotted(n: usize, rx: mpsc::Receiver<(usize, f64)>) -> Vec<f64> {
+    let mut slots = vec![0.0; n];
+    loop {
+        // hfl-lint: allow(R6, results are slotted by index; arrival order never reaches the fold)
+        let Ok((i, v)) = rx.recv() else { break };
+        slots[i] = v;
+    }
+    slots
+}

@@ -1,0 +1,311 @@
+//! A minimal Rust surface lexer for the determinism lint.
+//!
+//! `hfl-lint` does not need a real AST (and the container policy forbids
+//! pulling `syn`): every rule in the determinism contract is expressible
+//! over *code tokens with strings and comments removed*, plus the comment
+//! text itself (for allow-markers). This module produces exactly that
+//! split: for each source line, the code content with every string/char
+//! literal blanked to spaces (quotes kept, so token boundaries survive)
+//! and every comment blanked, next to the comment text captured
+//! separately.
+//!
+//! The lexer understands the constructs that would otherwise cause false
+//! positives: line comments (`//`, `///`, `//!`), nested block comments,
+//! string literals with escapes, raw strings (`r"…"`, `r#"…"#`, any hash
+//! depth), byte strings (`b"…"`, `br#"…"#`), char literals (`'x'`,
+//! `'\n'`) and lifetimes (`'a`, `'static` — which are *not* char
+//! literals). It does not need to understand anything else: macro bodies,
+//! generics and attributes all pass through as plain code text.
+
+/// One source line, split into scrubbed code and captured comment text.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with string/char contents and comments blanked to spaces.
+    /// Column positions match the original line.
+    pub code: String,
+    /// Concatenated comment text on this line (without `//` / `/*`).
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    /// Nested block comment at the given depth.
+    Block(u32),
+    /// Inside `"…"`; `true` while the next char is escaped.
+    Str(bool),
+    /// Inside a raw string closed by `"` + this many `#`s.
+    RawStr(u32),
+    /// Inside `'…'`; `true` while the next char is escaped.
+    Char(bool),
+}
+
+/// Split a source file into per-line scrubbed code + comment text.
+pub fn scrub(source: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw in source.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0usize;
+        // A line comment never crosses lines; block/string states do.
+        while i < chars.len() {
+            let c = chars[i];
+            match state {
+                State::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // Line comment: capture the rest, blank the code.
+                        let text: String = chars[i + 2..].iter().collect();
+                        line.comment.push_str(text.trim());
+                        line.comment.push(' ');
+                        for _ in i..chars.len() {
+                            line.code.push(' ');
+                        }
+                        i = chars.len();
+                        continue;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        line.code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        // Plain or raw/byte string: look back over the
+                        // contiguous prefix for `r`/`b`/`#`.
+                        let hashes = raw_hashes_before(&chars, i);
+                        state = match hashes {
+                            Some(h) => State::RawStr(h),
+                            None => State::Str(false),
+                        };
+                        line.code.push('"');
+                        i += 1;
+                        continue;
+                    }
+                    if c == '\'' {
+                        if is_char_literal(&chars, i) {
+                            state = State::Char(false);
+                            line.code.push('\'');
+                            i += 1;
+                            continue;
+                        }
+                        // A lifetime: keep it as code text.
+                        line.code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    line.code.push(c);
+                    i += 1;
+                }
+                State::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth == 1 {
+                            State::Code
+                        } else {
+                            State::Block(depth - 1)
+                        };
+                        line.code.push_str("  ");
+                        line.comment.push(' ');
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        line.code.push_str("  ");
+                        i += 2;
+                    } else {
+                        line.code.push(' ');
+                        line.comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str(escaped) => {
+                    if escaped {
+                        state = State::Str(false);
+                    } else if c == '\\' {
+                        state = State::Str(true);
+                    } else if c == '"' {
+                        state = State::Code;
+                        line.code.push('"');
+                        i += 1;
+                        continue;
+                    }
+                    line.code.push(' ');
+                    i += 1;
+                }
+                State::RawStr(h) => {
+                    if c == '"' && closes_raw(&chars, i, h) {
+                        state = State::Code;
+                        line.code.push('"');
+                        i += 1;
+                        // Blank the trailing hashes too.
+                        for _ in 0..h {
+                            line.code.push(' ');
+                        }
+                        i += h as usize;
+                        continue;
+                    }
+                    line.code.push(' ');
+                    i += 1;
+                }
+                State::Char(escaped) => {
+                    if escaped {
+                        state = State::Char(false);
+                    } else if c == '\\' {
+                        state = State::Char(true);
+                    } else if c == '\'' {
+                        state = State::Code;
+                        line.code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    line.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+        // An unterminated escape or string state simply continues on the
+        // next line; reset a dangling escape flag at the newline.
+        if let State::Str(true) = state {
+            state = State::Str(false);
+        }
+        if let State::Char(true) = state {
+            state = State::Char(false);
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// Is `chars[i] == '"'` the opening quote of a raw/byte string? Returns
+/// the hash count (0 for `r"…"`), or `None` for a plain string.
+fn raw_hashes_before(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i;
+    let mut hashes = 0u32;
+    while j > 0 && chars[j - 1] == '#' {
+        hashes += 1;
+        j -= 1;
+    }
+    let r_at = j.checked_sub(1)?;
+    if chars[r_at] != 'r' {
+        return None;
+    }
+    // `r` must start the prefix: either line start, a `b` (byte raw
+    // string), or a non-identifier char before it.
+    let before_ok = match r_at.checked_sub(1) {
+        None => true,
+        Some(k) => chars[k] == 'b' && !prev_is_ident(chars, k) || !is_ident(chars[k]),
+    };
+    if before_ok {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i.checked_sub(1).map(|k| is_ident(chars[k])).unwrap_or(false)
+}
+
+/// Does the raw string with `h` hashes close at this `"`?
+fn closes_raw(chars: &[char], i: usize, h: u32) -> bool {
+    (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Distinguish `'x'` / `'\n'` (char literal) from `'a` / `'static`
+/// (lifetime) at an apostrophe in code position.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(&c2) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                // 'x' — but '' is not a char literal and 'a'b is nonsense.
+                c2 != '\''
+            } else {
+                false
+            }
+        }
+        None => false,
+    }
+}
+
+pub fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scrub(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comment_split() {
+        let lines = scrub("let x = 1; // HashMap here\n");
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].code.contains("let x = 1;"));
+        assert!(lines[0].comment.contains("HashMap here"));
+    }
+
+    #[test]
+    fn string_contents_blanked_quotes_kept() {
+        let lines = code_of("let s = \"Instant::now() // not code\";\n");
+        assert!(!lines[0].contains("Instant::now"));
+        assert!(!lines[0].contains("//"));
+        assert_eq!(lines[0].matches('"').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let src = "let s = r#\"partial_cmp \"quoted\" inside\"#;\nlet t = 1;\n";
+        let lines = code_of(src);
+        assert!(!lines[0].contains("partial_cmp"));
+        assert!(lines[1].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn byte_and_plain_raw_strings() {
+        let lines = code_of("let b = br\"recv(\"; let r = r\"recv(\"; let done = 1;\n");
+        assert!(!lines[0].contains("recv("));
+        assert!(lines[0].contains("let done = 1;"));
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let src = "a /* one /* two */ still */ b\n/* open\nInstant::now\n*/ c\n";
+        let lines = scrub(src);
+        assert!(lines[0].code.contains('a') && lines[0].code.contains('b'));
+        assert!(!lines[2].code.contains("Instant"));
+        assert!(lines[2].comment.contains("Instant::now"));
+        assert!(lines[3].code.contains('c'));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lines = code_of("fn f<'a>(x: &'a str) { let c = '\"'; let d = 'x'; }\n");
+        // The quoted chars are blanked; the lifetime text stays.
+        assert!(lines[0].contains("<'a>"));
+        assert!(lines[0].contains("&'a str"));
+        assert_eq!(lines[0].matches('"').count(), 0);
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let lines = code_of("let s = \"a\\\"b\"; let after = 1;\n");
+        assert!(lines[0].contains("let after = 1;"));
+    }
+
+    #[test]
+    fn multiline_string_blanks_every_line() {
+        let lines = code_of("let s = \"line one\nHashMap::new()\nend\"; let z = 2;\n");
+        assert!(!lines[1].contains("HashMap"));
+        assert!(lines[2].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn columns_preserved() {
+        let lines = scrub("abc \"xy\" def // tail\n");
+        // Blanking is space-for-char: positions of `def` are unchanged.
+        assert_eq!(lines[0].code.find("def"), "abc \"xy\" def".find("def"));
+    }
+}

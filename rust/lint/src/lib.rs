@@ -1,0 +1,22 @@
+//! `hfl-lint` — the determinism contract of the `hfl` engines as a
+//! machine-checked static-analysis pass.
+//!
+//! The simulator's headline guarantees (warm == cold resolves,
+//! shard-count-independent batches, bitwise-reproducible epochs) were
+//! enforced only by property tests *after* a regression landed. This
+//! crate encodes the source-level discipline those guarantees rest on as
+//! named rules R1–R6 (see [`rules::Rule`]) and runs them over
+//! `rust/src/**` in CI (`cargo run -p hfl-lint -- --check`), next to the
+//! dynamic half of the same contract: Miri on the `util::rng` /
+//! `util::stats` unit tests and ThreadSanitizer on `tests/parallel.rs`.
+//!
+//! Zero dependencies by design: the repo builds fully offline, so the
+//! pass is a purpose-built lexer + token scan (`lexer`), not a `syn`
+//! AST — every rule here is expressible over comment/string-scrubbed
+//! code lines, and the fixtures in `fixtures/` pin each rule's firing
+//! and non-firing shapes.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_source, check_tree, Finding, Rule, Stats};

@@ -1,0 +1,81 @@
+//! CLI: `cargo run -p hfl-lint -- --check [ROOT]`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hfl_lint::{check_tree, Rule};
+
+const USAGE: &str = "\
+hfl-lint — determinism static-analysis pass for the hfl engines
+
+USAGE:
+    hfl-lint --check [ROOT]    scan ROOT (default: the hfl crate's src/)
+    hfl-lint --list-rules      print the rules of the contract
+    hfl-lint --help
+
+Silence a finding with an inline marker that names the rule AND a reason:
+    // hfl-lint: allow(R3, trace wall spans measure real time by design)
+placed on the offending line or as a standalone comment directly above it.
+Reason-less, unknown-rule, and unused markers are findings themselves.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut check = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in &args {
+        match arg.as_str() {
+            "--check" => check = true,
+            "--list-rules" => {
+                for rule in Rule::CHECKED {
+                    println!("{}: {}", rule.id(), rule.title());
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other if !other.starts_with('-') && root.is_none() => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("hfl-lint: unknown argument {other:?}\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if !check {
+        eprintln!("hfl-lint: nothing to do (pass --check)\n\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    // Default scan root: the hfl crate's src/, located relative to this
+    // crate's manifest so the tool works from any working directory.
+    let root = root
+        .unwrap_or_else(|| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../src")));
+    let (findings, stats) = match check_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hfl-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    println!(
+        "hfl-lint: {} finding(s) in {} file(s) / {} line(s), {} reasoned allow(s)",
+        findings.len(),
+        stats.files,
+        stats.lines,
+        stats.allows_used
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

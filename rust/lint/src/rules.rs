@@ -1,0 +1,577 @@
+//! The determinism contract as named, individually-testable rules.
+//!
+//! Every rule is a source-level check over scrubbed code lines (see
+//! [`crate::lexer`]): the engines' warm==cold / shard-count-independent /
+//! bitwise-reproducible guarantees are only as strong as the absence of
+//! these constructs from semantic paths, so the contract is enforced
+//! before review, not after a property test happens to catch the drift.
+//!
+//! | rule | forbids | required instead |
+//! |------|---------|------------------|
+//! | R1   | `HashMap`/`HashSet` (iteration order is seed-random) | `BTreeMap`/`BTreeSet`, flat `Vec` state |
+//! | R2   | `partial_cmp` on floats (not total under NaN) | `total_cmp`, the crate's `OrdF64` |
+//! | R3   | `Instant::now`/`SystemTime` (wall clock in semantics) | allowlisted wall-span sites only |
+//! | R4   | ad-hoc `Rng::new`/reseeding (stream drift) | forks of a documented seed stream |
+//! | R5   | `println!`-family in library code | `main.rs`, reasoned `stdout-ok` markers |
+//! | R6   | channel drains folding in arrival order | index-slotted results (`util/par`) |
+//!
+//! A violation is silenced by an inline marker that **must carry a
+//! reason**: `// hfl-lint: allow(R3, trace wall spans measure real time)`,
+//! placed on the offending line or as a standalone comment directly above
+//! it. Reason-less markers, markers naming unknown rules, and markers that
+//! silence nothing are themselves violations — the allowlist stays
+//! self-auditing. Code under `#[cfg(test)]` is exempt from every rule
+//! (tests legitimately seed throwaway RNGs and assert on comparator
+//! behavior); `rust/tests/` integration tests are outside the scanned
+//! tree for the same reason.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{is_ident, scrub, Line};
+
+/// The named rules of the determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    R6,
+    /// Meta-rule: a malformed, reason-less, or unused allow-marker.
+    Marker,
+}
+
+impl Rule {
+    pub const CHECKED: [Rule; 6] = [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5, Rule::R6];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::R6 => "R6",
+            Rule::Marker => "marker",
+        }
+    }
+
+    pub fn title(self) -> &'static str {
+        match self {
+            Rule::R1 => "no hash-ordered collections",
+            Rule::R2 => "no partial_cmp on floats",
+            Rule::R3 => "no wall clock outside allowlisted spans",
+            Rule::R4 => "no raw RNG construction outside fork points",
+            Rule::R5 => "no stdout/stderr prints in library code",
+            Rule::R6 => "no arrival-order channel folds",
+            Rule::Marker => "allow-marker hygiene",
+        }
+    }
+
+    fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            "R6" => Some(Rule::R6),
+            _ => None,
+        }
+    }
+
+    /// Paths (relative to the scan root) where the rule does not apply at
+    /// all — the handful of modules whose *purpose* is the forbidden
+    /// construct. Everything else must use an inline marker, so the
+    /// exemption is visible at the use site.
+    fn path_allowlisted(self, rel: &str) -> bool {
+        match self {
+            // metrics::Timer and the bench harness exist to measure wall
+            // time; their output feeds reports, never semantics.
+            Rule::R3 => rel.starts_with("metrics/") || rel == "util/bench.rs",
+            // The generator's own module: constructors + fork live here.
+            Rule::R4 => rel == "util/rng.rs",
+            // The CLI display surface.
+            Rule::R5 => rel == "main.rs",
+            // The deterministic fork/join executor is the one place
+            // allowed to coordinate workers (it slots results by index).
+            Rule::R6 => rel == "util/par.rs",
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} ({})",
+            self.file.display(),
+            self.line,
+            self.rule.id(),
+            self.message,
+            self.rule.title()
+        )
+    }
+}
+
+/// Scan statistics for the summary line.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stats {
+    pub files: usize,
+    pub lines: usize,
+    pub allows_used: usize,
+}
+
+#[derive(Debug)]
+struct Marker {
+    rule: Option<Rule>,
+    reason_ok: bool,
+    /// Line the marker silences (1-based).
+    attach: usize,
+    /// Line the marker text lives on (1-based).
+    at: usize,
+    used: bool,
+    legacy_stdout_ok: bool,
+}
+
+/// Check one file's source text. `rel` is the path relative to the scan
+/// root (`rust/src`), used for the per-rule path allowlists and reported
+/// in findings.
+pub fn check_source(rel: &str, source: &str, stats: &mut Stats) -> Vec<Finding> {
+    let lines = scrub(source);
+    let skip = test_regions(&lines);
+    let mut markers = collect_markers(&lines, &skip);
+    let receivers = channel_receivers(&lines);
+    let mut findings = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        if skip[idx] {
+            continue;
+        }
+        let lineno = idx + 1;
+        for rule in Rule::CHECKED {
+            if rule.path_allowlisted(rel) {
+                continue;
+            }
+            let Some(message) = rule_hit(rule, &line.code, &receivers) else {
+                continue;
+            };
+            if consume_marker(&mut markers, rule, lineno) {
+                stats.allows_used += 1;
+                continue;
+            }
+            findings.push(Finding {
+                file: PathBuf::from(rel),
+                line: lineno,
+                rule,
+                message,
+            });
+        }
+    }
+
+    // Marker hygiene: malformed or unused markers are violations too.
+    for m in &markers {
+        let message = match (m.rule, m.reason_ok, m.used) {
+            (None, _, _) if m.legacy_stdout_ok => {
+                "legacy `stdout-ok` marker requires a reason (`// stdout-ok: <why>`)".to_string()
+            }
+            (None, _, _) => "allow-marker names an unknown rule (expected R1..R6)".to_string(),
+            (Some(r), false, _) => format!(
+                "allow({}) marker requires a reason: `// hfl-lint: allow({}, <why>)`",
+                r.id(),
+                r.id()
+            ),
+            (Some(r), true, false) => format!(
+                "unused allow({}) marker: the line it covers does not trip {}",
+                r.id(),
+                r.id()
+            ),
+            (Some(_), true, true) => continue,
+        };
+        findings.push(Finding {
+            file: PathBuf::from(rel),
+            line: m.at,
+            rule: Rule::Marker,
+            message,
+        });
+    }
+
+    stats.files += 1;
+    stats.lines += lines.len();
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(&b.rule)));
+    findings
+}
+
+/// Walk `src_root` and check every `.rs` file. File order is sorted so
+/// output is deterministic (the lint practices what it preaches).
+pub fn check_tree(src_root: &Path) -> io::Result<(Vec<Finding>, Stats)> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut stats = Stats::default();
+    let mut findings = Vec::new();
+    for file in &files {
+        let source = fs::read_to_string(file)?;
+        let rel = file
+            .strip_prefix(src_root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(check_source(&rel, &source, &mut stats));
+    }
+    Ok((findings, stats))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Does `rule` fire on this scrubbed code line?
+fn rule_hit(rule: Rule, code: &str, receivers: &[String]) -> Option<String> {
+    match rule {
+        Rule::R1 => {
+            for tok in ["HashMap", "HashSet"] {
+                if has_token(code, tok) {
+                    return Some(format!(
+                        "`{tok}` has seed-randomized iteration order; use BTreeMap/BTreeSet \
+                         or flat Vec state"
+                    ));
+                }
+            }
+            None
+        }
+        Rule::R2 => {
+            // Implementing `PartialOrd` by delegating to a total `cmp` is
+            // the sanctioned pattern — only *calls* are suspect.
+            if has_token(code, "partial_cmp") && !code.contains("fn partial_cmp") {
+                Some(
+                    "`partial_cmp` is not a total order under NaN; use `total_cmp` \
+                     or the crate's OrdF64"
+                        .to_string(),
+                )
+            } else {
+                None
+            }
+        }
+        Rule::R3 => {
+            if code.contains("Instant::now") {
+                Some("`Instant::now` reads the wall clock".to_string())
+            } else if has_token(code, "SystemTime") {
+                Some("`SystemTime` reads the wall clock".to_string())
+            } else {
+                None
+            }
+        }
+        Rule::R4 => {
+            if code.contains("Rng::new") {
+                return Some(
+                    "raw `Rng::new` outside util/rng.rs: derive streams by forking a \
+                     documented seed stream"
+                        .to_string(),
+                );
+            }
+            for tok in ["thread_rng", "from_entropy", "seed_from_u64", "StdRng", "SmallRng"] {
+                if has_token(code, tok) {
+                    return Some(format!("`{tok}`: nondeterministic or ad-hoc RNG source"));
+                }
+            }
+            None
+        }
+        Rule::R5 => {
+            for tok in ["println!", "eprintln!", "print!", "eprint!", "dbg!"] {
+                if has_macro(code, tok) {
+                    return Some(format!("`{tok}` in library code"));
+                }
+            }
+            None
+        }
+        Rule::R6 => {
+            for tok in [".recv(", ".try_recv(", ".recv_timeout("] {
+                if code.contains(tok) {
+                    return Some(format!(
+                        "`{}` consumes results in arrival order",
+                        &tok[1..tok.len() - 1]
+                    ));
+                }
+            }
+            for rx in receivers {
+                let for_loop = code.contains("for ")
+                    && (has_phrase(code, &format!("in {rx}"))
+                        || has_phrase(code, &format!("in &{rx}")));
+                let iter_call = code.contains(&format!("{rx}.iter()"))
+                    || code.contains(&format!("{rx}.try_iter()"))
+                    || code.contains(&format!("{rx}.into_iter()"));
+                if for_loop || iter_call {
+                    return Some(format!(
+                        "iterating channel receiver `{rx}` folds in arrival order"
+                    ));
+                }
+            }
+            None
+        }
+        Rule::Marker => None,
+    }
+}
+
+/// Word-boundary token search (boundaries are non-identifier chars).
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap());
+        let after_ok = code[at + tok.len()..]
+            .chars()
+            .next()
+            .map(|c| !is_ident(c))
+            .unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + tok.len();
+    }
+    false
+}
+
+/// Like `has_token` for `name!` macros (the `!` is part of the token, so
+/// only the leading boundary needs checking).
+fn has_macro(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        if at == 0 || !is_ident(code[..at].chars().next_back().unwrap()) {
+            return true;
+        }
+        start = at + tok.len();
+    }
+    false
+}
+
+/// Phrase search where the char *after* the phrase must not extend an
+/// identifier (`in rx` must not match `in rxs`).
+fn has_phrase(code: &str, phrase: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(phrase) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap());
+        let after_ok = code[at + phrase.len()..]
+            .chars()
+            .next()
+            .map(|c| !is_ident(c))
+            .unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + phrase.len();
+    }
+    false
+}
+
+/// Identifiers bound as the receiver half of `let (tx, rx) = …channel…`.
+fn channel_receivers(lines: &[Line]) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in lines {
+        let code = &line.code;
+        let makes_channel = code.contains("mpsc::channel")
+            || code.contains("channel::<")
+            || code.contains("sync_channel");
+        if !makes_channel {
+            continue;
+        }
+        let Some(let_at) = code.find("let (") else {
+            continue;
+        };
+        let inner = &code[let_at + 5..];
+        let Some(close) = inner.find(')') else {
+            continue;
+        };
+        if let Some(last) = inner[..close].split(',').next_back() {
+            let name = last.trim().trim_start_matches("mut ").trim();
+            if !name.is_empty() && name.chars().all(is_ident) {
+                out.push(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)]`-gated item as skipped.
+fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut skip = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    // Some(depth at which the gated item's braces opened).
+    let mut in_skip: Option<i64> = None;
+    let mut pending = false;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if in_skip.is_none() && code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending && in_skip.is_none() {
+            skip[idx] = true; // the attribute + following item header
+            if code.contains('{') {
+                in_skip = Some(depth);
+                pending = false;
+            } else if code.trim_end().ends_with(';') {
+                // `#[cfg(test)] use …;` — a single-line gated item.
+                pending = false;
+            }
+        }
+        let entry_depth = depth;
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(open_depth) = in_skip {
+            skip[idx] = true;
+            // Closed back to (or past) the depth the item opened at —
+            // but only after the braces actually opened on this or an
+            // earlier line.
+            let opened = entry_depth > open_depth || code.contains('{');
+            if depth <= open_depth && opened {
+                in_skip = None;
+            }
+        }
+    }
+    skip
+}
+
+/// Parse `hfl-lint: allow(RULE, reason)` and legacy `stdout-ok[: reason]`
+/// markers from comment text. A marker on a comment-only line attaches to
+/// the next line that carries code.
+fn collect_markers(lines: &[Line], skip: &[bool]) -> Vec<Marker> {
+    let mut markers = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if skip[idx] {
+            continue;
+        }
+        let lineno = idx + 1;
+        let has_code = !line.code.trim().is_empty();
+        let attach = if has_code {
+            lineno
+        } else {
+            // Next line with code (markers above an item attach to it).
+            (idx + 1..lines.len())
+                .find(|&j| !lines[j].code.trim().is_empty())
+                .map(|j| j + 1)
+                .unwrap_or(lineno)
+        };
+        let comment = &line.comment;
+        let mut start = 0;
+        while let Some(pos) = comment[start..].find("hfl-lint:") {
+            let rest = &comment[start + pos + "hfl-lint:".len()..];
+            let rest = rest.trim_start();
+            if let Some(args) = rest.strip_prefix("allow(") {
+                let body = match args.rfind(')') {
+                    Some(end) => &args[..end],
+                    None => args,
+                };
+                let (id, reason) = match body.split_once(',') {
+                    Some((id, reason)) => (id.trim(), reason.trim()),
+                    None => (body.trim(), ""),
+                };
+                markers.push(Marker {
+                    rule: Rule::from_id(id),
+                    reason_ok: !reason.is_empty(),
+                    attach,
+                    at: lineno,
+                    used: false,
+                    legacy_stdout_ok: false,
+                });
+            } else {
+                // `hfl-lint:` with anything but allow(...) — treat as an
+                // unknown-rule marker so typos fail loudly.
+                markers.push(Marker {
+                    rule: None,
+                    reason_ok: false,
+                    attach,
+                    at: lineno,
+                    used: false,
+                    legacy_stdout_ok: false,
+                });
+            }
+            start += pos + "hfl-lint:".len();
+        }
+        // Legacy stdout hygiene marker (absorbed from the old CI grep
+        // gate): `stdout-ok: reason` == allow(R5, reason); a bare
+        // `stdout-ok` is a reason-less marker and fails. The marker is
+        // same-line by definition, so it only counts on lines whose code
+        // actually prints — prose that merely *mentions* stdout-ok (docs,
+        // rule descriptions) is not a marker.
+        let prints = ["println!", "eprintln!", "print!", "eprint!", "dbg!"]
+            .iter()
+            .any(|t| has_macro(&line.code, t));
+        if !prints {
+            continue;
+        }
+        if let Some(pos) = comment.find("stdout-ok") {
+            let rest = &comment[pos + "stdout-ok".len()..];
+            let reason_ok = rest
+                .strip_prefix(':')
+                .map(|r| !r.trim().is_empty())
+                .unwrap_or(false);
+            if reason_ok {
+                markers.push(Marker {
+                    rule: Some(Rule::R5),
+                    reason_ok: true,
+                    attach,
+                    at: lineno,
+                    used: false,
+                    legacy_stdout_ok: true,
+                });
+            } else {
+                markers.push(Marker {
+                    rule: None,
+                    reason_ok: false,
+                    attach,
+                    at: lineno,
+                    used: false,
+                    legacy_stdout_ok: true,
+                });
+            }
+        }
+    }
+    markers
+}
+
+/// Consume (mark used) a marker for `rule` attached to `lineno`.
+fn consume_marker(markers: &mut [Marker], rule: Rule, lineno: usize) -> bool {
+    for m in markers.iter_mut() {
+        if m.rule == Some(rule) && m.reason_ok && m.attach == lineno {
+            m.used = true;
+            return true;
+        }
+    }
+    false
+}

@@ -47,6 +47,7 @@ fn edge_actor(
     tx: mpsc::Sender<EdgeReport>,
 ) {
     let data_size: u64 = members.iter().map(|u| u.data_size()).sum();
+    // hfl-lint: allow(R6, single-producer FIFO command channel; the leader sends rounds in order)
     while let Ok(msg) = rx.recv() {
         let (round, global) = match msg {
             CloudMsg::Shutdown => return,
@@ -162,6 +163,7 @@ pub fn run_hfl(
         edge_states.push(states);
     }
 
+    // hfl-lint: allow(R3, wall_s on the training curve is observability, never simulated time)
     let t0 = std::time::Instant::now();
     let (report_tx, report_rx) = mpsc::channel::<EdgeReport>();
 
@@ -208,7 +210,7 @@ pub fn run_hfl(
             let mut received = 0;
             while received < num_edges {
                 let rep = report_rx
-                    .recv()
+                    .recv() // hfl-lint: allow(R6, reports are slotted by edge id below)
                     .map_err(|_| anyhow!("all edge actors exited"))?;
                 if rep.round != round {
                     bail!("edge {} reported round {} during {round}", rep.edge, rep.round);

@@ -62,6 +62,7 @@ fn smooth(field: &mut Vec<f64>, hw: usize, passes: usize) {
 
 /// Build the per-class prototypes for a seed.
 fn prototypes(cfg: &SyntheticConfig, seed: u64) -> Vec<Vec<f64>> {
+    // hfl-lint: allow(R4, prototype stream is rooted at the dataset proto seed)
     let mut rng = Rng::new(seed ^ 0x70726f746f); // "proto"
     (0..cfg.num_classes)
         .map(|_| {
@@ -99,6 +100,7 @@ pub fn generate(cfg: &SyntheticConfig, n: usize, seed: u64) -> Dataset {
 /// with equal `proto_seed` belong to the same classification task.
 pub fn generate_split(cfg: &SyntheticConfig, n: usize, proto_seed: u64, sample_seed: u64) -> Dataset {
     let protos = prototypes(cfg, proto_seed);
+    // hfl-lint: allow(R4, sample-noise stream is rooted at the dataset sample seed)
     let mut rng = Rng::new(sample_seed ^ 0x73616d706c65); // "sample"
     let hw = cfg.hw;
     let mut x = Vec::with_capacity(n * hw * hw);

@@ -161,6 +161,7 @@ impl<'e> HflEngine<'e> {
     pub fn train(&mut self, run: &TrainRun) -> Result<TrainingCurve> {
         let mut global = self.engine.init_params();
         let mut curve = TrainingCurve::new(run.a, run.b);
+        // hfl-lint: allow(R3, wall_s on the training curve is observability, never simulated time)
         let t0 = std::time::Instant::now();
 
         // Round-0 point: the initial model.

@@ -52,6 +52,7 @@ pub struct BatchCursor {
 
 impl BatchCursor {
     pub fn new(len: usize, seed: u64) -> BatchCursor {
+        // hfl-lint: allow(R4, cursor RNG is rooted at the caller-derived per-UE seed)
         let mut rng = Rng::new(seed);
         let mut order: Vec<usize> = (0..len).collect();
         rng.shuffle(&mut order);

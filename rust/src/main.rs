@@ -152,6 +152,7 @@ fn build_world(sc: &Scenario) -> Result<(Topology, Channel, assoc::Association)>
         AssocStrategy::Proposed => assoc::time_minimized(&channel, cap),
         AssocStrategy::Greedy => assoc::greedy(&channel, cap),
         AssocStrategy::Random => {
+            // hfl-lint: allow(R4, throwaway baseline RNG rooted at the scenario seed)
             assoc::random(sc.num_ues, sc.num_edges, cap, &mut Rng::new(sc.seed))
         }
         AssocStrategy::Exact => {
@@ -217,6 +218,7 @@ fn cmd_associate(args: &Args) -> Result<()> {
     );
     let proposed = assoc::time_minimized(&channel, cap).map_err(|e| anyhow!(e))?;
     let greedy = assoc::greedy(&channel, cap).map_err(|e| anyhow!(e))?;
+    // hfl-lint: allow(R4, throwaway baseline RNG rooted at the scenario seed)
     let random = assoc::random(sc.num_ues, sc.num_edges, cap, &mut Rng::new(sc.seed))
         .map_err(|e| anyhow!(e))?;
     let exact = assoc::solve_exact_matching(&table, cap).map_err(|e| anyhow!(e))?;
@@ -397,6 +399,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let total = sc.num_ues * sc.train.samples_per_ue;
     let corpus = synthetic::generate_split(&gen_cfg, total, sc.seed, sc.seed ^ 0xDA7A);
     let test = synthetic::generate_split(&gen_cfg, sc.train.test_samples, sc.seed, sc.seed ^ 0x7E57);
+    // hfl-lint: allow(R4, partitioning stream rooted at the scenario seed)
     let mut rng = Rng::new(sc.seed ^ 0x5EED);
     let shards = if sc.train.dirichlet_alpha > 0.0 {
         partition_dirichlet(

@@ -131,7 +131,7 @@ impl Series {
         if label_w > 0 {
             header.insert(0, " ".repeat(label_w));
         }
-        println!("{}", header.join("  ")); // stdout-ok
+        println!("{}", header.join("  ")); // stdout-ok: Series::print is a display API
         for (i, row) in self.rows.iter().enumerate() {
             let mut cells: Vec<String> = row
                 .iter()
@@ -141,7 +141,7 @@ impl Series {
             if label_w > 0 {
                 cells.insert(0, format!("{:<label_w$}", self.labels[i]));
             }
-            println!("{}", cells.join("  ")); // stdout-ok
+            println!("{}", cells.join("  ")); // stdout-ok: Series::print is a display API
         }
     }
 }

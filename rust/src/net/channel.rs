@@ -88,6 +88,7 @@ impl Channel {
         let wl = params.wavelength_m();
         let mut fade_rng = match params.fading {
             FadingModel::None => None,
+            // hfl-lint: allow(R4, fading stream is rooted at the spec-level fading seed)
             FadingModel::Rayleigh { seed } => Some(Rng::new(seed ^ 0xFAD1_2345)),
         };
         for ue in ues {

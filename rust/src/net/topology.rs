@@ -195,6 +195,7 @@ impl Topology {
         if devices.is_empty() {
             return topo;
         }
+        // hfl-lint: allow(R4, device-class stream is rooted at the topology seed)
         let mut class_rng = Rng::new(seed ^ 0xDE71_CEC1_A55E_5EED);
         for ue in topo.ues.iter_mut() {
             let c = &devices.classes[devices.pick(&mut class_rng)];
@@ -211,6 +212,7 @@ impl Topology {
     /// Sample a deployment: UEs uniform in the square; edge servers on a
     /// regular sub-grid ("located in the center" of their cells, §V-A).
     pub fn sample(params: &SystemParams, num_edges: usize, num_ues: usize, seed: u64) -> Topology {
+        // hfl-lint: allow(R4, deployment sampling is rooted at the scenario seed)
         let mut rng = Rng::new(seed);
         let a = params.area_m;
 

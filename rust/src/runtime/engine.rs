@@ -167,6 +167,7 @@ impl Engine {
         y: &[i32],
         lr: f32,
     ) -> Result<(Vec<f32>, f32)> {
+        // hfl-lint: allow(R3, exec_ns is an executor wall-time stat; never fed back into results)
         let t0 = std::time::Instant::now();
         let p = self.params_literal(params)?;
         let (xl, yl) = self.batch_literals(x, y, self.meta.train_batch)?;
@@ -185,6 +186,7 @@ impl Engine {
     /// Gradient only: `(params, batch) -> (grad, loss)` — used by the
     /// DANE-style local solver which forms its own update on the rust side.
     pub fn grad_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        // hfl-lint: allow(R3, exec_ns is an executor wall-time stat; never fed back into results)
         let t0 = std::time::Instant::now();
         let p = self.params_literal(params)?;
         let (xl, yl) = self.batch_literals(x, y, self.meta.train_batch)?;
@@ -201,6 +203,7 @@ impl Engine {
 
     /// One evaluation shard: `(params, batch) -> (loss_sum, correct)`.
     pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        // hfl-lint: allow(R3, exec_ns is an executor wall-time stat; never fed back into results)
         let t0 = std::time::Instant::now();
         let p = self.params_literal(params)?;
         let (xl, yl) = self.batch_literals(x, y, self.meta.eval_batch)?;

@@ -551,6 +551,7 @@ pub fn run_instance_traced(
     // noise, churn, mobility, edge outages. Forked from the instance seed
     // only; the outage fork comes *last* so outage-free specs leave the
     // historical streams untouched.
+    // hfl-lint: allow(R4, instance master stream root; all epoch randomness forks from here)
     let mut master = Rng::new(seed ^ 0x5CE2_A210_D15C_0FEE);
     let mut assoc_rng = master.fork(0xA550);
     let mut sim_rng = master.fork(0x51ED);
@@ -647,6 +648,7 @@ pub fn run_instance_traced(
         // assoc/incremental.rs), so both modes share one trajectory.
         let warm_assoc =
             spec.assoc_resolve == ResolveMode::Warm && base.assoc != AssocStrategy::Random;
+        // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
         let t_assoc = Instant::now();
         let edge_of = if warm_assoc {
             if let Some(ma) = massoc.as_mut() {
@@ -694,6 +696,7 @@ pub fn run_instance_traced(
         // kept bit-compatible so the two modes produce identical
         // trajectories. Instance maintenance and the solve itself are
         // separate trace phases (delay vs resolve).
+        // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
         let t_delay = Instant::now();
         let mut cold_inst: Option<DelayInstance> = None;
         let (a, b, cold) = if spec.resolve == ResolveMode::Cold {
@@ -703,6 +706,7 @@ pub fn run_instance_traced(
                 edge_of.iter().filter(|e| e.is_some()).count() as u64,
             );
             tee.span(ep, Phase::Delay, t_delay.elapsed().as_secs_f64());
+            // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
             let t_resolve = Instant::now();
             let (a, b) = solve_ab(spec, &built);
             let resolve_w = t_resolve.elapsed().as_secs_f64();
@@ -733,6 +737,7 @@ pub fn run_instance_traced(
             }
             tee.span(ep, Phase::Delay, t_delay.elapsed().as_secs_f64());
             let m = maint.as_mut().expect("maintained instance initialized above");
+            // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
             let t_resolve = Instant::now();
             let fr_before = m.frontier_rebuilds();
             let (a, b, cold) = solve_ab_epoch(spec, m, &opts, &mut prev_int, &mut prev_cont);
@@ -805,6 +810,7 @@ pub fn run_instance_traced(
             start_s: now,
             deadline_s: spec.failure.deadline_s,
         };
+        // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
         let t_sim = Instant::now();
         let res = simulate(inst, &cfg);
         let sim_w = t_sim.elapsed().as_secs_f64();
@@ -843,6 +849,7 @@ pub fn run_instance_traced(
         // as the delta the incremental association + delay paths consume.
         delta = WorldDelta::default();
         if spec.dynamics.mobility_enabled() {
+            // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
             let t_mob = Instant::now();
             delta.moved = mobility.step(dt, &active, &mut topo, &mut channel);
             let w = t_mob.elapsed().as_secs_f64();
@@ -850,6 +857,7 @@ pub fn run_instance_traced(
             tee.span(ep, Phase::Mobility, w);
         }
         if spec.dynamics.churn_enabled() {
+            // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
             let t_churn = Instant::now();
             // Arrivals are capped by the *serving* capacity: edges that
             // are down host nobody.
@@ -874,6 +882,7 @@ pub fn run_instance_traced(
             tee.span(ep, Phase::Churn, t_churn.elapsed().as_secs_f64());
         }
         if spec.outage.enabled() {
+            // hfl-lint: allow(R3, trace span wall_s; observability only, stripped for byte-compare)
             let t_outage = Instant::now();
             let active_count = active.iter().filter(|&&on| on).count();
             let (downed, restored) = outage_step(

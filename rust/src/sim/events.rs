@@ -275,6 +275,7 @@ pub fn simulate(inst: &DelayInstance, cfg: &SimConfig) -> SimResult {
             inst.zeta,
         )
     });
+    // hfl-lint: allow(R4, simulator noise stream is rooted at the caller-forked cfg.seed)
     let mut rng = Rng::new(cfg.seed);
     let m_edges = inst.per_edge.len();
 

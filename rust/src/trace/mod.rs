@@ -565,10 +565,15 @@ impl TraceProfile {
         self.counters[c.idx()].total
     }
 
-    /// The `k` slowest epochs by summed span wall time, descending.
+    /// The `k` slowest epochs by summed span wall time, descending;
+    /// ties (and NaN walls, which sort first) break toward the lower
+    /// (instance, epoch) pair so the ranking is a total order — the old
+    /// `partial_cmp(..).unwrap_or(Equal)` comparator was *not* one under
+    /// NaN (a NaN wall compared Equal to everything, so the "order" was
+    /// intransitive and the sort result unspecified).
     pub fn slowest_epochs(&self, k: usize) -> Vec<(u64, u64, f64)> {
         let mut v = self.epoch_walls.clone();
-        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        v.sort_by(|a, b| b.2.total_cmp(&a.2).then_with(|| (a.0, a.1).cmp(&(b.0, b.1))));
         v.truncate(k);
         v
     }
@@ -752,5 +757,35 @@ mod tests {
         assert!(TraceProfile::parse_jsonl("not json\n").is_err());
         assert!(TraceProfile::parse_jsonl("{\"ev\":\"mystery\"}\n").is_err());
         assert!(TraceProfile::parse_jsonl("").is_err());
+    }
+
+    /// Regression: `slowest_epochs` must be a total order even when a
+    /// wall is NaN. The old `partial_cmp(..).unwrap_or(Equal)` comparator
+    /// made NaN compare Equal to everything — an intransitive "order"
+    /// under which the sort result (and thus the report) was unspecified.
+    #[test]
+    fn slowest_epochs_totally_ordered_under_nan_and_ties() {
+        let mut s = JsonlSink::for_instance(0);
+        s.begin_epoch(0, 0.0);
+        s.span(0, Phase::Assoc, 1.0);
+        let mut p = TraceProfile::parse_jsonl(s.as_str()).unwrap();
+        p.epoch_walls = vec![
+            (0, 0, 1.0),
+            (0, 1, f64::NAN),
+            (1, 0, 3.0),
+            (1, 1, 1.0), // ties with (0, 0): lower (instance, epoch) first
+            (1, 2, f64::NAN),
+        ];
+        let ranked = p.slowest_epochs(5);
+        let keys: Vec<(u64, u64)> = ranked.iter().map(|e| (e.0, e.1)).collect();
+        // NaN sorts first (total_cmp: NaN > all finite), then descending
+        // by wall, ties broken toward the lower (instance, epoch).
+        assert_eq!(keys, vec![(0, 1), (1, 2), (1, 0), (0, 0), (1, 1)]);
+        assert!(ranked[0].2.is_nan() && ranked[1].2.is_nan());
+        // Truncation keeps the top of the same total order.
+        assert_eq!(
+            p.slowest_epochs(2).iter().map(|e| (e.0, e.1)).collect::<Vec<_>>(),
+            vec![(0, 1), (1, 2)]
+        );
     }
 }

@@ -16,6 +16,7 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
     // Replay a single seed if requested.
     if let Ok(seed_str) = std::env::var("HFL_PROP_SEED") {
         if let Ok(seed) = seed_str.parse::<u64>() {
+            // hfl-lint: allow(R4, replay of an explicitly requested failing seed)
             let mut rng = Rng::new(seed);
             prop(&mut rng);
             return;
@@ -24,6 +25,7 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
     let base = 0xD1B5_4A32_D192_ED03u64 ^ fnv1a(name.as_bytes());
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // hfl-lint: allow(R4, per-case seed is a pure function of the property name and index)
         let mut rng = Rng::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             prop(&mut rng)

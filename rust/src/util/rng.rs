@@ -227,6 +227,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical loop; too slow under the interpreter
     fn below_is_unbiased_enough() {
         let mut r = Rng::new(3);
         let mut counts = [0usize; 10];
@@ -239,6 +240,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical loop; too slow under the interpreter
     fn normal_moments() {
         let mut r = Rng::new(11);
         let n = 200_000;
@@ -271,6 +273,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical loop; too slow under the interpreter
     fn poisson_mean_close_and_degenerate_cases() {
         let mut r = Rng::new(17);
         for &lambda in &[0.3, 2.0, 8.0, 50.0] {
@@ -347,6 +350,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // statistical loop; too slow under the interpreter
     fn gamma_positive_and_mean_close() {
         let mut r = Rng::new(13);
         let n = 50_000;
