@@ -21,7 +21,7 @@
 
 use hfl::config::{Args, AssocStrategy};
 use hfl::metrics::Recorder;
-use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
+use hfl::scenario::{ResolveMode, ScenarioRun, ScenarioSpec};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
                 .seed(seed)
                 .assoc(strategy)
                 .instances(trials);
-            let batch = run_batch(&spec).map_err(anyhow::Error::msg)?;
+            let batch = ScenarioRun::new(&spec).run_batch().map_err(anyhow::Error::msg)?;
             let mean_tau = batch
                 .outcomes
                 .iter()
@@ -87,8 +87,10 @@ fn main() -> anyhow::Result<()> {
             .shards(1)
             .assoc_resolve(mode)
     };
-    let warm = run_batch(&dynamic(ResolveMode::Warm)).map_err(anyhow::Error::msg)?;
-    let cold = run_batch(&dynamic(ResolveMode::Cold)).map_err(anyhow::Error::msg)?;
+    let warm_spec = dynamic(ResolveMode::Warm);
+    let cold_spec = dynamic(ResolveMode::Cold);
+    let warm = ScenarioRun::new(&warm_spec).run_batch().map_err(anyhow::Error::msg)?;
+    let cold = ScenarioRun::new(&cold_spec).run_batch().map_err(anyhow::Error::msg)?;
     let mut agree = true;
     for (w, c) in warm.outcomes.iter().zip(&cold.outcomes) {
         if w.ab_per_epoch != c.ab_per_epoch

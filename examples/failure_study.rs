@@ -12,7 +12,7 @@
 //! closed form `⌈R⌉ · T(a*, b*)` from the same batch.
 
 use hfl::metrics::Recorder;
-use hfl::scenario::{run_batch, ScenarioSpec};
+use hfl::scenario::{ScenarioRun, ScenarioSpec};
 use hfl::util::stats;
 
 /// Batch-mean of one outcome metric.
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         .instances(trials);
 
     // Zero-noise reference batch: simulated == closed form per instance.
-    let reference = run_batch(&base).map_err(anyhow::Error::msg)?;
+    let reference = ScenarioRun::new(&base).run_batch().map_err(anyhow::Error::msg)?;
     let base_mean = mean(&reference, |o| o.closed_form_s);
     println!(
         "baseline: deterministic makespan {base_mean:.2}s (mean of {trials} topologies; \
@@ -45,7 +45,8 @@ fn main() -> anyhow::Result<()> {
     let mut rec = Recorder::new();
     let js = rec.series("jitter_sweep", &["sigma", "makespan_s", "inflation", "ue_wait_s"]);
     for &sigma in &[0.0, 0.05, 0.1, 0.2, 0.4, 0.8] {
-        let batch = run_batch(&base.clone().jitter(sigma)).map_err(anyhow::Error::msg)?;
+        let spec = base.clone().jitter(sigma);
+        let batch = ScenarioRun::new(&spec).run_batch().map_err(anyhow::Error::msg)?;
         let mk = mean(&batch, |o| o.makespan_s);
         let wait = mean(&batch, |o| o.ue_barrier_wait_s);
         js.push(vec![sigma, mk, mk / base_mean, wait]);
@@ -56,7 +57,8 @@ fn main() -> anyhow::Result<()> {
 
     let ds = rec.series("dropout_sweep", &["dropout", "makespan_s", "dropped", "speedup"]);
     for &p in &[0.0, 0.01, 0.05, 0.1, 0.2, 0.5] {
-        let batch = run_batch(&base.clone().dropout(p)).map_err(anyhow::Error::msg)?;
+        let spec = base.clone().dropout(p);
+        let batch = ScenarioRun::new(&spec).run_batch().map_err(anyhow::Error::msg)?;
         let mk = mean(&batch, |o| o.makespan_s);
         let dropped = mean(&batch, |o| o.dropped_uploads as f64);
         ds.push(vec![p, mk, dropped, base_mean / mk]);

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Bitwise-determinism diff for scenario BatchReport JSON files.
+
+The serve smoke job submits a job to a resident `hfl serve` over TCP and
+runs the *same* spec layers through `hfl scenario` batch mode, then feeds
+both report files here. The determinism contract says everything the
+simulation computed must match bitwise; only *measured* wall-clock fields
+(resolve_time_s, assoc_time_s, the per-phase "phases" objects, wall_s,
+phase_*_s) may differ between the two runs. This script strips exactly
+those keys — the same set `scenario::report::strip_measured` strips on
+the Rust side — and compares the rest with a precise path diff.
+
+Usage:
+  python3 python/diff_reports.py wire_report.json batch_report.json
+  python3 python/diff_reports.py --self-test
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MEASURED = ("resolve_time_s", "assoc_time_s", "phases", "wall_s")
+
+
+def is_measured(key: str) -> bool:
+    return key in MEASURED or (key.startswith("phase_") and key.endswith("_s"))
+
+
+def strip_measured(value):
+    """Recursively drop measured wall-clock keys from a JSON value."""
+    if isinstance(value, dict):
+        return {k: strip_measured(v) for k, v in value.items() if not is_measured(k)}
+    if isinstance(value, list):
+        return [strip_measured(v) for v in value]
+    return value
+
+
+def diff(a, b, path: str, out: list[str]) -> None:
+    """Collect human-readable mismatch paths between two stripped values."""
+    if type(a) is not type(b):
+        out.append(f"{path}: type {type(a).__name__} != {type(b).__name__}")
+        return
+    if isinstance(a, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                out.append(f"{path}.{k}: only in second file")
+            elif k not in b:
+                out.append(f"{path}.{k}: only in first file")
+            else:
+                diff(a[k], b[k], f"{path}.{k}", out)
+    elif isinstance(a, list):
+        if len(a) != len(b):
+            out.append(f"{path}: length {len(a)} != {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            diff(x, y, f"{path}[{i}]", out)
+    elif a != b:
+        out.append(f"{path}: {a!r} != {b!r}")
+
+
+def compare(path_a: str, path_b: str) -> list[str]:
+    with open(path_a) as f:
+        a = strip_measured(json.load(f))
+    with open(path_b) as f:
+        b = strip_measured(json.load(f))
+    out: list[str] = []
+    diff(a, b, "$", out)
+    return out
+
+
+def self_test() -> int:
+    wire = {
+        "makespan_s": {"mean": 1.25},
+        "wall_s": 9.0,
+        "phases": {"simulate": 0.4},
+        "per_instance": [{"seed": "42", "resolve_time_s": 0.3, "rounds": 7}],
+    }
+    batch = {
+        "makespan_s": {"mean": 1.25},
+        "wall_s": 2.0,
+        "phases": {"simulate": 0.1},
+        "per_instance": [{"seed": "42", "resolve_time_s": 0.9, "rounds": 7}],
+    }
+    mism: list[str] = []
+    diff(strip_measured(wire), strip_measured(batch), "$", mism)
+    assert not mism, f"measured-only differences must be ignored: {mism}"
+
+    batch["per_instance"][0]["rounds"] = 8
+    mism = []
+    diff(strip_measured(wire), strip_measured(batch), "$", mism)
+    assert mism == ["$.per_instance[0].rounds: 7 != 8"], mism
+    print("diff_reports self-test OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="*", help="two BatchReport JSON files")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if len(args.reports) != 2:
+        ap.error("expected exactly two report files (or --self-test)")
+    mismatches = compare(args.reports[0], args.reports[1])
+    if mismatches:
+        print(f"DETERMINISM VIOLATION: {args.reports[0]} != {args.reports[1]}")
+        for m in mismatches:
+            print(f"  {m}")
+        return 1
+    print(f"{args.reports[0]} == {args.reports[1]} (measured fields stripped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,7 @@ use std::time::Instant;
 use hfl::assoc::{cold_reference_map, MaintainedAssociation, WorldDelta};
 use hfl::config::{Args, AssocStrategy};
 use hfl::net::{Channel, Position, Topology};
-use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
+use hfl::scenario::{ResolveMode, ScenarioRun, ScenarioSpec};
 use hfl::util::bench::{section, short_mode};
 use hfl::util::json::Json;
 use hfl::util::Rng;
@@ -80,8 +80,10 @@ fn main() {
     let short = short_mode();
 
     section("engine: assoc_resolve warm vs cold, mobility + churn batch");
-    let cold_batch = run_batch(&mobility_spec(ResolveMode::Cold, short)).expect("cold batch");
-    let warm_batch = run_batch(&mobility_spec(ResolveMode::Warm, short)).expect("warm batch");
+    let cold_spec = mobility_spec(ResolveMode::Cold, short);
+    let warm_spec = mobility_spec(ResolveMode::Warm, short);
+    let cold_batch = ScenarioRun::new(&cold_spec).run_batch().expect("cold batch");
+    let warm_batch = ScenarioRun::new(&warm_spec).run_batch().expect("warm batch");
     for (c, w) in cold_batch.outcomes.iter().zip(&warm_batch.outcomes) {
         assert_eq!(c.ab_per_epoch, w.ab_per_epoch, "warm assoc diverged from cold");
         assert_eq!(c.makespan_s.to_bits(), w.makespan_s.to_bits());

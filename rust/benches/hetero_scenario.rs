@@ -27,7 +27,7 @@ use std::time::Instant;
 
 use hfl::config::Args;
 use hfl::net::DeviceClassSpec;
-use hfl::scenario::{run_batch, run_instance, BatchReport, ResolveMode, ScenarioSpec};
+use hfl::scenario::{BatchReport, ResolveMode, ScenarioRun, ScenarioSpec};
 use hfl::util::bench::{section, short_mode};
 use hfl::util::json::Json;
 
@@ -86,8 +86,8 @@ fn main() {
         .device_class("only", 1.0, 1.0, 1.0, 1.0)
         .outage(0.0, 0.0)
         .deadline(f64::INFINITY);
-    let a = run_instance(&plain, 9).expect("plain instance");
-    let b = run_instance(&identity, 9).expect("identity instance");
+    let a = ScenarioRun::new(&plain).seed(9).run().expect("plain instance");
+    let b = ScenarioRun::new(&identity).seed(9).run().expect("identity instance");
     assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "strict generalization broke");
     assert_eq!(a.ab_per_epoch, b.ab_per_epoch);
     assert_eq!(a.events, b.events);
@@ -101,20 +101,16 @@ fn main() {
         .instances(if short { 1 } else { 2 })
         .shards(1);
     small.base.system.edge_bandwidth_hz = 1.0e9; // cap 1000/edge, 8k total
-    let warm_batch = run_batch(
-        &small
-            .clone()
-            .resolve(ResolveMode::Warm)
-            .assoc_resolve(ResolveMode::Warm),
-    )
-    .expect("warm batch");
-    let cold_batch = run_batch(
-        &small
-            .clone()
-            .resolve(ResolveMode::Cold)
-            .assoc_resolve(ResolveMode::Cold),
-    )
-    .expect("cold batch");
+    let warm_small = small
+        .clone()
+        .resolve(ResolveMode::Warm)
+        .assoc_resolve(ResolveMode::Warm);
+    let cold_small = small
+        .clone()
+        .resolve(ResolveMode::Cold)
+        .assoc_resolve(ResolveMode::Cold);
+    let warm_batch = ScenarioRun::new(&warm_small).run_batch().expect("warm batch");
+    let cold_batch = ScenarioRun::new(&cold_small).run_batch().expect("cold batch");
     for (w, c) in warm_batch.outcomes.iter().zip(&cold_batch.outcomes) {
         assert_eq!(w.ab_per_epoch, c.ab_per_epoch, "hetero warm diverged from cold");
         assert_eq!(w.makespan_s.to_bits(), c.makespan_s.to_bits());
@@ -132,7 +128,7 @@ fn main() {
         .instances(if short { 1 } else { 2 });
     println!("spec: [{}]", spec.summary());
     let t0 = Instant::now();
-    let batch = run_batch(&spec).expect("hetero batch");
+    let batch = ScenarioRun::new(&spec).run_batch().expect("hetero batch");
     let wall = t0.elapsed().as_secs_f64();
     let report = BatchReport::from_outcomes(&batch.outcomes);
     let ips = batch.outcomes.len() as f64 / wall;
@@ -169,7 +165,8 @@ fn main() {
     }
 
     section("baseline: cold association on the same 50k world (full mode only)");
-    let cold50 = run_batch(&spec.clone().assoc_resolve(ResolveMode::Cold)).expect("cold 50k");
+    let cold50_spec = spec.clone().assoc_resolve(ResolveMode::Cold);
+    let cold50 = ScenarioRun::new(&cold50_spec).run_batch().expect("cold 50k");
     for (w, c) in batch.outcomes.iter().zip(&cold50.outcomes) {
         assert_eq!(w.ab_per_epoch, c.ab_per_epoch, "50k warm diverged from cold");
         assert_eq!(w.makespan_s.to_bits(), c.makespan_s.to_bits());

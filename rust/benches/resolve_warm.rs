@@ -26,7 +26,7 @@ use hfl::assoc::Association;
 use hfl::delay::{DelayInstance, MaintainedInstance};
 use hfl::net::{Channel, Position, SystemParams, Topology};
 use hfl::opt::{solve_integer, solve_integer_maintained, SolveOptions};
-use hfl::scenario::{run_batch, ResolveMode, ScenarioSpec};
+use hfl::scenario::{ResolveMode, ScenarioRun, ScenarioSpec};
 use hfl::util::bench::{black_box, section, short_mode};
 use hfl::util::json::Json;
 use hfl::util::Rng;
@@ -54,7 +54,7 @@ fn mobility_spec(resolve: ResolveMode) -> ScenarioSpec {
 
 /// Mean per-epoch re-solve time (µs) and total re-solves of a batch.
 fn engine_us(spec: &ScenarioSpec) -> (f64, u64) {
-    let batch = run_batch(spec).expect("bench batch must run");
+    let batch = ScenarioRun::new(spec).run_batch().expect("bench batch must run");
     let (mut time_s, mut n) = (0.0f64, 0u64);
     for o in &batch.outcomes {
         time_s += o.resolve_time_s;
@@ -69,8 +69,8 @@ fn main() {
     let warm_spec = mobility_spec(ResolveMode::Warm);
 
     // Correctness cross-check before any timing: identical trajectories.
-    let cold_batch = run_batch(&cold_spec).expect("cold batch");
-    let warm_batch = run_batch(&warm_spec).expect("warm batch");
+    let cold_batch = ScenarioRun::new(&cold_spec).run_batch().expect("cold batch");
+    let warm_batch = ScenarioRun::new(&warm_spec).run_batch().expect("warm batch");
     for (c, w) in cold_batch.outcomes.iter().zip(&warm_batch.outcomes) {
         assert_eq!(c.ab_per_epoch, w.ab_per_epoch, "warm diverged from cold");
         assert_eq!(c.makespan_s.to_bits(), w.makespan_s.to_bits());

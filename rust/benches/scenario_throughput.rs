@@ -8,7 +8,7 @@
 //! the current directory (run from the repo root to refresh the checked-in
 //! baseline).
 
-use hfl::scenario::{run_batch, run_batch_traced, shard_count, ScenarioSpec};
+use hfl::scenario::{shard_count, ScenarioRun, ScenarioSpec};
 use hfl::util::bench::{section, short_mode};
 use hfl::util::json::Json;
 
@@ -56,7 +56,7 @@ fn measure_by<F: FnMut() -> (f64, usize)>(
 /// Run a batch `repeats` times, keep the best wall-clock.
 fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
     measure_by(name, spec.batch.instances, repeats, || {
-        let batch = run_batch(spec).expect("bench batch must run");
+        let batch = ScenarioRun::new(spec).run_batch().expect("bench batch must run");
         (batch.wall_s, batch.shards)
     })
 }
@@ -67,7 +67,9 @@ fn measure(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
 /// `NullSink` and is covered by the rows the gate already watches.
 fn measure_traced(name: &str, spec: &ScenarioSpec, repeats: usize) -> Row {
     measure_by(name, spec.batch.instances, repeats, || {
-        let (batch, sinks) = run_batch_traced(spec, |_, _| {}).expect("bench batch must run");
+        let (batch, sinks) = ScenarioRun::new(spec)
+            .run_batch_traced()
+            .expect("bench batch must run");
         assert!(
             sinks.iter().all(|s| !s.is_empty()),
             "traced batch must produce per-instance event streams"
@@ -131,8 +133,10 @@ fn main() {
     // a single outcome bit.
     {
         let spec = dynamic_spec.clone().shards(1);
-        let plain = run_batch(&spec).expect("plain batch must run");
-        let (traced, _) = run_batch_traced(&spec, |_, _| {}).expect("traced batch must run");
+        let plain = ScenarioRun::new(&spec).run_batch().expect("plain batch must run");
+        let (traced, _) = ScenarioRun::new(&spec)
+            .run_batch_traced()
+            .expect("traced batch must run");
         assert_eq!(plain.outcomes.len(), traced.outcomes.len());
         for (p, t) in plain.outcomes.iter().zip(traced.outcomes.iter()) {
             assert_eq!(p.makespan_s.to_bits(), t.makespan_s.to_bits());

@@ -16,6 +16,11 @@ pub struct Args {
     positional: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
     consumed_pos: std::cell::RefCell<Vec<usize>>,
+    /// Options looked up as values (`str`/`get`) that were parsed as bare
+    /// flags because the next token was another `--option`. Surfaced by
+    /// [`Args::reject_unknown`] so `--trace --top 3` fails fast instead of
+    /// silently dropping the missing value.
+    missing_value: std::cell::RefCell<Vec<String>>,
 }
 
 #[derive(Debug)]
@@ -65,6 +70,50 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Build an option set from prefixed environment variables:
+    /// `HFL_SPEED_MAX=12` becomes `--speed-max 12`. Only key/value pairs
+    /// are representable (an env var always carries a value); ordering is
+    /// canonical (`BTreeMap`), not process-dependent.
+    pub fn from_prefixed_vars<I>(prefix: &str, vars: I) -> Args
+    where
+        I: IntoIterator<Item = (String, String)>,
+    {
+        let mut args = Args::default();
+        for (name, value) in vars {
+            if let Some(rest) = name.strip_prefix(prefix) {
+                if rest.is_empty() {
+                    continue;
+                }
+                let key = rest.to_ascii_lowercase().replace('_', "-");
+                args.kv.insert(key, value);
+            }
+        }
+        args
+    }
+
+    /// Reconstruct every not-yet-consumed option as an argv fragment
+    /// (`--key value` pairs first, in canonical key order, then bare
+    /// flags) and mark them consumed. Used by `hfl submit` to forward
+    /// spec-level overrides to the server verbatim.
+    pub fn to_argv_unconsumed(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut consumed = self.consumed.borrow_mut();
+        for (k, v) in &self.kv {
+            if !consumed.contains(k) {
+                out.push(format!("--{k}"));
+                out.push(v.clone());
+                consumed.push(k.clone());
+            }
+        }
+        for f in &self.flags {
+            if !consumed.contains(f) {
+                out.push(format!("--{f}"));
+                consumed.push(f.clone());
+            }
+        }
+        out
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         let found = self.flags.iter().any(|f| f == name);
         if found {
@@ -77,13 +126,25 @@ impl Args {
         let v = self.kv.get(name).cloned();
         if v.is_some() {
             self.consumed.borrow_mut().push(name.to_string());
+        } else if self.flags.iter().any(|f| f == name) {
+            // The caller expects a value but the parser saw `--name`
+            // followed by another option: record it for reject_unknown so
+            // the mistake fails fast with a precise message (returning
+            // None here would silently apply the default).
+            self.consumed.borrow_mut().push(name.to_string());
+            self.missing_value.borrow_mut().push(name.to_string());
         }
         v
     }
 
     pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
         match self.str(name) {
-            None => Ok(None),
+            None => {
+                if self.missing_value.borrow().iter().any(|f| f == name) {
+                    return Err(missing_value_err(name));
+                }
+                Ok(None)
+            }
             Some(s) => s
                 .parse::<T>()
                 .map(Some)
@@ -104,8 +165,12 @@ impl Args {
         v
     }
 
-    /// After all lookups, reject options nobody consumed (typo guard).
+    /// After all lookups, reject options nobody consumed (typo guard) and
+    /// surface any value-taking option that was used as a bare flag.
     pub fn reject_unknown(&self) -> Result<(), CliError> {
+        if let Some(name) = self.missing_value.borrow().first() {
+            return Err(missing_value_err(name));
+        }
         let consumed = self.consumed.borrow();
         let unknown: Vec<&String> = self
             .kv
@@ -130,6 +195,13 @@ impl Args {
             Err(CliError(format!("unexpected arguments: {stray:?}")))
         }
     }
+}
+
+fn missing_value_err(name: &str) -> CliError {
+    CliError(format!(
+        "option --{name} expects a value but was followed by another option \
+         (write `--{name} VALUE`)"
+    ))
 }
 
 #[cfg(test)]
@@ -195,5 +267,70 @@ mod tests {
         let a = parse("--eps 0.1");
         assert_eq!(a.subcommand, None);
         assert_eq!(a.get::<f64>("eps").unwrap(), Some(0.1));
+    }
+
+    #[test]
+    fn value_option_followed_by_option_fails_fast() {
+        // `--trace --top 3` used to silently treat --trace as a bare flag;
+        // a value lookup must now produce a precise error, both eagerly
+        // (typed get) and via the reject_unknown sweep (str).
+        let a = parse("scenario --trace --top 3");
+        assert!(a.str("trace").is_none());
+        let _ = a.get::<usize>("top");
+        let err = a.reject_unknown().unwrap_err();
+        assert!(
+            err.0.contains("--trace expects a value"),
+            "want missing-value message, got '{}'",
+            err.0
+        );
+
+        let b = parse("trace run.jsonl --top --verbose");
+        let err = b.get::<usize>("top").unwrap_err();
+        assert!(err.0.contains("--top expects a value"), "got '{}'", err.0);
+    }
+
+    #[test]
+    fn flag_lookup_is_still_a_flag() {
+        // flag() consumption must not trip the missing-value guard.
+        let a = parse("scenario --validate-only --instances 2");
+        assert!(a.flag("validate-only"));
+        let _ = a.get::<usize>("instances");
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_options() {
+        let a = parse("x --shift -3.5 --delta -2");
+        assert_eq!(a.get::<f64>("shift").unwrap(), Some(-3.5));
+        assert_eq!(a.get::<i64>("delta").unwrap(), Some(-2));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn prefixed_vars_map_to_kv() {
+        let vars = [
+            ("HFL_SPEED_MAX".to_string(), "12.5".to_string()),
+            ("HFL_MAX_EPOCHS".to_string(), "64".to_string()),
+            ("HOME".to_string(), "/root".to_string()),
+            ("HFL_".to_string(), "ignored".to_string()),
+        ];
+        let a = Args::from_prefixed_vars("HFL_", vars);
+        assert_eq!(a.get::<f64>("speed-max").unwrap(), Some(12.5));
+        assert_eq!(a.get::<u64>("max-epochs").unwrap(), Some(64));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unconsumed_args_forward_and_then_count_as_consumed() {
+        let a = parse("submit --addr 1.2.3.4:9 --ues 50 --max-epochs 4 --verbose");
+        assert_eq!(a.str("addr").as_deref(), Some("1.2.3.4:9"));
+        let fwd = a.to_argv_unconsumed();
+        assert_eq!(
+            fwd,
+            vec!["--max-epochs", "4", "--ues", "50", "--verbose"],
+            "kv pairs in canonical key order, then flags"
+        );
+        a.reject_unknown().unwrap();
+        assert!(a.to_argv_unconsumed().is_empty());
     }
 }

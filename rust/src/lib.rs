@@ -36,6 +36,7 @@ pub mod net;
 pub mod opt;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -6,6 +6,9 @@
 //!   simulate   event-driven protocol latency simulation
 //!   scenario   declarative scenario batches (mobility/churn/failures)
 //!              over the parallel fleet runner, with a JSON report
+//!   serve      resident scenario service: accept jobs over TCP (NDJSON),
+//!              stream per-epoch results, graceful drain, checkpoint/resume
+//!   submit     client for `serve`: ship a spec + overrides, stream results
 //!   trace      aggregate a `--trace` JSONL event stream into a per-phase
 //!              profile (time share, engine counters, slowest epochs)
 //!   train      run hierarchical FL training via the PJRT runtime
@@ -13,6 +16,7 @@
 //!
 //! Common options: --edges N --ues N --eps E --seed S --assoc NAME
 //!                 --config FILE (TOML; CLI overrides file)
+//! Layering: CLI > `HFL_*` environment > TOML > defaults.
 //! Run `hfl help` for the full list.
 
 use anyhow::{anyhow, bail, Result};
@@ -27,8 +31,11 @@ use hfl::metrics::Recorder;
 use hfl::net::{Channel, Topology};
 use hfl::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
 use hfl::runtime::{find_artifacts, Engine};
-use hfl::scenario::{self, BatchReport, ScenarioSpec};
+use hfl::scenario::{record_batch, BatchReport, ScenarioRun, ScenarioSpec};
+use hfl::serve::{protocol, resolve_request, JobRequest, ServeConfig, Server};
 use hfl::sim::{simulate, SimConfig};
+use hfl::util::json::Json;
+use hfl::util::toml::TomlDoc;
 use hfl::util::Rng;
 
 fn main() {
@@ -46,6 +53,8 @@ fn real_main() -> Result<()> {
         "associate" => cmd_associate(&args),
         "simulate" => cmd_simulate(&args),
         "scenario" => cmd_scenario(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
@@ -70,6 +79,11 @@ SUBCOMMANDS
   simulate   event-driven latency simulation (supports --jitter, --dropout)
   scenario   run a declarative scenario batch (TOML spec; mobility, churn,
              failures) on the parallel fleet runner; emits a JSON report
+  serve      resident scenario service: accept jobs as NDJSON over TCP,
+             stream per-epoch results, drain gracefully on shutdown,
+             checkpoint/resume accepted jobs (--checkpoint)
+  submit     submit a job to a running `hfl serve` (reads the spec file
+             locally, ships its text + env/CLI overrides over the wire)
   trace      profile a scenario trace: `hfl trace run.jsonl` prints phase
              time shares, engine counters, and the slowest epochs
   train      hierarchical FL training (LeNet via PJRT artifacts)
@@ -77,6 +91,8 @@ SUBCOMMANDS
 
 COMMON OPTIONS
   --config FILE        TOML scenario file (CLI overrides it)
+                       precedence everywhere: CLI > HFL_* env > TOML >
+                       defaults (HFL_MAX_EPOCHS=8 == --max-epochs 8)
   --edges N            number of edge servers        (default 5)
   --ues N              number of UEs                 (default 100)
   --eps E              global accuracy ε             (default 0.25)
@@ -136,6 +152,30 @@ SCENARIO OPTIONS
   --report FILE        JSON report path (default results/scenario_report.json)
   --trace FILE         write a JSONL trace event stream (per-epoch phase
                        spans + engine counters; content is seed-deterministic)
+  --validate-only      resolve + validate all layers, print the effective
+                       spec, and exit without running anything
+
+SERVE OPTIONS
+  --addr HOST:PORT     listen address              (default 127.0.0.1:4710)
+  --workers N          concurrent jobs             (default 2)
+  --queue-depth N      queued jobs before `busy`   (default 8)
+  --checkpoint FILE    append-only job journal; pending jobs resume on
+                       restart (reports land next to the journal)
+  --validate-only      print the effective server config and exit
+  (TOML: a [server] table with addr/workers/queue_depth/checkpoint;
+   env: HFL_ADDR, HFL_WORKERS, HFL_QUEUE_DEPTH, HFL_CHECKPOINT)
+
+SUBMIT OPTIONS
+  --addr HOST:PORT     server address              (default 127.0.0.1:4710)
+  --spec FILE          scenario TOML, read locally and shipped as text
+  --report FILE        write the returned report JSON here
+  --no-stream          skip per-epoch streaming (outcomes + report only)
+  --validate-only      resolve the submission locally (same code path the
+                       server uses) and exit without connecting
+  --ping | --shutdown  health-check / drain-and-stop a running server
+  Every other --option is forwarded as the job's CLI layer, and the
+  client's HFL_* environment rides along as the job's env layer; a wire
+  job is bitwise-identical to `hfl scenario` on the same layers.
 
 TRACE OPTIONS
   hfl trace FILE       the JSONL file written by `hfl scenario --trace`
@@ -277,14 +317,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    let spec_path = args.str("spec");
-    let spec = ScenarioSpec::load(spec_path.as_deref(), args).map_err(|e| anyhow!("{e}"))?;
-    let report_path_arg = args.str("report");
+    // Layering: CLI > HFL_* env > TOML > defaults. The paths themselves
+    // layer too (--spec / HFL_SPEC, --report / HFL_REPORT); env keys must
+    // be claimed before load_layered strict-checks the env layer.
+    let env = Args::from_prefixed_vars(ScenarioSpec::ENV_PREFIX, std::env::vars());
+    let spec_path = args.str("spec").or_else(|| env.str("spec"));
+    let report_path_arg = args.str("report").or_else(|| env.str("report"));
+    let validate_only = args.flag("validate-only");
+    let spec = ScenarioSpec::load_layered(spec_path.as_deref().map(|p| (p, None)), &env, args)
+        .map_err(|e| anyhow!("{e}"))?;
     // Long-running command: surface typo'd flags *before* the batch runs,
     // not after minutes of compute land wrong results on disk.
     args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
     let instances = spec.batch.instances;
     println!("scenario batch: {instances} instances of [{}]", spec.summary());
+    if validate_only {
+        print!("{}", spec.describe());
+        println!("spec OK (validate-only; nothing ran)");
+        return Ok(());
+    }
 
     let progress_every = (instances / 10).max(1);
     let mut completed = 0usize;
@@ -298,17 +349,17 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // index, so the concatenation is shard-count independent).
     let (batch, trace_out) = match spec.trace.file.clone() {
         Some(path) => {
-            let (batch, sinks) = scenario::run_batch_traced(&spec, |_, _| {
-                progress(&mut completed, instances, progress_every)
-            })
-            .map_err(|e| anyhow!("{e}"))?;
+            let (batch, sinks) = ScenarioRun::new(&spec)
+                .on_outcome(|_, _| progress(&mut completed, instances, progress_every))
+                .run_batch_traced()
+                .map_err(|e| anyhow!("{e}"))?;
             (batch, Some((path, sinks)))
         }
         None => {
-            let batch = scenario::run_batch_with(&spec, |_, _| {
-                progress(&mut completed, instances, progress_every)
-            })
-            .map_err(|e| anyhow!("{e}"))?;
+            let batch = ScenarioRun::new(&spec)
+                .on_outcome(|_, _| progress(&mut completed, instances, progress_every))
+                .run_batch()
+                .map_err(|e| anyhow!("{e}"))?;
             (batch, None)
         }
     };
@@ -326,7 +377,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // Per-instance rows (CSV + combined JSON) through the Recorder...
     let results_dir = std::path::PathBuf::from(&spec.base.results_dir);
     let mut rec = Recorder::new();
-    scenario::record_batch(&batch.outcomes, &mut rec);
+    record_batch(&batch.outcomes, &mut rec);
     rec.write_dir(&results_dir)?;
     // ...and the aggregate JSON report.
     let report_path = report_path_arg
@@ -359,6 +410,149 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let env = Args::from_prefixed_vars(ScenarioSpec::ENV_PREFIX, std::env::vars());
+    let cfg_path = args.str("config").or_else(|| env.str("config"));
+    let doc = match cfg_path.as_deref() {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("read {p}: {e}"))?;
+            Some(TomlDoc::parse(&text).map_err(|e| anyhow!("{e}"))?)
+        }
+        None => None,
+    };
+    let validate_only = args.flag("validate-only");
+    let cfg = ServeConfig::load_layered(doc.as_ref(), &env, args).map_err(|e| anyhow!("{e}"))?;
+    args.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    if validate_only {
+        print!("{}", cfg.describe());
+        println!("server config OK (validate-only; nothing bound)");
+        return Ok(());
+    }
+    let server = Server::bind(cfg).map_err(|e| anyhow!("{e}"))?;
+    if server.resumed_jobs() > 0 {
+        println!("resuming {} checkpointed job(s)", server.resumed_jobs());
+    }
+    println!("hfl serve listening on {}", server.addr());
+    server.run().map_err(|e| anyhow!("{e}"))?;
+    println!("server drained cleanly");
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    use std::io::{BufRead, Write};
+
+    let env = Args::from_prefixed_vars(ScenarioSpec::ENV_PREFIX, std::env::vars());
+    let addr = args
+        .str("addr")
+        .or_else(|| env.str("addr"))
+        .unwrap_or_else(|| "127.0.0.1:4710".to_string());
+    let spec_path = args.str("spec").or_else(|| env.str("spec"));
+    let report_path = args.str("report").or_else(|| env.str("report"));
+    let stream = !args.flag("no-stream");
+    let ping = args.flag("ping");
+    let shutdown = args.flag("shutdown");
+    let validate_only = args.flag("validate-only");
+    let spec_toml = match spec_path.as_deref() {
+        Some(p) => Some(std::fs::read_to_string(p).map_err(|e| anyhow!("read {p}: {e}"))?),
+        None => None,
+    };
+    // Everything not claimed above is forwarded: leftover CLI options
+    // become the job's CLI layer, leftover HFL_* vars its env layer —
+    // the server re-applies them through the exact batch-mode path.
+    let req = JobRequest {
+        spec_toml,
+        env: env.to_argv_unconsumed(),
+        args: args.to_argv_unconsumed(),
+        stream,
+    };
+    if validate_only {
+        // The same function the server runs on the real submission.
+        let spec = resolve_request(&req).map_err(|e| anyhow!("{e}"))?;
+        println!("submission resolves to [{}]", spec.summary());
+        print!("{}", spec.describe());
+        println!("spec OK (validate-only; nothing submitted)");
+        return Ok(());
+    }
+
+    let sock = std::net::TcpStream::connect(&addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let mut writer = sock.try_clone().map_err(|e| anyhow!("{e}"))?;
+    let line = if ping {
+        protocol::ping_line()
+    } else if shutdown {
+        protocol::shutdown_cmd_line()
+    } else {
+        protocol::submit_line(&req)
+    };
+    writeln!(writer, "{line}")?;
+    writer.flush()?;
+
+    let reader = std::io::BufReader::new(sock);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| anyhow!("bad server frame: {e}"))?;
+        let num = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        let txt = |key: &str| v.get(key).and_then(Json::as_str).unwrap_or("?").to_string();
+        match v.get("ev").and_then(Json::as_str).unwrap_or("?") {
+            "pong" => {
+                println!("pong from {addr}");
+                return Ok(());
+            }
+            "shutdown" => {
+                println!("server at {addr} is draining");
+                return Ok(());
+            }
+            "accepted" => println!("job {} accepted by {addr}", num("job")),
+            "busy" => bail!("server busy (queue depth {}); retry later", num("queue_depth")),
+            "invalid" => bail!("submission rejected: {}", txt("error")),
+            "rejected" => bail!("job {} dropped: {}", num("job"), txt("reason")),
+            "error" => bail!("job {} failed: {}", num("job"), txt("error")),
+            "epoch" => println!(
+                "  instance {} epoch {}: a={} b={} clock={:.3}s participation={:.3}",
+                num("instance"),
+                num("epoch"),
+                num("a"),
+                num("b"),
+                num("clock_s"),
+                num("participation")
+            ),
+            "outcome" => {
+                let makespan = v
+                    .get("outcome")
+                    .and_then(|o| o.get("makespan_s"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN);
+                println!("  instance {} done: makespan {makespan:.4}s", num("instance"));
+            }
+            "done" => {
+                println!(
+                    "job {} done in {:.2}s on {} shards",
+                    num("job"),
+                    num("wall_s"),
+                    num("shards")
+                );
+                if let (Some(path), Some(report)) = (&report_path, v.get("report")) {
+                    // Byte-identical to what `hfl scenario --report` writes
+                    // for the same layers: Json emission is canonical.
+                    let path = std::path::PathBuf::from(path);
+                    if let Some(parent) = path.parent() {
+                        if !parent.as_os_str().is_empty() {
+                            std::fs::create_dir_all(parent)?;
+                        }
+                    }
+                    std::fs::write(&path, report.to_string())?;
+                    println!("wrote report to {}", path.display());
+                }
+                return Ok(());
+            }
+            other => println!("  (unrecognized event '{other}')"),
+        }
+    }
+    bail!("connection to {addr} closed before the job finished")
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {

@@ -36,11 +36,11 @@ use crate::opt::{
     Solution, SolveOptions, SubgradientSolver,
 };
 use crate::sim::{simulate, SimConfig};
-use crate::trace::{Counter, NullSink, Phase, PhaseStats, Tee, TraceSink};
+use crate::trace::{Counter, Phase, PhaseStats, Tee, TraceSink};
 use crate::util::Rng;
 
 /// Everything one scenario instance produced.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ScenarioOutcome {
     /// Batch index (filled by the runner; 0 for direct runs).
     pub instance: usize,
@@ -518,15 +518,18 @@ fn solve_ab_epoch(
 /// Run one scenario instance end to end. Pure function of
 /// `(spec, seed)` — the batch runner relies on that for shard-count
 /// independence.
+///
+/// Thin shim over [`crate::scenario::ScenarioRun`] (the unified entry).
 pub fn run_instance(spec: &ScenarioSpec, seed: u64) -> Result<ScenarioOutcome, String> {
-    run_instance_traced(spec, seed, &mut NullSink)
+    crate::scenario::ScenarioRun::new(spec).seed(seed).run()
 }
 
 /// [`run_instance`] with a trace sink observing per-epoch phase spans,
 /// engine counters, and simulated round clocks. The trajectory is
 /// bitwise-identical to the untraced run for every sink — the sink only
 /// observes (tested in `tests/scenario.rs`); a disabled sink
-/// (`enabled() == false`, e.g. [`NullSink`]) receives zero calls.
+/// (`enabled() == false`, e.g. [`crate::trace::NullSink`]) receives zero
+/// calls.
 pub fn run_instance_traced(
     spec: &ScenarioSpec,
     seed: u64,
@@ -834,6 +837,16 @@ pub fn run_instance_traced(
         out.b = b;
         out.round_time_s = inst.round_time(a as f64, b as f64);
         out.tau_max_s = inst.tau_max(a as f64);
+        // Deterministic per-epoch summary for streaming consumers (the
+        // serve path): this epoch's (a, b), the running makespan, and its
+        // own upload participation share.
+        let epoch_participation = if res.scheduled_uploads == 0 {
+            1.0
+        } else {
+            (res.scheduled_uploads - res.dropped_uploads - res.late_uploads) as f64
+                / res.scheduled_uploads as f64
+        };
+        tee.epoch_end(ep, a, b, now, epoch_participation);
 
         // A world without dynamics (outages included — they re-shape the
         // delay instance and hence the accuracy target) cannot change the

@@ -23,17 +23,21 @@
 //! * [`report`] — percentile/CI aggregates, `metrics::Recorder` series
 //!   and JSON emission.
 //!
-//! Entry points: `hfl scenario --spec <toml>` on the CLI,
-//! [`run_batch`]/[`run_instance`] from code (see
-//! `examples/failure_study.rs` and `examples/association_study.rs`).
+//! Entry points: `hfl scenario --spec <toml>` on the CLI, the
+//! [`ScenarioRun`] builder from code (see `examples/failure_study.rs`
+//! and `examples/association_study.rs`); the historical
+//! [`run_batch`]/[`run_instance`] free functions remain as delegating
+//! shims.
 
 pub mod dynamics;
 pub mod report;
+pub mod run;
 pub mod runner;
 pub mod spec;
 
 pub use dynamics::{run_instance, run_instance_traced, ScenarioOutcome};
-pub use report::{record_batch, BatchReport, SummaryStat};
+pub use report::{record_batch, strip_measured, BatchReport, SummaryStat};
+pub use run::ScenarioRun;
 pub use runner::{
     instance_seeds, run_batch, run_batch_traced, run_batch_with, shard_count, BatchResult,
 };

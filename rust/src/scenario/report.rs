@@ -317,6 +317,38 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
     }
 }
 
+/// Remove every *measured* (wall-clock-derived) field from a JSON
+/// document, recursively, and re-serialize canonically: the top-level
+/// `resolve_time_s` / `assoc_time_s` aggregates, any `phases` wall-time
+/// object, bare `wall_s` fields, and `phase_<name>_s` columns. What
+/// remains is the deterministic content — two runs of the same spec and
+/// seed must agree *byte for byte* after this strip, which is exactly
+/// the wire-vs-batch contract `hfl serve` is tested against (the trace
+/// counterpart is [`crate::trace::strip_walls`]).
+pub fn strip_measured(json_text: &str) -> Result<String, String> {
+    fn measured(key: &str) -> bool {
+        key == "resolve_time_s"
+            || key == "assoc_time_s"
+            || key == "phases"
+            || key == "wall_s"
+            || (key.starts_with("phase_") && key.ends_with("_s"))
+    }
+    fn strip(v: Json) -> Json {
+        match v {
+            Json::Obj(m) => Json::Obj(
+                m.into_iter()
+                    .filter(|(k, _)| !measured(k))
+                    .map(|(k, v)| (k, strip(v)))
+                    .collect(),
+            ),
+            Json::Arr(items) => Json::Arr(items.into_iter().map(strip).collect()),
+            other => other,
+        }
+    }
+    let v = Json::parse(json_text).map_err(|e| e.to_string())?;
+    Ok(strip(v).to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +448,23 @@ mod tests {
             .is_some());
         assert!(parsed.get("outages").and_then(|m| m.get("max")).is_some());
         assert!(parsed.get("late_uploads").is_some());
+    }
+
+    #[test]
+    fn strip_measured_removes_only_wall_derived_fields() {
+        let report = BatchReport::from_outcomes(&[outcome(10.0, 5, true)]);
+        let json = report.to_json(None).to_string();
+        let stripped = strip_measured(&json).unwrap();
+        for gone in ["resolve_time_s", "assoc_time_s", "\"phases\""] {
+            assert!(json.contains(gone));
+            assert!(!stripped.contains(gone), "{gone} must be stripped");
+        }
+        for kept in ["makespan_s", "participation_rate", "phase_counters"] {
+            assert!(stripped.contains(kept), "{kept} must survive");
+        }
+        // Nested objects are stripped too.
+        let nested = "{\"outer\":{\"wall_s\":1.5,\"epoch\":3},\"phase_sim_s\":0.2}";
+        assert_eq!(strip_measured(nested).unwrap(), "{\"outer\":{\"epoch\":3}}");
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! [`ScenarioRun`] — the one builder-style entry point for executing
+//! scenarios, single-instance or batched.
+//!
+//! Historically the API sprawled across five free functions
+//! (`run_instance`, `run_instance_traced`, `run_batch`,
+//! `run_batch_with`, `run_batch_traced`) whose names encoded their
+//! option combinations. `ScenarioRun` replaces the combinatorics with a
+//! builder:
+//!
+//! ```ignore
+//! // One instance, custom seed, observed by a sink:
+//! let out = ScenarioRun::new(&spec).seed(7).sink(&mut sink).run()?;
+//! // A batch with a progress callback:
+//! let batch = ScenarioRun::new(&spec).on_outcome(|i, _| done(i)).run_batch()?;
+//! // A traced batch (one JSONL sink per instance, slotted by index):
+//! let (batch, sinks) = ScenarioRun::new(&spec).run_batch_traced()?;
+//! // A batch streaming through custom per-instance sinks (serve path):
+//! let (batch, _) = ScenarioRun::new(&spec).run_batch_with_sinks(mk_sink)?;
+//! ```
+//!
+//! The old free functions survive as thin delegating shims so callers
+//! migrate incrementally; they add no behavior.
+
+use super::dynamics::{run_instance_traced, ScenarioOutcome};
+use super::runner::{run_batch_sinked, BatchResult};
+use super::spec::ScenarioSpec;
+use crate::trace::{JsonlSink, NullSink, TraceSink};
+
+/// Builder for a scenario execution. See the module docs for the
+/// grammar; every terminal (`run`, `run_batch`, `run_batch_traced`,
+/// `run_batch_with_sinks`) consumes the builder.
+pub struct ScenarioRun<'a> {
+    spec: &'a ScenarioSpec,
+    seed: Option<u64>,
+    sink: Option<&'a mut dyn TraceSink>,
+    on_outcome: Option<Box<dyn FnMut(usize, &ScenarioOutcome) + 'a>>,
+}
+
+impl<'a> ScenarioRun<'a> {
+    pub fn new(spec: &'a ScenarioSpec) -> Self {
+        ScenarioRun {
+            spec,
+            seed: None,
+            sink: None,
+            on_outcome: None,
+        }
+    }
+
+    /// Override the seed. For [`run`](Self::run) this is the instance
+    /// seed itself; for the batch terminals it replaces
+    /// `spec.base.seed` as the root of the per-instance seed stream.
+    /// Default: `spec.base.seed` either way.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Observe the run through a [`TraceSink`]. Only meaningful for
+    /// [`run`](Self::run): a batch needs one sink *per instance* (use
+    /// [`run_batch_traced`](Self::run_batch_traced) or
+    /// [`run_batch_with_sinks`](Self::run_batch_with_sinks)), so the
+    /// batch terminals reject a builder-level sink instead of silently
+    /// dropping it.
+    pub fn sink(mut self, sink: &'a mut dyn TraceSink) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Completion callback, invoked on the calling thread as each
+    /// instance finishes (completion order — use it for progress, not
+    /// for ordering-sensitive logic). [`run`](Self::run) invokes it once
+    /// with index 0.
+    pub fn on_outcome<F: FnMut(usize, &ScenarioOutcome) + 'a>(mut self, f: F) -> Self {
+        self.on_outcome = Some(Box::new(f));
+        self
+    }
+
+    /// Run one instance end to end. Pure function of `(spec, seed)`.
+    pub fn run(self) -> Result<ScenarioOutcome, String> {
+        let seed = self.seed.unwrap_or(self.spec.base.seed);
+        let mut null = NullSink;
+        let sink: &mut dyn TraceSink = match self.sink {
+            Some(s) => s,
+            None => &mut null,
+        };
+        let out = run_instance_traced(self.spec, seed, sink)?;
+        if let Some(mut f) = self.on_outcome {
+            f(0, &out);
+        }
+        Ok(out)
+    }
+
+    /// Run the spec's batch on the sharded runner (no per-instance
+    /// tracing). Bit-for-bit identical outcomes for any shard count.
+    pub fn run_batch(self) -> Result<BatchResult, String> {
+        self.run_batch_with_sinks(|_| NullSink)
+            .map(|(batch, _)| batch)
+    }
+
+    /// [`run_batch`](Self::run_batch) with one [`JsonlSink`] per
+    /// instance, returned in instance order (ready to concatenate into
+    /// one `--trace` file; content is shard-count independent).
+    pub fn run_batch_traced(self) -> Result<(BatchResult, Vec<JsonlSink>), String> {
+        self.run_batch_with_sinks(JsonlSink::for_instance)
+    }
+
+    /// The generic batch terminal: each instance runs through its own
+    /// sink built by `mk_sink(index)`; sinks come back slotted by
+    /// instance index exactly like outcomes. This is how `hfl serve`
+    /// streams per-epoch events to clients while a job runs.
+    pub fn run_batch_with_sinks<S, G>(self, mk_sink: G) -> Result<(BatchResult, Vec<S>), String>
+    where
+        S: TraceSink + Send,
+        G: Fn(usize) -> S + Sync,
+    {
+        if self.sink.is_some() {
+            return Err(
+                "ScenarioRun::sink observes a single run(); a batch needs one sink per \
+                 instance — use run_batch_traced() or run_batch_with_sinks(mk_sink)"
+                    .into(),
+            );
+        }
+        let reseeded;
+        let spec = match self.seed {
+            Some(s) if s != self.spec.base.seed => {
+                reseeded = self.spec.clone().seed(s);
+                &reseeded
+            }
+            _ => self.spec,
+        };
+        let mut on_outcome = self.on_outcome;
+        run_batch_sinked(spec, mk_sink, move |i, o| {
+            if let Some(f) = on_outcome.as_mut() {
+                f(i, o);
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{run_batch, run_instance};
+    use crate::trace::StatsSink;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec::new().edges(2).ues(8).instances(3).shards(2)
+    }
+
+    #[test]
+    fn run_matches_free_function() {
+        let spec = spec();
+        let a = ScenarioRun::new(&spec).seed(77).run().unwrap();
+        let b = run_instance(&spec, 77).unwrap();
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    }
+
+    #[test]
+    fn run_invokes_sink_and_callback() {
+        let spec = spec();
+        let mut sink = StatsSink::default();
+        let mut called = 0usize;
+        let out = ScenarioRun::new(&spec)
+            .sink(&mut sink)
+            .on_outcome(|i, _| {
+                assert_eq!(i, 0);
+                called += 1;
+            })
+            .run()
+            .unwrap();
+        assert_eq!(called, 1);
+        assert_eq!(sink.epochs, out.epochs + 1, "final partial epoch counts");
+    }
+
+    #[test]
+    fn batch_matches_free_function_and_reseeds() {
+        let spec = spec();
+        let a = ScenarioRun::new(&spec).run_batch().unwrap();
+        let b = run_batch(&spec).unwrap();
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+        }
+        // .seed(s) on a batch re-roots the instance seed stream.
+        let c = ScenarioRun::new(&spec).seed(spec.base.seed ^ 1).run_batch().unwrap();
+        assert_ne!(
+            a.outcomes[0].makespan_s.to_bits(),
+            c.outcomes[0].makespan_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn batch_rejects_builder_level_sink() {
+        let spec = spec();
+        let mut sink = StatsSink::default();
+        let err = ScenarioRun::new(&spec).sink(&mut sink).run_batch().unwrap_err();
+        assert!(err.contains("one sink per"), "got '{err}'");
+    }
+}

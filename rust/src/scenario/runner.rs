@@ -17,7 +17,7 @@ use std::sync::mpsc;
 
 use super::dynamics::{run_instance_traced, ScenarioOutcome};
 use super::spec::ScenarioSpec;
-use crate::trace::{JsonlSink, NullSink, TraceSink};
+use crate::trace::{JsonlSink, TraceSink};
 use crate::util::Rng;
 
 /// Output of a batch run.
@@ -66,7 +66,8 @@ pub fn instance_seeds(base_seed: u64, instances: usize) -> Vec<u64> {
 /// Sinks are slotted by instance index exactly like outcomes, so traced
 /// batches inherit the shard-count independence of the runner (the
 /// concatenated per-instance streams never depend on scheduling).
-fn run_batch_sinked<S, G, F>(
+/// Crate-internal primitive behind [`crate::scenario::ScenarioRun`].
+pub(crate) fn run_batch_sinked<S, G, F>(
     spec: &ScenarioSpec,
     mk_sink: G,
     on_done: F,
@@ -203,32 +204,43 @@ where
 /// Run the spec's batch, invoking `on_done(index, outcome)` on the calling
 /// thread as each instance completes (completion order — use it for
 /// progress, not for ordering-sensitive logic).
+///
+/// Thin shim over [`crate::scenario::ScenarioRun`] (the unified entry).
 pub fn run_batch_with<F: FnMut(usize, &ScenarioOutcome)>(
     spec: &ScenarioSpec,
     on_done: F,
 ) -> Result<BatchResult, String> {
-    run_batch_sinked(spec, |_| NullSink, on_done).map(|(batch, _)| batch)
+    crate::scenario::ScenarioRun::new(spec)
+        .on_outcome(on_done)
+        .run_batch()
 }
 
 /// [`run_batch_with`] with a [`JsonlSink`] per instance: returns the
 /// batch plus the per-instance event streams, in instance order (ready
 /// to concatenate into one `--trace` file — the content is identical for
 /// every shard count).
+///
+/// Thin shim over [`crate::scenario::ScenarioRun`] (the unified entry).
 pub fn run_batch_traced<F: FnMut(usize, &ScenarioOutcome)>(
     spec: &ScenarioSpec,
     on_done: F,
 ) -> Result<(BatchResult, Vec<JsonlSink>), String> {
-    run_batch_sinked(spec, JsonlSink::for_instance, on_done)
+    crate::scenario::ScenarioRun::new(spec)
+        .on_outcome(on_done)
+        .run_batch_traced()
 }
 
 /// [`run_batch_with`] without a progress callback.
+///
+/// Thin shim over [`crate::scenario::ScenarioRun`] (the unified entry).
 pub fn run_batch(spec: &ScenarioSpec) -> Result<BatchResult, String> {
-    run_batch_with(spec, |_, _| {})
+    crate::scenario::ScenarioRun::new(spec).run_batch()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::NullSink;
 
     #[test]
     fn seeds_are_schedule_independent_and_distinct() {

@@ -447,15 +447,48 @@ impl ScenarioSpec {
 
     // -- loading -----------------------------------------------------------
 
-    /// Load from a TOML file (if given) then apply CLI overrides, exactly
-    /// like [`Scenario::load`] but for the full spec.
+    /// The environment-variable prefix of the spec override layer:
+    /// `HFL_SPEED_MAX=12` is `--speed-max 12` at env precedence.
+    pub const ENV_PREFIX: &'static str = "HFL_";
+
+    /// Load from a TOML file (if given), then apply `HFL_*` environment
+    /// overrides, then CLI overrides. Precedence (highest first):
+    /// CLI > env > TOML > built-in defaults.
     pub fn load(path: Option<&str>, args: &Args) -> Result<ScenarioSpec, String> {
+        let env = Args::from_prefixed_vars(Self::ENV_PREFIX, std::env::vars());
+        Self::load_layered(path.map(|p| (p, None)), &env, args)
+    }
+
+    /// The explicit layering entry behind [`ScenarioSpec::load`]: `source`
+    /// is the spec path plus (optionally) its already-read text — the
+    /// serve path ships TOML text over the wire, the CLI path reads a
+    /// file — and `env` is the `HFL_*` layer as an [`Args`] value.
+    /// Applying layers in defaults → TOML → env → CLI order makes later
+    /// (higher-precedence) layers overwrite earlier ones field by field.
+    /// Every layer is checked for unknown keys, so a typo'd `HFL_*` var
+    /// fails fast exactly like a typo'd flag.
+    pub fn load_layered(
+        source: Option<(&str, Option<&str>)>,
+        env: &Args,
+        args: &Args,
+    ) -> Result<ScenarioSpec, String> {
         let mut spec = ScenarioSpec::default();
-        if let Some(p) = path {
-            let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
-            let doc = TomlDoc::parse(&text).map_err(|e| e.to_string())?;
+        if let Some((name, text)) = source {
+            let owned;
+            let text = match text {
+                Some(t) => t,
+                None => {
+                    owned = std::fs::read_to_string(name)
+                        .map_err(|e| format!("read {name}: {e}"))?;
+                    &owned
+                }
+            };
+            let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
             spec.apply_toml(&doc)?;
         }
+        spec.apply_args(env).map_err(|e| e.to_string())?;
+        env.reject_unknown()
+            .map_err(|e| format!("environment overrides ({}*): {e}", Self::ENV_PREFIX))?;
         spec.apply_args(args).map_err(|e| e.to_string())?;
         spec.validate()?;
         Ok(spec)
@@ -746,6 +779,63 @@ impl ScenarioSpec {
             dynamics
         )
     }
+
+    /// Multi-line dump of the fully resolved spec, one `key = value` per
+    /// line — the `--validate-only` output. Every field that layered
+    /// resolution (defaults → TOML → `HFL_*` env → CLI) can touch appears
+    /// here, so two invocations resolve identically iff their dumps match.
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        let mut line = |k: &str, v: String| {
+            s.push_str(&format!("  {k:<22} = {v}\n"));
+        };
+        line("edges", self.base.num_edges.to_string());
+        line("ues", self.base.num_ues.to_string());
+        line("eps", self.base.eps.to_string());
+        line("seed", self.base.seed.to_string());
+        line("assoc", self.base.assoc.name().to_string());
+        line("gamma", self.base.system.gamma.to_string());
+        line("zeta", self.base.system.zeta.to_string());
+        line("optimizer.mode", self.optimizer.name().to_string());
+        line("optimizer.resolve", self.resolve.name().to_string());
+        line("optimizer.assoc_resolve", self.assoc_resolve.name().to_string());
+        line("optimizer.assoc_hysteresis", self.assoc_hysteresis.to_string());
+        line("optimizer.intra_threads", self.intra_threads.to_string());
+        line("failure.jitter_sigma", self.failure.jitter_sigma.to_string());
+        line("failure.dropout_prob", self.failure.dropout_prob.to_string());
+        line("failure.deadline_s", self.failure.deadline_s.to_string());
+        line(
+            "devices.classes",
+            if self.devices.is_empty() {
+                "uniform".to_string()
+            } else {
+                self.devices.to_compact()
+            },
+        );
+        line("outage.fail_prob", self.outage.fail_prob.to_string());
+        line("outage.recover_prob", self.outage.recover_prob.to_string());
+        line(
+            "dynamics.speed_mps",
+            format!("({}, {})", self.dynamics.speed_mps.0, self.dynamics.speed_mps.1),
+        );
+        line("dynamics.arrival_rate", self.dynamics.arrival_rate.to_string());
+        line("dynamics.departure_prob", self.dynamics.departure_prob.to_string());
+        line(
+            "dynamics.epoch_rounds",
+            match self.dynamics.epoch_rounds {
+                Some(r) => r.to_string(),
+                None => "auto".to_string(),
+            },
+        );
+        line("dynamics.max_epochs", self.dynamics.max_epochs.to_string());
+        line("batch.instances", self.batch.instances.to_string());
+        line("batch.shards", self.batch.shards.to_string());
+        line(
+            "trace.file",
+            self.trace.file.clone().unwrap_or_else(|| "off".to_string()),
+        );
+        s
+    }
 }
 
 #[cfg(test)]
@@ -754,6 +844,38 @@ mod tests {
 
     fn args(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn env_layer_sits_between_toml_and_cli() {
+        let toml = "[dynamics]\nmax_epochs = 8\n[batch]\ninstances = 3\n";
+        let env = args("--max-epochs 16 --instances 5");
+        let cli = args("--instances 7");
+        let spec = ScenarioSpec::load_layered(Some(("inline", Some(toml))), &env, &cli).unwrap();
+        assert_eq!(spec.dynamics.max_epochs, 16, "env must override TOML");
+        assert_eq!(spec.batch.instances, 7, "CLI must override env");
+    }
+
+    #[test]
+    fn unknown_env_override_fails_fast() {
+        let env = Args::from_prefixed_vars(
+            "HFL_",
+            [("HFL_MAX_EPOCS".to_string(), "9".to_string())],
+        );
+        let err = ScenarioSpec::load_layered(None, &env, &args("")).unwrap_err();
+        assert!(
+            err.contains("environment overrides") && err.contains("max-epocs"),
+            "want a typo'd env var surfaced with its mapped key, got '{err}'"
+        );
+    }
+
+    #[test]
+    fn describe_lists_resolved_fields() {
+        let spec = ScenarioSpec::new().edges(3).ues(30).max_epochs(12);
+        let d = spec.describe();
+        assert!(d.contains("edges") && d.contains("= 3"));
+        assert!(d.contains("dynamics.max_epochs") && d.contains("= 12"));
+        assert!(d.contains("trace.file"));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Append-only job journal behind `hfl serve --checkpoint`.
+//!
+//! One JSON object per line:
+//!
+//! ```text
+//! {"op":"submitted","job":3,"spec_toml":"...","env":[...],"args":[...],"stream":false}
+//! {"op":"done","job":3}
+//! ```
+//!
+//! On startup the journal is replayed: jobs with a `submitted` record but
+//! no `done` record are *pending* and get re-enqueued (their reports land
+//! next to the checkpoint file, since the submitting connection is gone).
+//! Because a job is a pure function of its submitted layers, re-running a
+//! pending job after a crash produces the outcome the crashed run would
+//! have — resume changes *when* results appear, never *what* they are.
+//!
+//! The journal records the raw [`JobRequest`] layers, not the resolved
+//! spec, for the same reason the wire protocol does: resolution always
+//! happens in one place.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::protocol::JobRequest;
+use crate::util::json::Json;
+
+/// A journaled job that never finished.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingJob {
+    pub id: u64,
+    pub request: JobRequest,
+}
+
+/// Open (append) handle on a journal file.
+pub struct Journal {
+    file: File,
+    /// Path the journal lives at; job reports for resumed jobs are
+    /// written as siblings (`<path>.job<N>.json`).
+    pub path: PathBuf,
+}
+
+impl Journal {
+    /// Open `path` (creating it if absent), replay it, and return the
+    /// handle plus the pending jobs (ascending id) and the highest job
+    /// id ever journaled (0 if none) so the server can continue the id
+    /// sequence without reuse.
+    pub fn open(path: &Path) -> Result<(Journal, Vec<PendingJob>, u64), String> {
+        let mut submitted: BTreeMap<u64, JobRequest> = BTreeMap::new();
+        let mut done: BTreeSet<u64> = BTreeSet::new();
+        let mut max_id = 0u64;
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = parse_record(line).map_err(|e| {
+                    format!("checkpoint {} line {}: {e}", path.display(), lineno + 1)
+                })?;
+                match rec {
+                    Record::Submitted(id, req) => {
+                        max_id = max_id.max(id);
+                        submitted.insert(id, req);
+                    }
+                    Record::Done(id) => {
+                        max_id = max_id.max(id);
+                        done.insert(id);
+                    }
+                }
+            }
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("checkpoint {}: {e}", path.display()))?;
+        let pending = submitted
+            .into_iter()
+            .filter(|(id, _)| !done.contains(id))
+            .map(|(id, request)| PendingJob { id, request })
+            .collect();
+        Ok((
+            Journal {
+                file,
+                path: path.to_path_buf(),
+            },
+            pending,
+            max_id,
+        ))
+    }
+
+    /// Record an accepted submission. Flushes before returning so an
+    /// accepted job survives a crash right after its `accepted` frame.
+    pub fn record_submitted(&mut self, id: u64, req: &JobRequest) -> std::io::Result<()> {
+        let argv = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::str(s)).collect());
+        let mut fields = vec![("op", Json::str("submitted")), ("job", Json::num(id as f64))];
+        if let Some(toml) = &req.spec_toml {
+            fields.push(("spec_toml", Json::str(toml)));
+        }
+        fields.push(("env", argv(&req.env)));
+        fields.push(("args", argv(&req.args)));
+        fields.push(("stream", Json::Bool(req.stream)));
+        self.append(Json::obj(fields))
+    }
+
+    /// Record completion (success *or* job-level failure — a failed job
+    /// is not retried: it is a pure function of its layers and would
+    /// fail identically on every resume).
+    pub fn record_done(&mut self, id: u64) -> std::io::Result<()> {
+        self.append(Json::obj(vec![
+            ("op", Json::str("done")),
+            ("job", Json::num(id as f64)),
+        ]))
+    }
+
+    fn append(&mut self, rec: Json) -> std::io::Result<()> {
+        self.file.write_all(rec.to_string().as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()
+    }
+}
+
+enum Record {
+    Submitted(u64, JobRequest),
+    Done(u64),
+}
+
+fn parse_record(line: &str) -> Result<Record, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    let id = v
+        .get("job")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "record has no numeric \"job\"".to_string())? as u64;
+    match v.get("op").and_then(Json::as_str) {
+        Some("done") => Ok(Record::Done(id)),
+        Some("submitted") => {
+            let argv = |key: &str| -> Result<Vec<String>, String> {
+                match v.get(key) {
+                    None | Some(Json::Null) => Ok(Vec::new()),
+                    Some(a) => a
+                        .as_arr()
+                        .ok_or_else(|| format!("\"{key}\" must be an array"))?
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| format!("\"{key}\" must hold strings"))
+                        })
+                        .collect(),
+                }
+            };
+            Ok(Record::Submitted(
+                id,
+                JobRequest {
+                    spec_toml: v.get("spec_toml").and_then(Json::as_str).map(str::to_string),
+                    env: argv("env")?,
+                    args: argv("args")?,
+                    stream: v.get("stream").and_then(Json::as_bool).unwrap_or(false),
+                },
+            ))
+        }
+        other => Err(format!("unknown journal op {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hfl_journal_{}_{name}", std::process::id()))
+    }
+
+    fn req(n: u64) -> JobRequest {
+        JobRequest {
+            spec_toml: Some(format!("[batch]\ninstances = {n}\n")),
+            env: vec!["--max-epochs".into(), "2".into()],
+            args: vec![],
+            stream: false,
+        }
+    }
+
+    #[test]
+    fn replay_returns_unfinished_jobs_and_max_id() {
+        let path = tmp("replay");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (mut j, pending, max_id) = Journal::open(&path).unwrap();
+            assert!(pending.is_empty());
+            assert_eq!(max_id, 0);
+            j.record_submitted(1, &req(1)).unwrap();
+            j.record_submitted(2, &req(2)).unwrap();
+            j.record_done(1).unwrap();
+            j.record_submitted(3, &req(3)).unwrap();
+        }
+        let (_j, pending, max_id) = Journal::open(&path).unwrap();
+        assert_eq!(max_id, 3);
+        assert_eq!(
+            pending.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![2, 3],
+            "job 1 is done; 2 and 3 resume in id order"
+        );
+        assert_eq!(pending[0].request, req(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_journal_fails_with_line_context() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "{\"op\":\"done\",\"job\":1}\nnot json\n").unwrap();
+        let err = Journal::open(&path).unwrap_err();
+        assert!(err.contains("line 2"), "got '{err}'");
+        let _ = std::fs::remove_file(&path);
+    }
+}

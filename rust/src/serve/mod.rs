@@ -1,0 +1,30 @@
+//! `hfl serve` — a resident scenario service.
+//!
+//! Batch mode (`hfl scenario`) pays spec parsing, binary startup and
+//! thread-pool spin-up per invocation; the service keeps a process
+//! resident, accepts scenario jobs as newline-delimited JSON over TCP
+//! and streams per-epoch results while they run. Zero dependencies:
+//! `std::net` + the crate's own JSON/TOML codecs.
+//!
+//! * [`protocol`] — the wire frames, client and server side;
+//! * [`queue`] — the bounded job queue (explicit `busy` backpressure);
+//! * [`server`] — listener, worker pool, job lifecycle, streaming sinks;
+//! * [`checkpoint`] — the append-only journal behind `--checkpoint`.
+//!
+//! The headline guarantee: a job submitted over the wire produces
+//! **bitwise-identical** deterministic outcomes to `hfl scenario` run
+//! in-process on the same spec layers — for any worker count and with
+//! concurrent tenants — because both paths funnel into
+//! [`ScenarioSpec::load_layered`](crate::scenario::ScenarioSpec::load_layered)
+//! and [`ScenarioRun`](crate::scenario::ScenarioRun) on the sharded
+//! deterministic runner. `tests/serve.rs` proves it end to end by
+//! byte-comparing measurement-stripped reports.
+
+pub mod checkpoint;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use protocol::JobRequest;
+pub use queue::{JobQueue, PushError};
+pub use server::{resolve_request, ServeConfig, Server};

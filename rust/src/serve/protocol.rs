@@ -1,0 +1,353 @@
+//! Newline-delimited JSON wire protocol shared by `hfl serve` and
+//! `hfl submit`.
+//!
+//! One JSON object per line, both directions. Client → server:
+//!
+//! ```text
+//! {"cmd":"submit","spec_toml":"...","env":["--max-epochs","4"],
+//!  "args":["--instances","8"],"stream":true}
+//! {"cmd":"ping"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Server → client frames all carry an `"ev"` tag: `accepted`, `busy`,
+//! `invalid`, `rejected`, `pong`, `shutdown`, then per job a stream of
+//! `epoch` events (when `"stream":true`), the per-instance `outcome`
+//! frames in instance order, and finally `done` (or `error`).
+//!
+//! **Determinism.** A submission ships the *layers* of spec resolution
+//! (raw TOML text + env argv + CLI argv), never a pre-resolved spec: the
+//! server funnels them through the same
+//! [`ScenarioSpec::load_layered`](crate::scenario::ScenarioSpec::load_layered)
+//! path as `hfl scenario`, so a wire job and a batch run see
+//! byte-identical specs by construction. Frames are emitted through
+//! [`crate::util::json::Json`], whose `Display` is canonical (sorted
+//! keys, stable float formatting), so frame bytes are comparable across
+//! runs.
+
+use crate::scenario::ScenarioOutcome;
+use crate::util::json::Json;
+
+/// A job submission as it travels over the wire: the raw layers of spec
+/// resolution. The client reads the spec file; the server never touches
+/// the client's filesystem.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobRequest {
+    /// Inline TOML spec text (optional — pure-CLI jobs are legal).
+    pub spec_toml: Option<String>,
+    /// `HFL_*` environment layer, argv-style (`["--speed-mps", "12"]`).
+    /// Sits between the TOML and `args`, mirroring batch-mode precedence.
+    pub env: Vec<String>,
+    /// CLI layer, argv-style. Highest precedence.
+    pub args: Vec<String>,
+    /// Stream per-epoch `epoch` events while the job runs.
+    pub stream: bool,
+}
+
+/// Parsed client command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientCmd {
+    Submit(Box<JobRequest>),
+    Ping,
+    Shutdown,
+}
+
+/// Parse one client line into a [`ClientCmd`].
+pub fn parse_client_line(line: &str) -> Result<ClientCmd, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad frame: {e}"))?;
+    let cmd = v
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "frame has no string \"cmd\" field".to_string())?;
+    match cmd {
+        "ping" => Ok(ClientCmd::Ping),
+        "shutdown" => Ok(ClientCmd::Shutdown),
+        "submit" => {
+            let argv = |key: &str| -> Result<Vec<String>, String> {
+                match v.get(key) {
+                    None | Some(Json::Null) => Ok(Vec::new()),
+                    Some(a) => a
+                        .as_arr()
+                        .ok_or_else(|| format!("\"{key}\" must be an array of strings"))?
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| format!("\"{key}\" must be an array of strings"))
+                        })
+                        .collect(),
+                }
+            };
+            Ok(ClientCmd::Submit(Box::new(JobRequest {
+                spec_toml: v.get("spec_toml").and_then(Json::as_str).map(str::to_string),
+                env: argv("env")?,
+                args: argv("args")?,
+                stream: v.get("stream").and_then(Json::as_bool).unwrap_or(true),
+            })))
+        }
+        other => Err(format!("unknown cmd {other:?}")),
+    }
+}
+
+/// Build the client `submit` line for a request (no trailing newline).
+pub fn submit_line(req: &JobRequest) -> String {
+    let argv = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::str(s)).collect());
+    let mut fields = Vec::new();
+    fields.push(("cmd", Json::str("submit")));
+    if let Some(toml) = &req.spec_toml {
+        fields.push(("spec_toml", Json::str(toml)));
+    }
+    fields.push(("env", argv(&req.env)));
+    fields.push(("args", argv(&req.args)));
+    fields.push(("stream", Json::Bool(req.stream)));
+    Json::obj(fields).to_string()
+}
+
+/// Client `ping` line.
+pub fn ping_line() -> String {
+    Json::obj(vec![("cmd", Json::str("ping"))]).to_string()
+}
+
+/// Client `shutdown` line.
+pub fn shutdown_cmd_line() -> String {
+    Json::obj(vec![("cmd", Json::str("shutdown"))]).to_string()
+}
+
+fn ev(kind: &str, mut rest: Vec<(&str, Json)>) -> String {
+    let mut fields = vec![("ev", Json::str(kind))];
+    fields.append(&mut rest);
+    Json::obj(fields).to_string()
+}
+
+/// Server: job admitted to the queue.
+pub fn accepted_line(job: u64) -> String {
+    ev("accepted", vec![("job", Json::num(job as f64))])
+}
+
+/// Server: queue full — explicit backpressure, the client must retry.
+pub fn busy_line(queue_depth: usize) -> String {
+    let fields = vec![("queue_depth", Json::num(queue_depth as f64)), ("retry", Json::Bool(true))];
+    ev("busy", fields)
+}
+
+/// Server: submission failed spec resolution / frame parsing.
+pub fn invalid_line(error: &str) -> String {
+    ev("invalid", vec![("error", Json::str(error))])
+}
+
+/// Server: an accepted-but-queued job was dropped (graceful shutdown).
+pub fn rejected_line(job: u64, reason: &str) -> String {
+    let fields = vec![("job", Json::num(job as f64)), ("reason", Json::str(reason))];
+    ev("rejected", fields)
+}
+
+/// Server: a running job failed.
+pub fn error_line(job: u64, error: &str) -> String {
+    let fields = vec![("job", Json::num(job as f64)), ("error", Json::str(error))];
+    ev("error", fields)
+}
+
+/// Server: ping reply.
+pub fn pong_line() -> String {
+    ev("pong", vec![])
+}
+
+/// Server: shutdown acknowledged; in-flight jobs drain, queued jobs get
+/// `rejected` frames.
+pub fn shutdown_ack_line() -> String {
+    ev("shutdown", vec![])
+}
+
+/// Server: one per-epoch summary, streamed while the job runs. The
+/// deterministic fields mirror the `epoch_end` trace event; `phases`
+/// carries the wall-clock observed so far this epoch and is *measured*
+/// (stripped by [`crate::scenario::strip_measured`] before comparisons).
+#[allow(clippy::too_many_arguments)]
+pub fn epoch_line(
+    job: u64,
+    instance: usize,
+    epoch: u64,
+    a: u64,
+    b: u64,
+    clock_s: f64,
+    participation: f64,
+    phase_walls: &[(&'static str, f64)],
+) -> String {
+    let phases = Json::obj(
+        phase_walls
+            .iter()
+            .filter(|(_, w)| *w > 0.0)
+            .map(|(name, w)| (*name, Json::num(*w)))
+            .collect(),
+    );
+    ev(
+        "epoch",
+        vec![
+            ("job", Json::num(job as f64)),
+            ("instance", Json::num(instance as f64)),
+            ("epoch", Json::num(epoch as f64)),
+            ("a", Json::num(a as f64)),
+            ("b", Json::num(b as f64)),
+            ("clock_s", Json::num(clock_s)),
+            ("participation", Json::num(participation)),
+            ("phases", phases),
+        ],
+    )
+}
+
+/// The deterministic slice of a [`ScenarioOutcome`] as JSON. Measured
+/// fields (`resolve_time_s`, `assoc_time_s`, per-phase walls) are left
+/// out by construction, so these frames are bitwise-comparable between a
+/// wire job and an in-process batch. The seed is a string: it is a
+/// full-range `u64` and must not round through `f64`.
+pub fn outcome_json(o: &ScenarioOutcome) -> Json {
+    Json::obj(vec![
+        ("instance", Json::num(o.instance as f64)),
+        ("seed", Json::str(&o.seed.to_string())),
+        ("makespan_s", Json::num(o.makespan_s)),
+        ("closed_form_s", Json::num(o.closed_form_s)),
+        ("rounds", Json::num(o.rounds as f64)),
+        ("epochs", Json::num(o.epochs as f64)),
+        ("converged", Json::Bool(o.converged)),
+        ("a", Json::num(o.a as f64)),
+        ("b", Json::num(o.b as f64)),
+        ("round_time_s", Json::num(o.round_time_s)),
+        ("tau_max_s", Json::num(o.tau_max_s)),
+        ("handovers", Json::num(o.handovers as f64)),
+        ("arrivals", Json::num(o.arrivals as f64)),
+        ("departures", Json::num(o.departures as f64)),
+        ("dropped_uploads", Json::num(o.dropped_uploads as f64)),
+        ("late_uploads", Json::num(o.late_uploads as f64)),
+        ("scheduled_uploads", Json::num(o.scheduled_uploads as f64)),
+        ("participation_rate", Json::num(o.participation_rate)),
+        ("outages", Json::num(o.outages as f64)),
+        ("recoveries", Json::num(o.recoveries as f64)),
+        ("down_edge_epochs", Json::num(o.down_edge_epochs as f64)),
+        ("events", Json::num(o.events as f64)),
+        ("ue_barrier_wait_s", Json::num(o.ue_barrier_wait_s)),
+        ("edge_barrier_wait_s", Json::num(o.edge_barrier_wait_s)),
+        ("resolves", Json::num(o.resolves as f64)),
+        ("cold_resolves", Json::num(o.cold_resolves as f64)),
+        ("reassociations", Json::num(o.reassociations as f64)),
+    ])
+}
+
+/// Server: one completed instance (instance order, after the job ran).
+pub fn outcome_line(job: u64, o: &ScenarioOutcome) -> String {
+    ev(
+        "outcome",
+        vec![
+            ("job", Json::num(job as f64)),
+            ("instance", Json::num(o.instance as f64)),
+            ("outcome", outcome_json(o)),
+        ],
+    )
+}
+
+/// Server: job finished; carries the full batch report JSON (the same
+/// document `hfl scenario --report` writes) plus measured job wall time.
+pub fn done_line(job: u64, report: Json, wall_s: f64, shards: usize) -> String {
+    ev(
+        "done",
+        vec![
+            ("job", Json::num(job as f64)),
+            ("report", report),
+            ("wall_s", Json::num(wall_s)),
+            ("shards", Json::num(shards as f64)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trips() {
+        let req = JobRequest {
+            spec_toml: Some("[batch]\ninstances = 4\n".to_string()),
+            env: vec!["--max-epochs".into(), "4".into()],
+            args: vec!["--instances".into(), "8".into()],
+            stream: true,
+        };
+        let line = submit_line(&req);
+        match parse_client_line(&line).unwrap() {
+            ClientCmd::Submit(parsed) => assert_eq!(*parsed, req),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_without_spec_defaults() {
+        let line = r#"{"cmd":"submit"}"#;
+        match parse_client_line(line).unwrap() {
+            ClientCmd::Submit(req) => {
+                assert_eq!(req.spec_toml, None);
+                assert!(req.env.is_empty() && req.args.is_empty());
+                assert!(req.stream, "stream defaults on");
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_commands_parse() {
+        assert_eq!(parse_client_line(&ping_line()).unwrap(), ClientCmd::Ping);
+        assert_eq!(
+            parse_client_line(&shutdown_cmd_line()).unwrap(),
+            ClientCmd::Shutdown
+        );
+    }
+
+    #[test]
+    fn bad_frames_are_rejected_with_context() {
+        assert!(parse_client_line("not json").is_err());
+        let err = parse_client_line(r#"{"cmd":"dance"}"#).unwrap_err();
+        assert!(err.contains("dance"), "got '{err}'");
+        let err = parse_client_line(r#"{"cmd":"submit","env":"oops"}"#).unwrap_err();
+        assert!(err.contains("array of strings"), "got '{err}'");
+        let err = parse_client_line(r#"{"x":1}"#).unwrap_err();
+        assert!(err.contains("cmd"), "got '{err}'");
+    }
+
+    #[test]
+    fn frames_are_single_canonical_lines() {
+        for line in [
+            accepted_line(3),
+            busy_line(8),
+            invalid_line("no"),
+            rejected_line(4, "server shutting down"),
+            error_line(5, "boom"),
+            pong_line(),
+            shutdown_ack_line(),
+            epoch_line(1, 0, 2, 5, 3, 12.5, 0.975, &[("sim", 0.25), ("assoc", 0.0)]),
+        ] {
+            assert!(!line.contains('\n'), "frame must be one line: {line}");
+            let v = Json::parse(&line).unwrap();
+            assert!(v.get("ev").and_then(Json::as_str).is_some());
+            // Canonical: re-serialization is a fixed point.
+            assert_eq!(v.to_string(), line);
+        }
+        // Zero walls are dropped from the phases object.
+        let e = epoch_line(1, 0, 2, 5, 3, 12.5, 0.975, &[("sim", 0.25), ("assoc", 0.0)]);
+        assert!(e.contains("\"sim\"") && !e.contains("\"assoc\""));
+    }
+
+    #[test]
+    fn outcome_json_has_no_measured_fields_and_exact_seed() {
+        let o = ScenarioOutcome {
+            seed: u64::MAX - 1,
+            resolve_time_s: 1.25,
+            assoc_time_s: 0.5,
+            ..Default::default()
+        };
+        let j = outcome_json(&o);
+        assert!(j.get("resolve_time_s").is_none());
+        assert!(j.get("assoc_time_s").is_none());
+        assert!(j.get("phases").is_none());
+        assert_eq!(j.get("seed").and_then(Json::as_str), Some("18446744073709551614"));
+        let line = outcome_line(7, &o);
+        let stripped = crate::scenario::strip_measured(&line).unwrap();
+        assert_eq!(stripped, line, "outcome frames survive strip_measured unchanged");
+    }
+}

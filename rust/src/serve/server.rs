@@ -1,0 +1,553 @@
+//! The resident scenario service: listener, worker pool, job lifecycle.
+//!
+//! `hfl serve` binds a TCP listener and runs scenario jobs submitted as
+//! newline-delimited JSON ([`super::protocol`]). Per job:
+//!
+//! 1. a connection handler parses the frame and resolves the spec
+//!    through [`ScenarioSpec::load_layered`] — the *same* code path as
+//!    `hfl scenario`, which is what makes wire jobs bitwise-identical to
+//!    batch runs;
+//! 2. the job enters a bounded [`JobQueue`]; a full queue is answered
+//!    with an explicit `busy` frame (backpressure, never silent buffering);
+//! 3. a worker claims it and runs it on the sharded deterministic runner
+//!    via [`ScenarioRun::run_batch_with_sinks`], streaming per-epoch
+//!    `epoch` frames through a [`WireSink`] when the client asked to
+//!    stream;
+//! 4. the worker emits per-instance `outcome` frames (instance order)
+//!    and a final `done` frame carrying the same report JSON that
+//!    `hfl scenario --report` writes.
+//!
+//! **Graceful shutdown**: a `shutdown` command stops accepting, closes
+//! the queue (queued jobs get `rejected` frames), and drains in-flight
+//! jobs to completion before [`Server::run`] returns.
+//!
+//! **Checkpoint/resume**: with a journal ([`super::checkpoint`]), every
+//! accepted job is durable; jobs pending at startup re-run and their
+//! reports land next to the journal file.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::checkpoint::Journal;
+use super::protocol::{self, ClientCmd, JobRequest};
+use super::queue::{JobQueue, PushError};
+use crate::config::Args;
+use crate::scenario::{BatchReport, ScenarioRun, ScenarioSpec};
+use crate::trace::{Phase, TraceSink, NUM_PHASES};
+use crate::util::toml::TomlDoc;
+
+/// Resolved server configuration. Layering mirrors the scenario spec:
+/// CLI > `HFL_*` environment > `[server]` TOML table > defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Concurrent jobs (worker threads). Each job still shards its
+    /// instances per its own `batch.shards`.
+    pub workers: usize,
+    /// Jobs admitted beyond the ones workers are busy with; a full
+    /// queue answers `busy`.
+    pub queue_depth: usize,
+    /// Journal path for checkpoint/resume; `None` disables durability.
+    pub checkpoint: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:4710".to_string(),
+            workers: 2,
+            queue_depth: 8,
+            checkpoint: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Layer a config from an optional `[server]` TOML table, the
+    /// `HFL_*` environment and the CLI (ascending precedence). The env
+    /// layer is *strict*: `hfl serve` owns the whole `HFL_*` namespace
+    /// it reads, so a stray scenario variable (say `HFL_SEED`) in the
+    /// server's environment fails startup loudly instead of silently
+    /// doing nothing — submitted jobs carry their own env layer.
+    pub fn load_layered(
+        doc: Option<&TomlDoc>,
+        env: &Args,
+        cli: &Args,
+    ) -> Result<ServeConfig, String> {
+        let mut cfg = ServeConfig::default();
+        if let Some(doc) = doc {
+            if let Some(s) = doc.str("server", "addr") {
+                cfg.addr = s.to_string();
+            }
+            if let Some(v) = doc.i64("server", "workers") {
+                cfg.workers = v as usize;
+            }
+            if let Some(v) = doc.i64("server", "queue_depth") {
+                cfg.queue_depth = v as usize;
+            }
+            if let Some(s) = doc.str("server", "checkpoint") {
+                cfg.checkpoint = Some(s.to_string());
+            }
+        }
+        for layer in [env, cli] {
+            if let Some(s) = layer.str("addr") {
+                cfg.addr = s;
+            }
+            if let Some(v) = layer.get::<usize>("workers").map_err(|e| e.to_string())? {
+                cfg.workers = v;
+            }
+            if let Some(v) = layer.get::<usize>("queue-depth").map_err(|e| e.to_string())? {
+                cfg.queue_depth = v;
+            }
+            if let Some(s) = layer.str("checkpoint") {
+                cfg.checkpoint = Some(s);
+            }
+        }
+        env.reject_unknown()
+            .map_err(|e| format!("environment overrides (HFL_*): {e}"))?;
+        if cfg.workers == 0 {
+            return Err("server.workers must be >= 1".to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Multi-line effective-config dump for `--validate-only`.
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        let mut line = |k: &str, v: String| s.push_str(&format!("  {k:<22} = {v}\n"));
+        line("server.addr", self.addr.clone());
+        line("server.workers", self.workers.to_string());
+        line("server.queue_depth", self.queue_depth.to_string());
+        line(
+            "server.checkpoint",
+            self.checkpoint.clone().unwrap_or_else(|| "off".to_string()),
+        );
+        s
+    }
+}
+
+/// Write side of one client connection, shared between the handler and
+/// the worker streaming that client's job.
+type Conn = Arc<Mutex<TcpStream>>;
+
+/// Write one frame + newline; `false` means the client is gone (the
+/// caller should stop streaming — the job itself always runs to
+/// completion, results are durable via the journal when configured).
+fn send(conn: &Conn, line: &str) -> bool {
+    let mut s = conn.lock().unwrap();
+    write_frame(&mut s, line).is_ok()
+}
+
+fn write_frame<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// An admitted job: spec already resolved, client handle attached
+/// (`None` for journal-resumed jobs whose submitter is long gone).
+struct Job {
+    id: u64,
+    spec: ScenarioSpec,
+    stream: bool,
+    client: Option<Conn>,
+}
+
+struct Shared {
+    queue: JobQueue<Job>,
+    shutdown: AtomicBool,
+    next_job: AtomicU64,
+    journal: Mutex<Option<Journal>>,
+    checkpoint_path: Option<PathBuf>,
+    queue_depth: usize,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn journal_submitted(&self, id: u64, req: &JobRequest) {
+        if let Some(j) = self.journal.lock().unwrap().as_mut() {
+            // Best-effort: a failed journal write degrades durability,
+            // never correctness of the running job.
+            let _ = j.record_submitted(id, req);
+        }
+    }
+
+    fn journal_done(&self, id: u64) {
+        if let Some(j) = self.journal.lock().unwrap().as_mut() {
+            let _ = j.record_done(id);
+        }
+    }
+}
+
+/// A bound-but-not-yet-running service.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    workers: usize,
+    resumed: Vec<Job>,
+}
+
+impl Server {
+    /// Bind the listener and, when checkpointing, replay the journal.
+    pub fn bind(cfg: ServeConfig) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let mut journal = None;
+        let mut resumed = Vec::new();
+        let mut next_id = 1u64;
+        if let Some(p) = &cfg.checkpoint {
+            let (mut j, pending, max_id) = Journal::open(Path::new(p))?;
+            next_id = max_id + 1;
+            for p in pending {
+                match resolve_request(&p.request) {
+                    Ok(spec) => resumed.push(Job {
+                        id: p.id,
+                        spec,
+                        stream: false,
+                        client: None,
+                    }),
+                    // A journaled request that no longer resolves (e.g.
+                    // edited journal) would fail identically on every
+                    // restart — retire it instead of wedging startup.
+                    Err(_) => {
+                        let _ = j.record_done(p.id);
+                    }
+                }
+            }
+            journal = Some(j);
+        }
+        let shared = Arc::new(Shared {
+            queue: JobQueue::new(cfg.queue_depth),
+            shutdown: AtomicBool::new(false),
+            next_job: AtomicU64::new(next_id),
+            journal: Mutex::new(journal),
+            checkpoint_path: cfg.checkpoint.as_ref().map(PathBuf::from),
+            queue_depth: cfg.queue_depth,
+            addr,
+        });
+        Ok(Server {
+            listener,
+            shared,
+            workers: cfg.workers,
+            resumed,
+        })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Jobs recovered from the journal that will run at startup.
+    pub fn resumed_jobs(&self) -> usize {
+        self.resumed.len()
+    }
+
+    /// Serve until a `shutdown` command arrives, then drain in-flight
+    /// jobs and return. Blocks the calling thread.
+    pub fn run(self) -> Result<(), String> {
+        let shared = self.shared;
+        for job in self.resumed {
+            // Capacity-exempt: journaled jobs are never dropped.
+            if shared.queue.restore(job).is_err() {
+                break;
+            }
+        }
+        let workers: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    while let Some(job) = shared.queue.pop() {
+                        run_job(&shared, job);
+                    }
+                })
+            })
+            .collect();
+        for stream in self.listener.incoming() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || handle_conn(&shared, stream));
+        }
+        // Drain: queued jobs are handed back for clean rejection,
+        // workers finish what they already claimed.
+        for job in shared.queue.close() {
+            if let Some(conn) = &job.client {
+                send(conn, &protocol::rejected_line(job.id, "server shutting down"));
+            }
+            // Deliberately NOT journaled as done: with a checkpoint, a
+            // queued-but-rejected job resumes on the next start.
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+/// Resolve a wire request into a spec through the exact layered path
+/// batch mode uses (TOML -> env argv -> CLI argv), then reject unknown
+/// CLI keys so a typo fails the submission instead of being ignored.
+/// Public so `hfl submit --validate-only` runs the *same* function
+/// client-side that the server will run on the real submission.
+pub fn resolve_request(req: &JobRequest) -> Result<ScenarioSpec, String> {
+    let env = Args::parse(req.env.iter().cloned()).map_err(|e| format!("env layer: {e}"))?;
+    let cli = Args::parse(req.args.iter().cloned()).map_err(|e| format!("args layer: {e}"))?;
+    let spec = ScenarioSpec::load_layered(
+        req.spec_toml.as_deref().map(|t| ("submitted spec", Some(t))),
+        &env,
+        &cli,
+    )?;
+    cli.reject_unknown().map_err(|e| format!("args layer: {e}"))?;
+    Ok(spec)
+}
+
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let conn: Conn = Arc::new(Mutex::new(write_half));
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_client_line(&line) {
+            Err(e) => {
+                if !send(&conn, &protocol::invalid_line(&e)) {
+                    break;
+                }
+            }
+            Ok(ClientCmd::Ping) => {
+                if !send(&conn, &protocol::pong_line()) {
+                    break;
+                }
+            }
+            Ok(ClientCmd::Shutdown) => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                send(&conn, &protocol::shutdown_ack_line());
+                // Unblock the accept loop so it observes the flag.
+                let _ = TcpStream::connect(shared.addr);
+                break;
+            }
+            Ok(ClientCmd::Submit(req)) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    send(&conn, &protocol::invalid_line("server is shutting down"));
+                    continue;
+                }
+                let spec = match resolve_request(&req) {
+                    Ok(spec) => spec,
+                    Err(e) => {
+                        if !send(&conn, &protocol::invalid_line(&e)) {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
+                let job = Job {
+                    id,
+                    spec,
+                    stream: req.stream,
+                    client: Some(Arc::clone(&conn)),
+                };
+                // Hold the connection write lock across admission so the
+                // accepted/busy frame is on the wire before any worker
+                // can interleave this job's epoch frames.
+                let mut w = conn.lock().unwrap();
+                let ok = match shared.queue.push(job) {
+                    Ok(_) => {
+                        shared.journal_submitted(id, &req);
+                        write_frame(&mut *w, &protocol::accepted_line(id))
+                    }
+                    Err(PushError::Full(_)) => {
+                        write_frame(&mut *w, &protocol::busy_line(shared.queue_depth))
+                    }
+                    Err(PushError::Closed(_)) => {
+                        write_frame(&mut *w, &protocol::invalid_line("server is shutting down"))
+                    }
+                };
+                if ok.is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn run_job(shared: &Shared, job: Job) {
+    // hfl-lint: allow(R3, job wall-time for the done frame only; no simulated quantity derives from it)
+    let t0 = std::time::Instant::now();
+    let stream_conn = if job.stream { job.client.clone() } else { None };
+    let result = ScenarioRun::new(&job.spec)
+        .run_batch_with_sinks(|i| WireSink::new(stream_conn.clone(), job.id, i));
+    match result {
+        Ok((batch, _sinks)) => {
+            let report = BatchReport::from_outcomes(&batch.outcomes);
+            if let Some(conn) = &job.client {
+                let mut live = true;
+                for o in &batch.outcomes {
+                    live = live && send(conn, &protocol::outcome_line(job.id, o));
+                }
+                if live {
+                    send(
+                        conn,
+                        &protocol::done_line(
+                            job.id,
+                            report.to_json(Some(&job.spec)),
+                            t0.elapsed().as_secs_f64(),
+                            batch.shards,
+                        ),
+                    );
+                }
+            } else if let Some(cp) = &shared.checkpoint_path {
+                // Journal-resumed job: the submitter is gone, so the
+                // report lands next to the journal.
+                let path = PathBuf::from(format!("{}.job{}.json", cp.display(), job.id));
+                let _ = report.write(&path, Some(&job.spec));
+            }
+            shared.journal_done(job.id);
+        }
+        Err(e) => {
+            if let Some(conn) = &job.client {
+                send(conn, &protocol::error_line(job.id, &e));
+            }
+            // A job is a pure function of its layers: it would fail
+            // identically on resume, so failure also retires it.
+            shared.journal_done(job.id);
+        }
+    }
+}
+
+/// Per-instance [`TraceSink`] that forwards each epoch summary to the
+/// submitting client as an `epoch` frame. Only the measured per-phase
+/// walls observed *before* the epoch summary (association, delay,
+/// resolve, simulate) ride along, as the `phases` object — they are
+/// stripped before any determinism comparison anyway.
+struct WireSink {
+    conn: Option<Conn>,
+    job: u64,
+    instance: usize,
+    walls: [f64; NUM_PHASES],
+}
+
+impl WireSink {
+    fn new(conn: Option<Conn>, job: u64, instance: usize) -> WireSink {
+        WireSink {
+            conn,
+            job,
+            instance,
+            walls: [0.0; NUM_PHASES],
+        }
+    }
+}
+
+impl TraceSink for WireSink {
+    fn enabled(&self) -> bool {
+        self.conn.is_some()
+    }
+
+    fn begin_epoch(&mut self, _epoch: u64, _clock_s: f64) {
+        self.walls = [0.0; NUM_PHASES];
+    }
+
+    fn span(&mut self, _epoch: u64, phase: Phase, wall_s: f64) {
+        self.walls[phase.idx()] += wall_s;
+    }
+
+    fn epoch_end(&mut self, epoch: u64, a: u64, b: u64, clock_s: f64, participation: f64) {
+        let Some(conn) = &self.conn else { return };
+        let walls: Vec<(&'static str, f64)> = Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), self.walls[p.idx()]))
+            .collect();
+        let line = protocol::epoch_line(
+            self.job,
+            self.instance,
+            epoch,
+            a,
+            b,
+            clock_s,
+            participation,
+            &walls,
+        );
+        if !send(conn, &line) {
+            // Client hung up: stop streaming, keep computing.
+            self.conn = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_layers_in_precedence_order() {
+        let doc = TomlDoc::parse(
+            "[server]\naddr = \"0.0.0.0:9000\"\nworkers = 4\nqueue_depth = 2\ncheckpoint = \"j.jsonl\"\n",
+        )
+        .unwrap();
+        let vars = vec![("HFL_WORKERS".to_string(), "8".to_string())];
+        let env = Args::from_prefixed_vars("HFL_", vars);
+        let cli = Args::parse(["--queue-depth", "5"].iter().map(|s| s.to_string())).unwrap();
+        let cfg = ServeConfig::load_layered(Some(&doc), &env, &cli).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:9000"); // TOML (no override)
+        assert_eq!(cfg.workers, 8); // env beats TOML
+        assert_eq!(cfg.queue_depth, 5); // CLI beats TOML
+        assert_eq!(cfg.checkpoint.as_deref(), Some("j.jsonl"));
+    }
+
+    #[test]
+    fn stray_env_vars_fail_startup() {
+        let vars = vec![("HFL_SEED".to_string(), "7".to_string())];
+        let env = Args::from_prefixed_vars("HFL_", vars);
+        let cli = Args::parse(std::iter::empty()).unwrap();
+        let err = ServeConfig::load_layered(None, &env, &cli).unwrap_err();
+        assert!(err.contains("environment overrides"), "got '{err}'");
+        assert!(err.contains("seed"), "got '{err}'");
+    }
+
+    #[test]
+    fn zero_workers_rejected_and_describe_lists_fields() {
+        let env = Args::parse(std::iter::empty()).unwrap();
+        let cli = Args::parse(["--workers", "0"].iter().map(|s| s.to_string())).unwrap();
+        assert!(ServeConfig::load_layered(None, &env, &cli).is_err());
+        let d = ServeConfig::default().describe();
+        let keys = ["server.addr", "server.workers", "server.queue_depth", "server.checkpoint"];
+        for key in keys {
+            assert!(d.contains(key), "describe missing {key}: {d}");
+        }
+        assert!(d.contains("127.0.0.1:4710") && d.contains("off"));
+    }
+
+    #[test]
+    fn resolve_request_applies_layers_and_rejects_typos() {
+        let req = JobRequest {
+            spec_toml: Some("[dynamics]\nmax_epochs = 8\n[batch]\ninstances = 3\n".to_string()),
+            env: vec!["--max-epochs".into(), "16".into()],
+            args: vec!["--instances".into(), "7".into()],
+            stream: false,
+        };
+        let spec = resolve_request(&req).unwrap();
+        assert_eq!(spec.dynamics.max_epochs, 16, "env beats TOML");
+        assert_eq!(spec.batch.instances, 7, "CLI beats TOML");
+
+        let bad = JobRequest {
+            args: vec!["--instancez".into(), "7".into()],
+            ..req
+        };
+        let err = resolve_request(&bad).unwrap_err();
+        assert!(err.contains("instancez"), "got '{err}'");
+    }
+}

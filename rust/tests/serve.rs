@@ -1,0 +1,382 @@
+//! End-to-end wire tests for `hfl serve`: the headline guarantee is that
+//! a job submitted over TCP produces *byte-identical* deterministic
+//! results to an in-process `ScenarioRun` on the same spec layers — for
+//! any worker count and with concurrent tenants — plus graceful-shutdown
+//! and backpressure semantics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hfl::scenario::{strip_measured, BatchReport, ScenarioRun};
+use hfl::serve::checkpoint::Journal;
+use hfl::serve::{protocol, resolve_request, JobRequest, ServeConfig, Server};
+use hfl::util::json::Json;
+
+/// Small dynamic spec: multiple epochs (so `epoch` frames stream),
+/// multiple instances on 2 shards (so scheduling interleaves).
+const SPEC_TOML: &str = "\
+[scenario]
+num_edges = 2
+num_ues = 30
+eps = 0.25
+seed = 42
+
+[dynamics]
+speed_min_mps = 0.5
+speed_max_mps = 2.0
+arrival_rate = 0.5
+departure_prob = 0.02
+epoch_rounds = 1
+max_epochs = 6
+
+[batch]
+instances = 3
+shards = 2
+";
+
+/// Heavy spec for shutdown/backpressure tests: long enough that the job
+/// is reliably still running while the test submits more work.
+const SLOW_TOML: &str = "\
+[scenario]
+num_edges = 3
+num_ues = 80
+eps = 0.25
+seed = 7
+
+[dynamics]
+speed_min_mps = 0.5
+speed_max_mps = 2.0
+arrival_rate = 1.0
+departure_prob = 0.02
+epoch_rounds = 1
+max_epochs = 192
+
+[batch]
+instances = 3
+shards = 1
+";
+
+fn start_server(workers: usize, queue_depth: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_depth,
+        checkpoint: None,
+    };
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn send_shutdown(addr: SocketAddr) {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    writeln!(sock, "{}", protocol::shutdown_cmd_line()).unwrap();
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ev\":\"shutdown\""), "got '{line}'");
+}
+
+fn req(spec_toml: &str, stream: bool) -> JobRequest {
+    JobRequest {
+        spec_toml: Some(spec_toml.to_string()),
+        env: Vec::new(),
+        args: Vec::new(),
+        stream,
+    }
+}
+
+/// Submit and read frames until a terminal frame (done/error/busy/
+/// invalid/rejected) arrives; returns every frame parsed.
+fn submit_and_collect(addr: SocketAddr, request: &JobRequest) -> Vec<Json> {
+    let sock = TcpStream::connect(addr).unwrap();
+    let mut writer = sock.try_clone().unwrap();
+    writeln!(writer, "{}", protocol::submit_line(request)).unwrap();
+    collect_frames(sock)
+}
+
+fn collect_frames(sock: TcpStream) -> Vec<Json> {
+    let reader = BufReader::new(sock);
+    let mut frames = Vec::new();
+    for line in reader.lines() {
+        let line = line.unwrap();
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).unwrap_or_else(|e| panic!("bad frame '{line}': {e}"));
+        let ev = ev_of(&v).to_string();
+        frames.push(v);
+        if matches!(ev.as_str(), "done" | "error" | "busy" | "invalid" | "rejected") {
+            break;
+        }
+    }
+    frames
+}
+
+fn ev_of(v: &Json) -> &str {
+    v.get("ev").and_then(Json::as_str).unwrap_or("?")
+}
+
+/// The reference: resolve the request through the same layered path and
+/// run it in-process; return the report JSON text.
+fn in_process_report(request: &JobRequest) -> String {
+    let spec = resolve_request(request).unwrap();
+    let batch = ScenarioRun::new(&spec).run_batch().unwrap();
+    BatchReport::from_outcomes(&batch.outcomes).to_json(Some(&spec)).to_string()
+}
+
+/// Deterministic view of a job's frames: epoch frames sorted by
+/// (instance, epoch) with measured fields stripped, then outcome frames
+/// in arrival (= instance) order.
+fn canonical_stream(frames: &[Json]) -> Vec<String> {
+    let mut epochs: Vec<(u64, u64, String)> = frames
+        .iter()
+        .filter(|f| ev_of(f) == "epoch")
+        .map(|f| {
+            let instance = f.get("instance").and_then(Json::as_f64).unwrap() as u64;
+            let epoch = f.get("epoch").and_then(Json::as_f64).unwrap() as u64;
+            (instance, epoch, strip_measured(&f.to_string()).unwrap())
+        })
+        .collect();
+    epochs.sort();
+    let mut out: Vec<String> = epochs.into_iter().map(|(_, _, s)| s).collect();
+    let outcomes = frames.iter().filter(|f| ev_of(f) == "outcome");
+    out.extend(outcomes.map(|f| f.to_string()));
+    out
+}
+
+#[test]
+fn wire_job_is_bitwise_identical_to_in_process_batch_for_any_worker_count() {
+    let request = req(SPEC_TOML, true);
+    let expected_report = strip_measured(&in_process_report(&request)).unwrap();
+
+    // In-process reference outcome frames (job id is 1 on a fresh server).
+    let spec = resolve_request(&request).unwrap();
+    let reference = ScenarioRun::new(&spec).run_batch().unwrap();
+    let expected_outcomes: Vec<String> = reference
+        .outcomes
+        .iter()
+        .map(|o| protocol::outcome_line(1, o))
+        .collect();
+
+    let mut streams = Vec::new();
+    for workers in [1usize, 4] {
+        let (addr, handle) = start_server(workers, 8);
+        let frames = submit_and_collect(addr, &request);
+        send_shutdown(addr);
+        handle.join().unwrap();
+
+        assert_eq!(ev_of(&frames[0]), "accepted", "workers={workers}");
+        let done = frames.last().unwrap();
+        assert_eq!(ev_of(done), "done", "workers={workers}");
+        let report = strip_measured(&done.get("report").unwrap().to_string()).unwrap();
+        assert_eq!(
+            report,
+            expected_report,
+            "workers={workers}: wire report != in-process report"
+        );
+
+        let wire_outcomes: Vec<String> = frames
+            .iter()
+            .filter(|f| ev_of(f) == "outcome")
+            .map(|f| f.to_string())
+            .collect();
+        assert_eq!(
+            wire_outcomes,
+            expected_outcomes,
+            "workers={workers}: outcome frames differ from in-process outcomes"
+        );
+
+        let epochs = frames.iter().filter(|f| ev_of(f) == "epoch").count();
+        assert!(epochs > 0, "workers={workers}: streaming produced no epoch frames");
+        streams.push(canonical_stream(&frames));
+    }
+    assert_eq!(
+        streams[0],
+        streams[1],
+        "epoch/outcome streams must not depend on the server worker count"
+    );
+}
+
+#[test]
+fn concurrent_tenants_get_independent_bitwise_correct_results() {
+    // Two tenants, different seeds, racing on a 4-worker server.
+    let toml_a = SPEC_TOML.replace("seed = 42", "seed = 11");
+    let toml_b = SPEC_TOML.replace("seed = 42", "seed = 99");
+    let (addr, handle) = start_server(4, 8);
+    let threads: Vec<_> = [toml_a, toml_b]
+        .into_iter()
+        .map(|toml| {
+            std::thread::spawn(move || {
+                let request = req(&toml, true);
+                let frames = submit_and_collect(addr, &request);
+                let expected = strip_measured(&in_process_report(&request)).unwrap();
+                let done = frames.last().unwrap();
+                assert_eq!(ev_of(done), "done");
+                let got = strip_measured(&done.get("report").unwrap().to_string()).unwrap();
+                assert_eq!(got, expected, "tenant report corrupted under concurrency");
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    send_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_inflight_rejects_queued_and_backpressures() {
+    // One worker, queue depth 1: job A runs, job B queues, job C bounces.
+    let (addr, handle) = start_server(1, 1);
+
+    // Tenant A: slow streaming job; wait for its first epoch frame so we
+    // know the single worker has claimed it.
+    let sock_a = TcpStream::connect(addr).unwrap();
+    let mut writer_a = sock_a.try_clone().unwrap();
+    writeln!(writer_a, "{}", protocol::submit_line(&req(SLOW_TOML, true))).unwrap();
+    let mut reader_a = BufReader::new(sock_a);
+    let mut saw_epoch = false;
+    let mut line = String::new();
+    while !saw_epoch {
+        line.clear();
+        assert!(reader_a.read_line(&mut line).unwrap() > 0, "server hung up on A");
+        if line.contains("\"ev\":\"epoch\"") {
+            saw_epoch = true;
+        }
+    }
+
+    // Tenant B: accepted but queued behind A.
+    let sock_b = TcpStream::connect(addr).unwrap();
+    let mut writer_b = sock_b.try_clone().unwrap();
+    writeln!(writer_b, "{}", protocol::submit_line(&req(SLOW_TOML, false))).unwrap();
+    let mut reader_b = BufReader::new(sock_b);
+    let mut line_b = String::new();
+    reader_b.read_line(&mut line_b).unwrap();
+    assert!(line_b.contains("\"ev\":\"accepted\""), "B got '{line_b}'");
+
+    // Tenant C: the queue is full — explicit busy, not silent buffering.
+    let frames_c = submit_and_collect(addr, &req(SLOW_TOML, false));
+    assert_eq!(ev_of(frames_c.last().unwrap()), "busy", "C frames: {frames_c:?}");
+
+    // Shutdown: A (in flight) drains to `done`, B (queued) is rejected.
+    // Read until the expected frame (not EOF: the server's per-connection
+    // reader thread keeps each socket open until the client hangs up).
+    send_shutdown(addr);
+
+    loop {
+        line_b.clear();
+        assert!(
+            reader_b.read_line(&mut line_b).unwrap() > 0,
+            "connection closed before B's rejection frame"
+        );
+        if line_b.contains("\"ev\":\"rejected\"") {
+            break;
+        }
+    }
+
+    loop {
+        line.clear();
+        assert!(
+            reader_a.read_line(&mut line).unwrap() > 0,
+            "connection closed before A's done frame"
+        );
+        if line.contains("\"ev\":\"done\"") {
+            break;
+        }
+    }
+
+    drop(reader_a);
+    drop(reader_b);
+    handle.join().unwrap();
+}
+
+#[test]
+fn invalid_submissions_fail_fast_with_context() {
+    let (addr, handle) = start_server(1, 2);
+
+    // Typo'd CLI layer.
+    let bad = JobRequest {
+        spec_toml: Some(SPEC_TOML.to_string()),
+        env: Vec::new(),
+        args: vec!["--instancez".to_string(), "7".to_string()],
+        stream: false,
+    };
+    let frames = submit_and_collect(addr, &bad);
+    let last = frames.last().unwrap();
+    assert_eq!(ev_of(last), "invalid");
+    let err = last.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("instancez"), "error should name the typo: {last}");
+
+    // Garbage frame.
+    let sock = TcpStream::connect(addr).unwrap();
+    let mut w = sock.try_clone().unwrap();
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ev\":\"invalid\""), "got '{line}'");
+
+    // Ping still answers.
+    let sock = TcpStream::connect(addr).unwrap();
+    let mut w = sock.try_clone().unwrap();
+    writeln!(w, "{}", protocol::ping_line()).unwrap();
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ev\":\"pong\""), "got '{line}'");
+
+    send_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn checkpointed_pending_jobs_resume_and_write_reports() {
+    let dir = std::env::temp_dir().join(format!("hfl_serve_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal_path = dir.join("jobs.jsonl");
+
+    // Simulate a crashed server: one job journaled as submitted, never done.
+    let request = req(SPEC_TOML, false);
+    {
+        let (mut journal, pending, _) = Journal::open(&journal_path).unwrap();
+        assert!(pending.is_empty());
+        journal.record_submitted(1, &request).unwrap();
+    }
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_depth: 2,
+        checkpoint: Some(journal_path.display().to_string()),
+    };
+    let server = Server::bind(cfg).unwrap();
+    assert_eq!(server.resumed_jobs(), 1, "pending job must be picked up");
+    let addr = server.addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    // The resumed job's report lands next to the journal.
+    let report_path = PathBuf::from(format!("{}.job1.json", journal_path.display()));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !report_path.exists() {
+        assert!(Instant::now() < deadline, "resumed job never wrote its report");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    send_shutdown(addr);
+    handle.join().unwrap();
+
+    let written = std::fs::read_to_string(&report_path).unwrap();
+    let expected = in_process_report(&request);
+    assert_eq!(
+        strip_measured(&written).unwrap(),
+        strip_measured(&expected).unwrap(),
+        "resumed job must reproduce the in-process report bitwise (modulo walls)"
+    );
+
+    // After completion the journal marks it done: a restart resumes nothing.
+    let (_j, pending, max_id) = Journal::open(&journal_path).unwrap();
+    assert!(pending.is_empty(), "completed job must not resume again");
+    assert_eq!(max_id, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
