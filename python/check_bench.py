@@ -224,7 +224,29 @@ def self_test() -> int:
             {"name": "cold build ratio", "value": 0.1},
         ],
     }
+    # BENCH_gap.json shape: certificate-gap and wall-clock rows only — no
+    # speedup ratios, so nothing in this bench ever hard-gates.
+    gap = {
+        "bench": "assoc_gap",
+        "generated": True,
+        "rows": [
+            {"name": "gap proposed", "gap_s": 0.01, "solve_ms": 3.0},
+            {"name": "gap flow", "gap_s": 0.0, "solve_ms": 40.0},
+            {"name": "flow bound scale", "bound_ms": 150.0, "budget_ms": 2000.0},
+        ],
+    }
+    gap_worse = {
+        "bench": "assoc_gap",
+        "generated": True,
+        "rows": [
+            {"name": "gap proposed", "gap_s": 0.5, "solve_ms": 30.0},
+            {"name": "flow bound scale", "bound_ms": 1900.0, "budget_ms": 2000.0},
+        ],
+    }
     assert metrics_of(good) == {"s speedup": 10.0}
+    assert metrics_of(gap) == {}  # certificate rows are informational
+    assert compare(gap, gap_worse, 0.25)[0] == []  # wider gaps never gate
+    assert compare(gap, {"bench": "assoc_gap", "generated": False}, 0.25)[0] != []
     assert metrics_of(thr) == {}  # raw throughput is not gated...
     assert info_metrics_of(thr) == {"static": 100.0}  # ...only reported
     assert metrics_of(hetero) == {"hetero assoc warm speedup": 4.0}

@@ -35,14 +35,18 @@ pub fn solve_exact_bnb(
         return Err(format!("infeasible: {n} UEs > {m} edges x capacity {cap}"));
     }
 
-    // Branch order: UEs whose best link is worst go first.
+    // Branch order: UEs whose best link is worst go first. Best-case
+    // latencies are computed once up front — evaluating them inside the
+    // comparator rescans all m edges per comparison (O(n log n · m)).
+    let best_lat: Vec<f64> = (0..n)
+        .map(|ue| {
+            (0..m)
+                .map(|e| table.of(ue, e))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
     let mut order: Vec<usize> = (0..n).collect();
-    let best_lat = |ue: usize| {
-        (0..m)
-            .map(|e| table.of(ue, e))
-            .fold(f64::INFINITY, f64::min)
-    };
-    order.sort_by(|&a, &b| best_lat(b).total_cmp(&best_lat(a)));
+    order.sort_by(|&a, &b| best_lat[b].total_cmp(&best_lat[a]));
 
     // Per-UE edge preference (ascending latency).
     let prefs: Vec<Vec<usize>> = (0..n)
@@ -138,10 +142,16 @@ pub fn solve_exact_matching(table: &LatencyTable, cap: usize) -> Result<Associat
     }
     let mut thresholds: Vec<f64> = table.latency_s.clone();
     // total_cmp: NaN latencies (degenerate channels) sort last instead of
-    // panicking; they can never satisfy `of(ue, e) <= z`, so the solver
-    // reports infeasibility rather than aborting.
+    // panicking. dedup() compares with PartialEq, so NaN runs never
+    // collapse — and neither NaN nor the +inf a down-edge-poisoned column
+    // carries is a real objective (a non-finite link can never be
+    // assigned), so drop every non-finite candidate before the search.
     thresholds.sort_by(|a, b| a.total_cmp(b));
     thresholds.dedup();
+    thresholds.retain(|z| z.is_finite());
+    if thresholds.is_empty() {
+        return Err("no feasible assignment: every link latency is non-finite".to_string());
+    }
 
     // Binary search the smallest feasible threshold.
     let feasible = |z: f64| -> Option<Vec<usize>> {
@@ -193,10 +203,11 @@ pub fn solve_exact_matching(table: &LatencyTable, cap: usize) -> Result<Associat
 }
 
 // ---------------------------------------------------------------------
-// Dinic max-flow (unit/bulk capacities, tiny graphs).
+// Dinic max-flow (unit/bulk capacities; also the feasibility oracle for
+// the aggregated probes in `assoc::flow`).
 // ---------------------------------------------------------------------
 
-struct Dinic {
+pub(crate) struct Dinic {
     // edges: (to, cap); paired with reverse edge at idx ^ 1.
     to: Vec<usize>,
     cap: Vec<i64>,
@@ -207,7 +218,7 @@ struct Dinic {
 }
 
 impl Dinic {
-    fn new(nodes: usize) -> Dinic {
+    pub(crate) fn new(nodes: usize) -> Dinic {
         Dinic {
             to: Vec::new(),
             cap: Vec::new(),
@@ -219,7 +230,7 @@ impl Dinic {
     }
 
     /// Returns the arc index of the forward edge.
-    fn add_edge(&mut self, from: usize, to: usize, cap: i64) -> usize {
+    pub(crate) fn add_edge(&mut self, from: usize, to: usize, cap: i64) -> usize {
         let idx = self.to.len();
         self.to.push(to);
         self.cap.push(cap);
@@ -232,7 +243,7 @@ impl Dinic {
         idx
     }
 
-    fn arc_flow(&self, arc: usize) -> i64 {
+    pub(crate) fn arc_flow(&self, arc: usize) -> i64 {
         self.initial_cap[arc] - self.cap[arc]
     }
 
@@ -272,7 +283,7 @@ impl Dinic {
         0
     }
 
-    fn max_flow(&mut self, src: usize, snk: usize) -> i64 {
+    pub(crate) fn max_flow(&mut self, src: usize, snk: usize) -> i64 {
         let mut flow = 0;
         while self.bfs(src, snk) {
             self.iter.iter_mut().for_each(|i| *i = 0);
@@ -348,6 +359,55 @@ mod tests {
     fn infeasible_reported() {
         let (_t, _ch, lt) = table(2, 10, 17);
         assert!(solve_exact_bnb(&lt, 4, None).is_err());
+        assert!(solve_exact_matching(&lt, 4).is_err());
+    }
+
+    #[test]
+    fn poisoned_down_edge_column_never_enters_the_search() {
+        // subset_latency_table poisons a down edge's whole column to +inf
+        // under the outage process; those values must not surface as
+        // binary-search thresholds (the old dedup left them in, so an
+        // infeasible probe at z = +inf could "succeed" via poisoned arcs).
+        for seed in 0..5 {
+            let (_t, _ch, mut lt) = table(3, 9, 40 + seed);
+            let m = lt.num_edges;
+            for ue in 0..lt.num_ues {
+                lt.latency_s[ue * m] = f64::INFINITY;
+            }
+            let a = solve_exact_matching(&lt, 5).unwrap();
+            a.validate(5).unwrap();
+            assert!(
+                a.edge_of.iter().all(|&e| e != 0),
+                "seed {seed}: a UE landed on the down edge"
+            );
+            let obj = lt.max_latency(&a);
+            assert!(obj.is_finite(), "seed {seed}: objective {obj} is not a real latency");
+        }
+    }
+
+    #[test]
+    fn poisoned_columns_can_make_matching_infeasible() {
+        // 9 UEs across 3 edges with cap 4 is feasible, but with two edges
+        // down only 4 slots remain: the solver must report infeasibility,
+        // not return an assignment through +inf links.
+        let (_t, _ch, mut lt) = table(3, 9, 51);
+        let m = lt.num_edges;
+        for ue in 0..lt.num_ues {
+            lt.latency_s[ue * m] = f64::INFINITY;
+            lt.latency_s[ue * m + 1] = f64::INFINITY;
+        }
+        assert!(solve_exact_matching(&lt, 4).is_err());
+    }
+
+    #[test]
+    fn all_nan_table_errs_without_panicking() {
+        // Degenerate-channel shape: every candidate threshold is NaN, so
+        // the retained set is empty and the solver must err gracefully
+        // instead of indexing thresholds[len - 1] on an empty vec.
+        let (_t, _ch, mut lt) = table(2, 6, 19);
+        for z in lt.latency_s.iter_mut() {
+            *z = f64::NAN;
+        }
         assert!(solve_exact_matching(&lt, 4).is_err());
     }
 }

@@ -1,0 +1,571 @@
+//! Flow-based lower bounds and optimality certificates for the
+//! association problem (paper problem (39)).
+//!
+//! The exact solvers in [`bnb`](super::bnb) answer "how far from optimal
+//! is Algorithm 3?" only at toy scale: branch-and-bound caps out near 16
+//! UEs and the threshold-matching solver reruns a raw UE-level Dinic per
+//! probe. This module scales the question to the 100k+-UE worlds the
+//! scenario engine runs:
+//!
+//! * [`flow_lower_bound`] — the LP-relaxation lower bound on the min-max
+//!   latency objective. The LP relaxation of the threshold-restricted
+//!   assignment polytope is a transportation polytope, whose constraint
+//!   matrix is totally unimodular — so fractional feasibility at a
+//!   threshold `z` equals integral feasibility, and the smallest feasible
+//!   `z` is simultaneously the LP bound and the exact min-max optimum.
+//!   Feasibility is decided by max-flow on an *aggregated* network: UEs
+//!   with identical admissible edge sets collapse into one supply node
+//!   (flow decomposition makes the aggregation exact), shrinking the
+//!   graph from `n·m` unit arcs to at most `min(n, 2^m)` group nodes over
+//!   `m ≤ a few hundred` edge nodes.
+//! * [`solve_flow`] — a min-cost-flow assignment (successive shortest
+//!   paths with Johnson potentials): among all assignments achieving the
+//!   optimal min-max threshold it minimizes total latency. Practical to a
+//!   few thousand UEs; the *bound* is what runs at scale.
+//! * [`Certificate`] — `{ lower_bound, achieved, gap }` for any
+//!   [`Association`], checkable against every `AssocPolicy` result.
+//!
+//! Determinism (hfl-lint R1–R6): no hash-ordered collections — grouping
+//! is an index sort over bit-masks; all float comparisons go through
+//! `total_cmp` or plain operators; node and arc construction follows
+//! fixed ascending orders (UE id, edge id, sorted mask), so Dinic and the
+//! shortest-path solver see identical graphs on identical inputs, and the
+//! Dijkstra heap breaks distance ties by node id.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::bnb::Dinic;
+use super::{Association, LatencyTable};
+
+/// An optimality certificate for an association under a latency table:
+/// `lower_bound ≤ optimum ≤ achieved`, `gap = achieved - lower_bound`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Certificate {
+    /// LP-relaxation (= exact, by total unimodularity) lower bound on the
+    /// min-max latency objective.
+    pub lower_bound: f64,
+    /// Max link latency the certified association actually achieves.
+    pub achieved: f64,
+    /// `achieved - lower_bound`; zero certifies the association optimal.
+    pub gap: f64,
+}
+
+impl Certificate {
+    pub fn new(lower_bound: f64, achieved: f64) -> Certificate {
+        Certificate {
+            lower_bound,
+            achieved,
+            gap: achieved - lower_bound,
+        }
+    }
+
+    /// Internal consistency: a finite bound that does not exceed the
+    /// achieved objective. Both sides are maxima over entries of the same
+    /// table, so the comparison needs no tolerance.
+    pub fn holds(&self) -> bool {
+        self.lower_bound.is_finite() && self.lower_bound <= self.achieved
+    }
+}
+
+/// Certify an association: the flow lower bound next to the max latency
+/// the association achieves on the same table.
+pub fn certify(
+    table: &LatencyTable,
+    cap: usize,
+    assoc: &Association,
+) -> Result<Certificate, String> {
+    let lower = flow_lower_bound(table, cap)?;
+    Ok(Certificate::new(lower, table.max_latency(assoc)))
+}
+
+/// The LP-relaxation lower bound on the min-max association latency —
+/// exact (equal to `solve_exact_matching`'s objective) at every scale.
+///
+/// Search structure: the optimum is attained at a table entry, and
+/// feasibility at a threshold is monotone, so binary-search the sorted
+/// distinct finite entries. The search window is pre-narrowed to
+/// `[lb_best, ub]` where `lb_best = max_ue min_e l(ue,e)` (below it the
+/// hardest UE has an empty admissible set) and `ub` is the makespan of a
+/// deterministic capacity-respecting greedy pass (a feasibility witness),
+/// so only the entries a probe could actually return are ever sorted.
+pub fn flow_lower_bound(table: &LatencyTable, cap: usize) -> Result<f64, String> {
+    let (n, m) = (table.num_ues, table.num_edges);
+    if n == 0 {
+        // max over an empty UE set — matches `LatencyTable::max_latency`
+        // on an empty association.
+        return Ok(0.0);
+    }
+    if m == 0 || n > m.saturating_mul(cap) {
+        return Err(format!("infeasible: {n} UEs > {m} edges x capacity {cap}"));
+    }
+
+    // lb_best: every UE must land somewhere, so the worst best-case link
+    // is a bound. Errs when some UE has no finite link at all (fully
+    // degenerate or fully-masked row).
+    let mut lb_best = f64::NEG_INFINITY;
+    for ue in 0..n {
+        let mut best = f64::INFINITY;
+        for e in 0..m {
+            let l = table.of(ue, e);
+            if l.is_finite() && l < best {
+                best = l;
+            }
+        }
+        if !best.is_finite() {
+            return Err(format!("infeasible: UE {ue} has no finite link latency"));
+        }
+        if best > lb_best {
+            lb_best = best;
+        }
+    }
+
+    // ub: greedy witness — each UE takes its cheapest edge with spare
+    // capacity (UE id order). If a UE only finds non-finite spare links
+    // the witness degrades to +inf and the window covers every finite
+    // candidate at or above lb_best.
+    let mut load = vec![0usize; m];
+    let mut ub = f64::NEG_INFINITY;
+    for ue in 0..n {
+        let (mut pick, mut pick_lat) = (usize::MAX, f64::INFINITY);
+        for e in 0..m {
+            if load[e] >= cap {
+                continue;
+            }
+            let l = table.of(ue, e);
+            if l.is_finite() && l < pick_lat {
+                (pick, pick_lat) = (e, l);
+            }
+        }
+        if pick == usize::MAX {
+            // n <= m·cap guarantees a spare slot exists somewhere.
+            pick = (0..m).find(|&e| load[e] < cap).expect("spare capacity");
+        }
+        load[pick] += 1;
+        if pick_lat > ub {
+            ub = pick_lat;
+        }
+    }
+
+    let mut cands: Vec<f64> = table
+        .latency_s
+        .iter()
+        .copied()
+        .filter(|l| l.is_finite() && *l >= lb_best && *l <= ub)
+        .collect();
+    cands.sort_unstable_by(|a, b| a.total_cmp(b));
+    cands.dedup(); // all finite: PartialEq dedup is total here
+    if cands.is_empty() {
+        return Err("infeasible: no finite candidate threshold".to_string());
+    }
+
+    let mut hi = if ub.is_finite() {
+        // ub is itself a table entry inside the window: a known-feasible
+        // anchor, no probe needed.
+        cands.partition_point(|x| *x < ub)
+    } else {
+        let last = cands.len() - 1;
+        if !feasible_at(table, cap, cands[last]) {
+            return Err("no feasible assignment within finite latencies".to_string());
+        }
+        last
+    };
+    let mut lo = 0usize;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible_at(table, cap, cands[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Ok(cands[lo])
+}
+
+/// Can every UE be placed on an edge with link latency ≤ z without any
+/// edge exceeding `cap`? Exact, via max-flow on the aggregated network
+/// source → mask-group(|group|) → admissible edges → sink(cap): UEs with
+/// the same admissible set are exchangeable, so collapsing them preserves
+/// the max-flow value, and total unimodularity makes the integral answer
+/// equal the fractional (LP) one.
+fn feasible_at(table: &LatencyTable, cap: usize, z: f64) -> bool {
+    let (n, m) = (table.num_ues, table.num_edges);
+    let words = m.div_ceil(64);
+    let mut masks = vec![0u64; n * words];
+    for ue in 0..n {
+        let base = ue * words;
+        let mut any = false;
+        for e in 0..m {
+            // NaN/+inf entries (degenerate or down-edge-poisoned links)
+            // fail `<= z` for every finite z and never become admissible.
+            if table.of(ue, e) <= z {
+                masks[base + e / 64] |= 1u64 << (e % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+    }
+
+    // Group UEs by admissible mask: an index sort on the mask words (R1:
+    // no hash maps; ties need no ordering — only group sizes matter).
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        let (a, b) = (a as usize * words, b as usize * words);
+        masks[a..a + words].cmp(&masks[b..b + words])
+    });
+
+    let mask_of = |ue: usize| &masks[ue * words..ue * words + words];
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // (representative ue, count)
+    for &ue in &idx {
+        let ue = ue as usize;
+        match groups.last_mut() {
+            Some((rep, count)) if mask_of(*rep) == mask_of(ue) => *count += 1,
+            _ => groups.push((ue, 1)),
+        }
+    }
+
+    let g = groups.len();
+    let (src, snk) = (g + m, g + m + 1);
+    let mut flow = Dinic::new(g + m + 2);
+    for (gi, &(rep, count)) in groups.iter().enumerate() {
+        flow.add_edge(src, gi, count as i64);
+        let base = rep * words;
+        for e in 0..m {
+            if masks[base + e / 64] & (1u64 << (e % 64)) != 0 {
+                flow.add_edge(gi, g + e, count.min(cap) as i64);
+            }
+        }
+    }
+    for e in 0..m {
+        flow.add_edge(g + e, snk, cap as i64);
+    }
+    flow.max_flow(src, snk) == n as i64
+}
+
+/// Min-cost-flow association: restrict arcs to the optimal min-max
+/// threshold `z*` from [`flow_lower_bound`], then run successive shortest
+/// paths — the result achieves the exact bottleneck optimum and, among
+/// all such assignments, the minimum total latency. O(n · nm log nm):
+/// practical to a few thousand UEs.
+pub fn solve_flow(table: &LatencyTable, cap: usize) -> Result<Association, String> {
+    let (n, m) = (table.num_ues, table.num_edges);
+    let z = flow_lower_bound(table, cap)?;
+    if n == 0 {
+        return Ok(Association::new(Vec::new(), m));
+    }
+
+    let (src, snk) = (n + m, n + m + 1);
+    let mut mcmf = MinCostFlow::new(n + m + 2);
+    let mut ue_arcs: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    for ue in 0..n {
+        mcmf.add_edge(src, ue, 1, 0.0);
+        for e in 0..m {
+            let l = table.of(ue, e);
+            if l <= z {
+                let arc = mcmf.add_edge(ue, n + e, 1, l);
+                ue_arcs[ue].push((arc, e));
+            }
+        }
+    }
+    for e in 0..m {
+        mcmf.add_edge(n + e, snk, cap as i64, 0.0);
+    }
+    if mcmf.solve(src, snk) != n as i64 {
+        // flow_lower_bound proved z feasible; only a capacity/threshold
+        // inconsistency could land here.
+        return Err("min-cost flow could not place every UE".to_string());
+    }
+
+    let mut edge_of = vec![usize::MAX; n];
+    for ue in 0..n {
+        for &(arc, e) in &ue_arcs[ue] {
+            if mcmf.arc_flow(arc) > 0 {
+                edge_of[ue] = e;
+            }
+        }
+    }
+    let assoc = Association::new(edge_of, m);
+    assoc.validate(cap)?;
+    Ok(assoc)
+}
+
+// ---------------------------------------------------------------------
+// Min-cost max-flow: successive shortest paths, Dijkstra with Johnson
+// potentials. Deterministic: fixed arc order, heap ties broken by node.
+// ---------------------------------------------------------------------
+
+struct MinCostFlow {
+    to: Vec<usize>,
+    cap: Vec<i64>,
+    cost: Vec<f64>,
+    head: Vec<Vec<usize>>,
+    initial_cap: Vec<i64>,
+}
+
+#[derive(Clone, Copy)]
+struct HeapEntry {
+    dist: f64,
+    node: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapEntry {}
+impl Ord for HeapEntry {
+    // Reversed: BinaryHeap is a max-heap, we pop the smallest distance;
+    // equal distances pop in ascending node order.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .dist
+            .total_cmp(&self.dist)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl MinCostFlow {
+    fn new(nodes: usize) -> MinCostFlow {
+        MinCostFlow {
+            to: Vec::new(),
+            cap: Vec::new(),
+            cost: Vec::new(),
+            head: vec![Vec::new(); nodes],
+            initial_cap: Vec::new(),
+        }
+    }
+
+    /// Returns the arc index of the forward edge (reverse lives at ^ 1).
+    fn add_edge(&mut self, from: usize, to: usize, cap: i64, cost: f64) -> usize {
+        let idx = self.to.len();
+        self.to.push(to);
+        self.cap.push(cap);
+        self.cost.push(cost);
+        self.initial_cap.push(cap);
+        self.head[from].push(idx);
+        self.to.push(from);
+        self.cap.push(0);
+        self.cost.push(-cost);
+        self.initial_cap.push(0);
+        self.head[to].push(idx + 1);
+        idx
+    }
+
+    fn arc_flow(&self, arc: usize) -> i64 {
+        self.initial_cap[arc] - self.cap[arc]
+    }
+
+    /// Push flow until the sink is unreachable; returns the total flow.
+    fn solve(&mut self, src: usize, snk: usize) -> i64 {
+        let nodes = self.head.len();
+        let mut potential = vec![0.0f64; nodes];
+        let mut dist = vec![f64::INFINITY; nodes];
+        let mut prev_arc = vec![usize::MAX; nodes];
+        let mut total = 0i64;
+        loop {
+            dist.fill(f64::INFINITY);
+            prev_arc.fill(usize::MAX);
+            dist[src] = 0.0;
+            let mut heap = BinaryHeap::new();
+            heap.push(HeapEntry { dist: 0.0, node: src });
+            while let Some(HeapEntry { dist: d, node: v }) = heap.pop() {
+                if d > dist[v] {
+                    continue;
+                }
+                for &arc in &self.head[v] {
+                    if self.cap[arc] <= 0 {
+                        continue;
+                    }
+                    let u = self.to[arc];
+                    let nd = d + self.cost[arc] + potential[v] - potential[u];
+                    if nd < dist[u] {
+                        dist[u] = nd;
+                        prev_arc[u] = arc;
+                        heap.push(HeapEntry { dist: nd, node: u });
+                    }
+                }
+            }
+            if !dist[snk].is_finite() {
+                return total;
+            }
+            // Cap potentials at dist[snk] so nodes the search did not
+            // settle this round keep non-negative reduced costs.
+            let cut = dist[snk];
+            for (p, d) in potential.iter_mut().zip(&dist) {
+                *p += d.min(cut);
+            }
+            let mut push = i64::MAX;
+            let mut v = snk;
+            while v != src {
+                let arc = prev_arc[v];
+                push = push.min(self.cap[arc]);
+                v = self.to[arc ^ 1];
+            }
+            let mut v = snk;
+            while v != src {
+                let arc = prev_arc[v];
+                self.cap[arc] -= push;
+                self.cap[arc ^ 1] += push;
+                v = self.to[arc ^ 1];
+            }
+            total += push;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::{greedy, solve_exact_matching, time_minimized};
+    use crate::net::{Channel, SystemParams, Topology};
+
+    fn table(edges: usize, ues: usize, seed: u64) -> (Topology, Channel, LatencyTable) {
+        let t = Topology::sample(&SystemParams::default(), edges, ues, seed);
+        let ch = Channel::compute(&t.params, &t.ues, &t.edges);
+        let lt = LatencyTable::build(&t, &ch, 20.0);
+        (t, ch, lt)
+    }
+
+    #[test]
+    fn bound_equals_exact_matching_objective() {
+        for seed in 0..8 {
+            let (_t, _ch, lt) = table(4, 24, seed);
+            let exact = solve_exact_matching(&lt, 8).unwrap();
+            let bound = flow_lower_bound(&lt, 8).unwrap();
+            // Both are the same table entry: exact equality, no tolerance.
+            assert_eq!(
+                bound.to_bits(),
+                lt.max_latency(&exact).to_bits(),
+                "seed {seed}: bound {bound} vs exact {}",
+                lt.max_latency(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn bound_is_below_every_heuristic() {
+        for seed in 0..8 {
+            let (_t, ch, lt) = table(5, 40, 100 + seed);
+            let bound = flow_lower_bound(&lt, 10).unwrap();
+            for assoc in [greedy(&ch, 10).unwrap(), time_minimized(&ch, 10).unwrap()] {
+                let cert = Certificate::new(bound, lt.max_latency(&assoc));
+                assert!(cert.holds(), "seed {seed}: {cert:?}");
+                assert!(cert.gap >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_flow_achieves_the_bound() {
+        for seed in 0..5 {
+            let (_t, _ch, lt) = table(4, 20, 200 + seed);
+            let a = solve_flow(&lt, 6).unwrap();
+            a.validate(6).unwrap();
+            let cert = certify(&lt, 6, &a).unwrap();
+            assert_eq!(
+                cert.gap.to_bits(),
+                0.0f64.to_bits(),
+                "seed {seed}: flow assignment must meet its own bound, got {cert:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn solve_flow_minimizes_total_latency_among_optima() {
+        // On a cap-slack instance the min-cost refinement must not exceed
+        // the total latency of the exact matching solution.
+        for seed in 0..5 {
+            let (_t, _ch, lt) = table(3, 12, 300 + seed);
+            let flow = solve_flow(&lt, 6).unwrap();
+            let exact = solve_exact_matching(&lt, 6).unwrap();
+            let sum = |a: &Association| -> f64 {
+                a.edge_of
+                    .iter()
+                    .enumerate()
+                    .map(|(ue, &e)| lt.of(ue, e))
+                    .sum()
+            };
+            assert!(
+                sum(&flow) <= sum(&exact) + 1e-9,
+                "seed {seed}: flow total {} > exact total {}",
+                sum(&flow),
+                sum(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn bound_ignores_poisoned_columns() {
+        let (_t, _ch, mut lt) = table(3, 9, 41);
+        let baseline = {
+            let mut clean = lt.clone();
+            let m = clean.num_edges;
+            for ue in 0..clean.num_ues {
+                clean.latency_s[ue * m] = f64::INFINITY;
+            }
+            flow_lower_bound(&clean, 5).unwrap()
+        };
+        let m = lt.num_edges;
+        for ue in 0..lt.num_ues {
+            lt.latency_s[ue * m] = f64::INFINITY;
+        }
+        let bound = flow_lower_bound(&lt, 5).unwrap();
+        assert!(bound.is_finite());
+        assert_eq!(bound.to_bits(), baseline.to_bits());
+        // Cross-check against the fixed exact matching on the same table.
+        let exact = solve_exact_matching(&lt, 5).unwrap();
+        assert_eq!(bound.to_bits(), lt.max_latency(&exact).to_bits());
+    }
+
+    #[test]
+    fn degenerate_and_infeasible_tables_err() {
+        let (_t, _ch, mut lt) = table(2, 6, 43);
+        for z in lt.latency_s.iter_mut() {
+            *z = f64::NAN;
+        }
+        assert!(flow_lower_bound(&lt, 4).is_err());
+        let (_t, _ch, lt) = table(2, 10, 17);
+        assert!(flow_lower_bound(&lt, 4).is_err()); // 10 UEs > 2 x 4
+    }
+
+    #[test]
+    fn empty_world_is_a_zero_bound() {
+        let lt = LatencyTable {
+            num_ues: 0,
+            num_edges: 3,
+            latency_s: Vec::new(),
+        };
+        assert_eq!(flow_lower_bound(&lt, 2).unwrap(), 0.0);
+        let a = solve_flow(&lt, 2).unwrap();
+        assert_eq!(a.num_ues(), 0);
+    }
+
+    #[test]
+    fn bound_scales_past_the_matching_test_sizes() {
+        // Not a perf assertion (that lives in benches/assoc_gap.rs), just
+        // the aggregated path exercised well past the raw-Dinic shapes.
+        let (_t, _ch, lt) = table(8, 2000, 71);
+        let bound = flow_lower_bound(&lt, 300).unwrap();
+        assert!(bound.is_finite() && bound > 0.0);
+        let exact = solve_exact_matching(&lt, 300).unwrap();
+        assert_eq!(bound.to_bits(), lt.max_latency(&exact).to_bits());
+    }
+
+    #[test]
+    fn masks_span_multiple_words() {
+        // 70 edges forces two mask words; the bound must still agree with
+        // the exact matching solver.
+        let (_t, _ch, lt) = table(70, 140, 91);
+        let bound = flow_lower_bound(&lt, 2).unwrap();
+        let exact = solve_exact_matching(&lt, 2).unwrap();
+        assert_eq!(bound.to_bits(), lt.max_latency(&exact).to_bits());
+    }
+}

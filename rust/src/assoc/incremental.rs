@@ -417,7 +417,13 @@ fn edgewise_take(
 /// edges (outage mask) are poisoned to +∞ latency: the min-max threshold
 /// search and the B&B bound both refuse an ∞ link whenever a finite
 /// assignment exists, which the masked feasibility check guarantees.
-fn subset_latency_table(ctx: &AssocCtx, a: f64, ids: &[usize]) -> Result<LatencyTable, String> {
+/// Crate-visible: the scenario certify hook builds the same table for the
+/// flow lower bound so bound and achieved share one latency definition.
+pub(crate) fn subset_latency_table(
+    ctx: &AssocCtx,
+    a: f64,
+    ids: &[usize],
+) -> Result<LatencyTable, String> {
     let topo = ctx
         .topo
         .ok_or_else(|| "latency-keyed policy needs AssocCtx::topo".to_string())?;

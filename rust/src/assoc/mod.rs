@@ -9,6 +9,12 @@
 //!   branch-and-bound solver (the baseline the paper calls impractical)
 //!   plus a polynomial threshold-matching solver used to cross-check it.
 //!
+//! [`flow`] adds the optimality-certificate layer on top: an
+//! LP-relaxation lower bound on the min-max objective that scales to
+//! 100k+-UE worlds ([`flow_lower_bound`]), a min-cost-flow assignment
+//! ([`solve_flow`]) and the [`Certificate`] type ([`certify`]) that any
+//! strategy's result can be checked against.
+//!
 //! All strategies produce an [`Association`] that is validated against the
 //! paper's constraints (3)/(13c)–(13e).
 //!
@@ -22,6 +28,7 @@
 //! argument).
 
 pub mod bnb;
+pub mod flow;
 pub mod greedy;
 pub mod incremental;
 pub mod proposed;
@@ -30,6 +37,7 @@ pub mod random;
 use crate::net::{Channel, Topology};
 
 pub use bnb::{solve_exact_bnb, solve_exact_matching};
+pub use flow::{certify, flow_lower_bound, solve_flow, Certificate};
 pub use greedy::greedy;
 pub use incremental::{
     cold_reference_map, cold_reference_map_masked, policy_for, AssocCtx, AssocPolicy, BnbPolicy,

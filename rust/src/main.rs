@@ -149,6 +149,10 @@ SCENARIO OPTIONS
   --intra-threads N    maintenance threads / engine shards inside one
                        instance (0 = one per core; results are bitwise-
                        identical for any value)          (default 1)
+  --certify            attach a min-cost-flow optimality certificate to
+                       each outcome (assoc_lower_bound / assoc_gap);
+                       reporting only — trajectories are bitwise-identical
+                       with it on or off                 (default off)
   --report FILE        JSON report path (default results/scenario_report.json)
   --trace FILE         write a JSONL trace event stream (per-epoch phase
                        spans + engine counters; content is seed-deterministic)

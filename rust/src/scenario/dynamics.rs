@@ -67,6 +67,16 @@ pub struct ScenarioOutcome {
     /// Last epoch's max one-edge-round latency max_m τ_m(a) (seconds) —
     /// the Fig. 5 association objective.
     pub tau_max_s: f64,
+    /// Flow-based LP lower bound on the last epoch's min-max association
+    /// latency (seconds), under `[optimizer] certify = true`; 0.0 when
+    /// certification is off or the epoch had no active UEs. Deterministic
+    /// (part of the bitwise contract).
+    pub assoc_lower_bound: f64,
+    /// `achieved − assoc_lower_bound` for the last epoch's association,
+    /// where achieved is the max link latency the map actually incurs on
+    /// the same table; ≥ 0 by construction, 0.0 when certification is
+    /// off. Deterministic (part of the bitwise contract).
+    pub assoc_gap: f64,
     /// UEs whose serving edge changed at an epoch boundary.
     pub handovers: u64,
     /// Churn arrivals over the run.
@@ -334,6 +344,52 @@ fn associate_active(
     Ok(edge_of_global)
 }
 
+/// Certify one epoch's association: the flow-based LP lower bound on the
+/// min-max link latency over the active UEs (down edges masked) next to
+/// the max latency the current map actually achieves on the *same* table
+/// ([`assoc::incremental::subset_latency_table`], bitwise-equal to the
+/// scoring core's expressions). Returns `(lower_bound, gap)`; `(0.0,
+/// 0.0)` for empty worlds or tables the bound cannot certify (a reporting
+/// knob must never fail the run). Consumes no RNG.
+fn certify_epoch(
+    topo: &Topology,
+    channel: &Channel,
+    active: &[bool],
+    edge_up: &[bool],
+    edge_of: &[Option<usize>],
+    cap: usize,
+    a: f64,
+) -> (f64, f64) {
+    let ids: Vec<usize> = (0..active.len()).filter(|&i| active[i]).collect();
+    if ids.is_empty() {
+        return (0.0, 0.0);
+    }
+    let all_up = edge_up.iter().all(|&u| u);
+    let ctx = assoc::AssocCtx {
+        channel,
+        topo: Some(topo),
+        edge_up: if all_up { None } else { Some(edge_up) },
+    };
+    let table = match assoc::incremental::subset_latency_table(&ctx, a, &ids) {
+        Ok(t) => t,
+        Err(_) => return (0.0, 0.0),
+    };
+    let lower = match assoc::flow_lower_bound(&table, cap) {
+        Ok(z) => z,
+        Err(_) => return (0.0, 0.0),
+    };
+    let mut achieved = 0.0f64;
+    for (row, &ue) in ids.iter().enumerate() {
+        if let Some(e) = edge_of[ue] {
+            let l = table.of(row, e);
+            if l > achieved {
+                achieved = l;
+            }
+        }
+    }
+    (lower, achieved - lower)
+}
+
 /// One epoch's Markov outage transition: each up edge fails with
 /// `fail_prob` — unless losing it would push the up capacity below the
 /// active fleet (the feasibility veto; the probability draw still
@@ -579,6 +635,8 @@ pub fn run_instance_traced(
         b: 0,
         round_time_s: 0.0,
         tau_max_s: 0.0,
+        assoc_lower_bound: 0.0,
+        assoc_gap: 0.0,
         handovers: 0,
         arrivals: 0,
         departures: 0,
@@ -837,6 +895,15 @@ pub fn run_instance_traced(
         out.b = b;
         out.round_time_s = inst.round_time(a as f64, b as f64);
         out.tau_max_s = inst.tau_max(a as f64);
+        if spec.certify {
+            // Reporting only: reads the epoch's world and map, consumes
+            // no RNG, mutates nothing the trajectory depends on — certify
+            // on/off runs stay bitwise-identical.
+            let (lb, gap) =
+                certify_epoch(&topo, &channel, &active, &edge_up, &edge_of, cap, a as f64);
+            out.assoc_lower_bound = lb;
+            out.assoc_gap = gap;
+        }
         // Deterministic per-epoch summary for streaming consumers (the
         // serve path): this epoch's (a, b), the running makespan, and its
         // own upload participation share.

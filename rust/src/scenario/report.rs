@@ -105,6 +105,12 @@ pub struct BatchReport {
     pub outages: SummaryStat,
     /// Per-instance Σ over epochs of down-edge counts (outage exposure).
     pub down_edge_epochs: SummaryStat,
+    /// Last-epoch flow lower bound on the min-max association latency
+    /// (problem (39)); all-zero unless the spec ran with `certify = true`.
+    pub assoc_lower_bound: SummaryStat,
+    /// Last-epoch certificate gap `achieved − lower_bound`; all-zero
+    /// unless `certify = true`.
+    pub assoc_gap: SummaryStat,
     /// Per-phase cumulative wall time (seconds), one entry per
     /// [`Phase`] in `Phase::ALL` order (name, distribution).
     pub phase_wall: Vec<(&'static str, SummaryStat)>,
@@ -145,6 +151,8 @@ impl BatchReport {
             late_uploads: column(outcomes, |o| o.late_uploads as f64),
             outages: column(outcomes, |o| o.outages as f64),
             down_edge_epochs: column(outcomes, |o| o.down_edge_epochs as f64),
+            assoc_lower_bound: column(outcomes, |o| o.assoc_lower_bound),
+            assoc_gap: column(outcomes, |o| o.assoc_gap),
             phase_wall: Phase::ALL
                 .iter()
                 .map(|&p| (p.name(), column(outcomes, |o| o.phase.wall(p))))
@@ -178,6 +186,8 @@ impl BatchReport {
             ("late_uploads", self.late_uploads.to_json()),
             ("outages", self.outages.to_json()),
             ("down_edge_epochs", self.down_edge_epochs.to_json()),
+            ("assoc_lower_bound", self.assoc_lower_bound.to_json()),
+            ("assoc_gap", self.assoc_gap.to_json()),
         ];
         fields.push((
             "phases",
@@ -283,6 +293,10 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
     ];
     columns.extend(Phase::ALL.iter().map(|p| p.col()));
     columns.extend(Counter::ALL.iter().map(|c| c.col()));
+    // Certificate columns last so every earlier column keeps its
+    // position from pre-certificate CSVs.
+    columns.push("assoc_lower_bound");
+    columns.push("assoc_gap");
     let series = rec.series("scenario_instances", &columns);
     for o in outcomes {
         let mut row = vec![
@@ -313,6 +327,8 @@ pub fn record_batch(outcomes: &[ScenarioOutcome], rec: &mut Recorder) {
         ];
         row.extend(Phase::ALL.iter().map(|&p| o.phase.wall(p)));
         row.extend(Counter::ALL.iter().map(|&c| o.phase.count(c) as f64));
+        row.push(o.assoc_lower_bound);
+        row.push(o.assoc_gap);
         series.push(row);
     }
 }
@@ -366,6 +382,8 @@ mod tests {
             b: 3,
             round_time_s: makespan / rounds.max(1) as f64,
             tau_max_s: 0.1,
+            assoc_lower_bound: 0.0,
+            assoc_gap: 0.0,
             handovers: 0,
             arrivals: 0,
             departures: 0,

@@ -260,6 +260,13 @@ pub struct ScenarioSpec {
     /// any value yields bitwise-identical results (a speed knob, not a
     /// semantics knob — property-tested in `tests/parallel.rs`).
     pub intra_threads: usize,
+    /// Emit per-epoch association optimality certificates: the flow-based
+    /// LP lower bound and gap next to the achieved max latency
+    /// (`assoc_lower_bound` / `assoc_gap` report columns). A reporting
+    /// knob, never a semantics knob — trajectories are bitwise-identical
+    /// either way and no RNG is consumed (off by default: the bound costs
+    /// a re-solve-scale pass per epoch).
+    pub certify: bool,
     pub failure: FailureSpec,
     /// Heterogeneous device classes (empty = the paper's uniform fleet).
     pub devices: DeviceClassSpec,
@@ -280,6 +287,7 @@ impl Default for ScenarioSpec {
             assoc_resolve: ResolveMode::default(),
             assoc_hysteresis: 0.25,
             intra_threads: 1,
+            certify: false,
             failure: FailureSpec::default(),
             devices: DeviceClassSpec::default(),
             outage: OutageSpec::default(),
@@ -351,6 +359,13 @@ impl ScenarioSpec {
     /// (0 = one per core; bitwise-identical results for any value).
     pub fn intra_threads(mut self, threads: usize) -> Self {
         self.intra_threads = threads;
+        self
+    }
+
+    /// Per-epoch association optimality certificates (reporting only;
+    /// off by default).
+    pub fn certify(mut self, on: bool) -> Self {
+        self.certify = on;
         self
     }
 
@@ -562,6 +577,9 @@ impl ScenarioSpec {
         if let Some(v) = doc.i64("optimizer", "intra_threads") {
             self.intra_threads = v.max(0) as usize;
         }
+        if let Some(v) = doc.bool("optimizer", "certify") {
+            self.certify = v;
+        }
         // [batch]
         if let Some(v) = doc.i64("batch", "instances") {
             self.batch.instances = v.max(1) as usize;
@@ -628,6 +646,14 @@ impl ScenarioSpec {
         }
         if let Some(v) = args.get::<usize>("intra-threads")? {
             self.intra_threads = v;
+        }
+        // Bare `--certify` turns the knob on; valued forms (`--certify
+        // false`, `HFL_CERTIFY=true` — env vars always carry a value)
+        // take the parsed bool.
+        if args.flag("certify") {
+            self.certify = true;
+        } else if let Some(v) = args.get::<bool>("certify")? {
+            self.certify = v;
         }
         if let Some(v) = args.get::<usize>("instances")? {
             self.batch.instances = v.max(1);
@@ -764,8 +790,9 @@ impl ScenarioSpec {
         } else {
             String::new()
         };
+        let certify = if self.certify { ", certify" } else { "" };
         format!(
-            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}{intra}, \
+            "{} edges, {} UEs, eps={}, assoc={}, opt={}, resolve={}, assoc_resolve={}{intra}{certify}, \
              jitter={}, dropout={}{deadline}{outage}, devices={devices}, {}",
             self.base.num_edges,
             self.base.num_ues,
@@ -801,6 +828,7 @@ impl ScenarioSpec {
         line("optimizer.assoc_resolve", self.assoc_resolve.name().to_string());
         line("optimizer.assoc_hysteresis", self.assoc_hysteresis.to_string());
         line("optimizer.intra_threads", self.intra_threads.to_string());
+        line("optimizer.certify", self.certify.to_string());
         line("failure.jitter_sigma", self.failure.jitter_sigma.to_string());
         line("failure.dropout_prob", self.failure.dropout_prob.to_string());
         line("failure.deadline_s", self.failure.deadline_s.to_string());
@@ -1087,6 +1115,44 @@ intra_threads = 4
         // Builder + validation: any usize is valid (0 = auto).
         ScenarioSpec::new().intra_threads(0).validate().unwrap();
         ScenarioSpec::new().intra_threads(64).validate().unwrap();
+    }
+
+    #[test]
+    fn certify_knob_toml_cli_builder() {
+        // Default: off, and silent in the summary.
+        let d = ScenarioSpec::default();
+        assert!(!d.certify);
+        assert!(!d.summary().contains("certify"), "default stays silent");
+        let certify_line = d
+            .describe()
+            .lines()
+            .find(|l| l.contains("optimizer.certify"))
+            .expect("describe() must list the certify knob")
+            .to_string();
+        assert!(certify_line.ends_with("= false"));
+        // TOML.
+        let spec = ScenarioSpec::parse_toml(
+            r#"
+[optimizer]
+certify = true
+"#,
+        )
+        .unwrap();
+        assert!(spec.certify);
+        // CLI: bare flag turns it on, valued form can turn it back off
+        // (the env layer always arrives valued: HFL_CERTIFY=true).
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args("scenario --certify")).unwrap();
+        assert!(spec.certify);
+        assert!(spec.summary().contains("certify"));
+        let mut spec = ScenarioSpec::new().certify(true);
+        spec.apply_args(&args("scenario --certify false")).unwrap();
+        assert!(!spec.certify);
+        let mut spec = ScenarioSpec::default();
+        spec.apply_args(&args("scenario --certify true")).unwrap();
+        assert!(spec.certify);
+        // Builder + validation: a reporting knob, always valid.
+        ScenarioSpec::new().certify(true).validate().unwrap();
     }
 
     #[test]

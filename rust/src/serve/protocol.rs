@@ -229,6 +229,8 @@ pub fn outcome_json(o: &ScenarioOutcome) -> Json {
         ("resolves", Json::num(o.resolves as f64)),
         ("cold_resolves", Json::num(o.cold_resolves as f64)),
         ("reassociations", Json::num(o.reassociations as f64)),
+        ("assoc_lower_bound", Json::num(o.assoc_lower_bound)),
+        ("assoc_gap", Json::num(o.assoc_gap)),
     ])
 }
 
@@ -349,5 +351,57 @@ mod tests {
         let line = outcome_line(7, &o);
         let stripped = crate::scenario::strip_measured(&line).unwrap();
         assert_eq!(stripped, line, "outcome frames survive strip_measured unchanged");
+    }
+
+    #[test]
+    fn outcome_json_carries_certificate_fields() {
+        let o = ScenarioOutcome {
+            assoc_lower_bound: 0.125,
+            assoc_gap: 0.0625,
+            ..Default::default()
+        };
+        let j = outcome_json(&o);
+        assert_eq!(j.get("assoc_lower_bound").and_then(Json::as_f64), Some(0.125));
+        assert_eq!(j.get("assoc_gap").and_then(Json::as_f64), Some(0.0625));
+        // Certificates are deterministic, not measured: they survive the
+        // wire-vs-batch strip intact.
+        let line = outcome_line(1, &o);
+        assert_eq!(crate::scenario::strip_measured(&line).unwrap(), line);
+    }
+
+    #[test]
+    fn non_bmp_strings_round_trip_through_submit_frames() {
+        // Astral-plane text (emoji, CJK extension B) in every string
+        // layer of a submission: raw UTF-8 in the frame must survive
+        // parse → re-serialize → parse, and escaped surrogate-pair input
+        // must decode to the same request.
+        let req = JobRequest {
+            spec_toml: Some("[run]\n# 😀 smoke \u{2603} \u{10348}\n".to_string()),
+            env: vec!["--label".into(), "𠜎𠜱".into()],
+            args: vec!["--note".into(), "done 🏁".into()],
+            stream: false,
+        };
+        let line = submit_line(&req);
+        match parse_client_line(&line).unwrap() {
+            ClientCmd::Submit(parsed) => assert_eq!(*parsed, req),
+            other => panic!("parsed {other:?}"),
+        }
+        // Canonical fixed point with the raw UTF-8 intact.
+        assert_eq!(Json::parse(&line).unwrap().to_string(), line);
+
+        // A frame carrying the surrogate-pair escape form parses to the
+        // same text as raw UTF-8 (satellite: the codec's non-BMP
+        // decoding).
+        let escaped =
+            "{\"cmd\":\"submit\",\"spec_toml\":\"\\ud83d\\ude00\",\"stream\":true}";
+        match parse_client_line(escaped).unwrap() {
+            ClientCmd::Submit(parsed) => {
+                assert_eq!(parsed.spec_toml.as_deref(), Some("\u{1F600}"))
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // Lone surrogates must be rejected at the frame boundary, not
+        // smuggled into a spec.
+        assert!(parse_client_line(r#"{"cmd":"submit","spec_toml":"\ud83d"}"#).is_err());
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Used to read `artifacts/meta.json` (written by the python AOT path) and
 //! to emit machine-readable experiment/bench reports. Supports the full
-//! JSON value grammar except `\u` surrogate pairs beyond the BMP.
+//! JSON value grammar, including `\u` surrogate pairs beyond the BMP;
+//! lone surrogates are a parse error (they have no UTF-8 encoding, so
+//! accepting them would break Display round-trips).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -230,15 +232,24 @@ impl<'a> Parser<'a> {
                     Some(b'r') => out.push('\r'),
                     Some(b't') => out.push('\t'),
                     Some(b'u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let d = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                            code = code * 16
-                                + (d as char)
-                                    .to_digit(16)
-                                    .ok_or_else(|| self.err("bad hex digit"))?;
-                        }
-                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        let code = match self.hex_quad()? {
+                            // High surrogate: must be immediately followed by a
+                            // `\uXXXX` low surrogate; combine into one scalar.
+                            hi @ 0xD800..=0xDBFF => {
+                                if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                                match self.hex_quad()? {
+                                    lo @ 0xDC00..=0xDFFF => {
+                                        0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                    }
+                                    _ => return Err(self.err("invalid low surrogate")),
+                                }
+                            }
+                            0xDC00..=0xDFFF => return Err(self.err("lone low surrogate")),
+                            code => code,
+                        };
+                        out.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
                     }
                     _ => return Err(self.err("bad escape")),
                 },
@@ -259,6 +270,19 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape (the leading `\u` already consumed).
+    fn hex_quad(&mut self) -> Result<u32, JsonError> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let d = self.bump().ok_or_else(|| self.err("bad \\u"))?;
+            code = code * 16
+                + (d as char)
+                    .to_digit(16)
+                    .ok_or_else(|| self.err("bad hex digit"))?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -378,5 +402,50 @@ mod tests {
     fn utf8_passthrough() {
         let v = Json::parse("\"héllo→\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo→"));
+    }
+
+    #[test]
+    fn surrogate_pair_decodes_non_bmp() {
+        // U+1F600 GRINNING FACE as an escaped surrogate pair.
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("😀".into())
+        );
+        // Mixed escaped + literal content around the pair.
+        assert_eq!(
+            Json::parse("\"a\\uD83D\\uDE00b\"").unwrap(),
+            Json::Str("a😀b".into())
+        );
+        // U+10000, the first supplementary-plane scalar (boundary case).
+        assert_eq!(
+            Json::parse("\"\\ud800\\udc00\"").unwrap(),
+            Json::Str("\u{10000}".into())
+        );
+    }
+
+    #[test]
+    fn lone_surrogates_are_errors() {
+        // Lone high surrogate at end of string.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        // High surrogate followed by a non-escape character.
+        assert!(Json::parse("\"\\ud83dx\"").is_err());
+        // High surrogate followed by a non-\u escape.
+        assert!(Json::parse("\"\\ud83d\\n\"").is_err());
+        // High surrogate followed by another high surrogate.
+        assert!(Json::parse("\"\\ud83d\\ud83d\"").is_err());
+        // Lone low surrogate.
+        assert!(Json::parse("\"\\ude00\"").is_err());
+    }
+
+    #[test]
+    fn non_bmp_roundtrip_through_display() {
+        // Parsed escape form and raw UTF-8 form both emit raw UTF-8 and
+        // re-parse to the same value.
+        let escaped = Json::parse("\"\\ud83d\\ude00 done\"").unwrap();
+        let raw = Json::parse("\"😀 done\"").unwrap();
+        assert_eq!(escaped, raw);
+        let emitted = escaped.to_string();
+        assert_eq!(emitted, "\"😀 done\"");
+        assert_eq!(Json::parse(&emitted).unwrap(), escaped);
     }
 }

@@ -10,7 +10,7 @@ use hfl::assoc::{self, LatencyTable};
 use hfl::data::synthetic::{generate_split, SyntheticConfig};
 use hfl::data::{partition_dirichlet, partition_iid};
 use hfl::delay::{cloud_rounds, DelayInstance, EdgeDelays};
-use hfl::net::{Channel, SystemParams, Topology};
+use hfl::net::{Channel, DeviceClassSpec, SystemParams, Topology};
 use hfl::opt::{solve_continuous, solve_integer, SolveOptions, SubgradientSolver};
 use hfl::sim::{simulate, SimConfig};
 use hfl::util::proptest::check;
@@ -105,6 +105,94 @@ fn prop_bnb_agrees_with_matching_on_small_instances() {
         let mat = assoc::solve_exact_matching(&table, cap).unwrap();
         let (a, b) = (table.max_latency(&bnb), table.max_latency(&mat));
         assert!((a - b).abs() < 1e-9, "bnb {a} vs matching {b}");
+    });
+}
+
+#[test]
+fn prop_flow_bound_certifies_every_policy() {
+    // The tentpole's soundness property: on random worlds — heterogeneous
+    // fleets and edge outages included — the flow lower bound sits at or
+    // below the max-latency every policy achieves.
+    check("flow bound <= achieved", 48, |rng| {
+        let (topo, channel, cap) = {
+            let edges = rng.int_range(2, 6) as usize;
+            let cap_each = rng.int_range(4, 25) as usize;
+            let max_ues = (edges * cap_each) as i64;
+            let ues = rng.int_range(edges as i64, (max_ues * 4 / 5).max(edges as i64)) as usize;
+            let mut params = SystemParams::default();
+            params.ue_bandwidth_hz = params.edge_bandwidth_hz / cap_each as f64;
+            // Half the worlds get an extreme device spread (flagship +
+            // 1000x-slower IoT): the bound must not care where the
+            // latency mass comes from.
+            let topo = if rng.next_u64() % 2 == 0 {
+                let devices = DeviceClassSpec::new()
+                    .class("flagship", 1.0, 1.0, 1.0, 1.0)
+                    .class("iot", 1.0, 0.001, 0.5, 2.0);
+                Topology::sample_with_devices(&params, &devices, edges, ues, rng.next_u64())
+            } else {
+                Topology::sample(&params, edges, ues, rng.next_u64())
+            };
+            let channel = Channel::compute(&topo.params, &topo.ues, &topo.edges);
+            (topo, channel, cap_each)
+        };
+        let (n, m) = (topo.num_ues(), topo.num_edges());
+        let a = rng.range(1.0, 50.0);
+        let mut table = LatencyTable::build(&topo, &channel, a);
+        // Sometimes knock one edge out, the way the scenario's down-edge
+        // masking poisons its column to +inf — feasibility permitting.
+        if n <= (m - 1) * cap && rng.next_u64() % 2 == 0 {
+            let down = rng.below(m as u64) as usize;
+            for ue in 0..n {
+                table.latency_s[ue * m + down] = f64::INFINITY;
+            }
+        }
+        let bound = assoc::flow_lower_bound(&table, cap).expect("feasible bound");
+        assert!(bound.is_finite());
+        for assoc_ in [
+            assoc::time_minimized(&channel, cap).unwrap(),
+            assoc::greedy(&channel, cap).unwrap(),
+            assoc::random(n, m, cap, rng).unwrap(),
+            assoc::solve_exact_matching(&table, cap).unwrap(),
+            assoc::solve_flow(&table, cap).unwrap(),
+        ] {
+            // Heuristics solved the un-poisoned channel, so under an
+            // outage their achieved latency may be +inf — the bound must
+            // hold (and the gap stay non-negative) regardless.
+            let cert = assoc::certify(&table, cap, &assoc_).expect("certificate");
+            assert!(
+                cert.holds(),
+                "bound {} above achieved {}",
+                cert.lower_bound,
+                cert.achieved
+            );
+            assert!(cert.gap >= 0.0, "negative gap {}", cert.gap);
+            assert_eq!(cert.lower_bound.to_bits(), bound.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_flow_bound_equals_exact_matching() {
+    // The tentpole's tightness property: total unimodularity makes the
+    // LP bound *exact*, so where the threshold-matching solver is
+    // tractable the two must agree bitwise — both land on the same
+    // latency-table entry, not merely nearby values.
+    check("flow bound == exact objective", 48, |rng| {
+        let (topo, channel, cap) = random_world(rng);
+        let a = rng.range(1.0, 50.0);
+        let table = LatencyTable::build(&topo, &channel, a);
+        let bound = assoc::flow_lower_bound(&table, cap).unwrap();
+        let exact = assoc::solve_exact_matching(&table, cap).unwrap();
+        assert_eq!(
+            bound.to_bits(),
+            table.max_latency(&exact).to_bits(),
+            "bound {bound} vs exact {}",
+            table.max_latency(&exact)
+        );
+        // And the flow solver itself closes the gap exactly.
+        let flow = assoc::solve_flow(&table, cap).unwrap();
+        flow.validate(cap).unwrap();
+        assert_eq!(table.max_latency(&flow).to_bits(), bound.to_bits());
     });
 }
 

@@ -165,6 +165,50 @@ fn assert_outcomes_bitwise_equal(a: &[ScenarioOutcome], b: &[ScenarioOutcome]) {
 }
 
 #[test]
+fn certify_is_a_pure_reporting_knob() {
+    // `certify = true` attaches the flow-bound certificate without
+    // perturbing anything else: every trajectory field is
+    // bitwise-identical to the certify-off run (the knob consumes no
+    // RNG), and the certificate itself is sound on every instance of a
+    // dynamic world with churn, mobility AND outages in play.
+    let spec = dynamic_spec().outage(0.2, 0.5).instances(8);
+    let off = run_batch(&spec.clone()).unwrap();
+    let on = run_batch(&spec.clone().certify(true)).unwrap();
+    // The helper compares every field except the certificate columns.
+    assert_outcomes_bitwise_equal(&off.outcomes, &on.outcomes);
+    for o in &off.outcomes {
+        assert_eq!(o.assoc_lower_bound, 0.0, "certify off must report 0.0");
+        assert_eq!(o.assoc_gap, 0.0);
+    }
+    for o in &on.outcomes {
+        assert!(
+            o.assoc_lower_bound.is_finite() && o.assoc_lower_bound >= 0.0,
+            "instance {}: bound {}",
+            o.instance,
+            o.assoc_lower_bound
+        );
+        assert!(
+            o.assoc_gap >= 0.0,
+            "instance {}: negative gap {} (bound above achieved)",
+            o.instance,
+            o.assoc_gap
+        );
+    }
+    // Populated worlds certify non-trivially (a zero bound would mean
+    // every epoch ended empty or uncertifiable).
+    assert!(
+        on.outcomes.iter().any(|o| o.assoc_lower_bound > 0.0),
+        "at least one instance must carry a positive bound"
+    );
+    // And the batch report surfaces the new columns.
+    let report = BatchReport::from_outcomes(&on.outcomes);
+    assert!(report.assoc_lower_bound.max > 0.0);
+    assert!(report.assoc_gap.min >= 0.0);
+    let json = report.to_json(None).to_string();
+    assert!(json.contains("\"assoc_lower_bound\"") && json.contains("\"assoc_gap\""));
+}
+
+#[test]
 fn runner_is_bitwise_deterministic_across_shard_counts() {
     let spec = dynamic_spec().instances(12);
     let one = run_batch(&spec.clone().shards(1)).unwrap();
